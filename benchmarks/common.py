@@ -1,0 +1,23 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Callable
+
+
+def time_call(fn: Callable, *, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

@@ -1,0 +1,55 @@
+"""Fig. 3: decision-boundary / stability comparison on two semicircles.
+
+Trains the same 3-layer circuit with (a) linear neurons (LogicNets),
+(b) degree-2 polynomial neurons (PolyLUT), (c) 2-layer sub-networks
+(NeuraLUT, L=2 S=0 as in the paper's figure) across seeds and reports
+accuracy mean/min — the paper's observation is NeuraLUT's *consistency*
+(PolyLUT sometimes lands on poor solutions).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.nl_config import NeuraLUTConfig
+from repro.core.train import train_neuralut
+from repro.data import two_semicircles
+
+SEEDS = (0, 1, 2)
+
+
+def _cfg(kind: str) -> NeuraLUTConfig:
+    return NeuraLUTConfig(
+        name=f"fig3-{kind}", in_features=2, layer_widths=(8, 8, 2),
+        num_classes=2, beta=4, fan_in=2, kind=kind, depth=2, width=8,
+        skip=0, degree=2)
+
+
+def run(epochs: int = 20) -> None:
+    xtr, ytr = two_semicircles(2000, seed=100)
+    xte, yte = two_semicircles(600, seed=101)
+    summary = {}
+    for kind in ("linear", "poly", "subnet"):
+        accs = []
+        t0 = time.time()
+        for seed in SEEDS:
+            _, _, hist = train_neuralut(_cfg(kind), xtr, ytr, xte, yte,
+                                        epochs=epochs, batch=128, lr=5e-3,
+                                        seed=seed)
+            accs.append(hist["test_acc_q"][-1])
+        dt = (time.time() - t0) / len(SEEDS)
+        summary[kind] = accs
+        emit(f"fig3/{kind}", dt * 1e6,
+             f"acc_mean={np.mean(accs):.4f};acc_min={np.min(accs):.4f};"
+             f"acc_max={np.max(accs):.4f}")
+    # the paper's qualitative claims
+    emit("fig3/claim_neuralut_beats_linear", 0.0,
+         f"{np.mean(summary['subnet']) > np.mean(summary['linear'])}")
+    emit("fig3/claim_neuralut_worstcase_ge_poly", 0.0,
+         f"{np.min(summary['subnet']) >= np.min(summary['poly']) - 0.02}")
+
+
+if __name__ == "__main__":
+    run()

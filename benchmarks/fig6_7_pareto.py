@@ -1,0 +1,75 @@
+"""Figs. 6-7: latency / area vs test-error Pareto frontiers.
+
+Trains a sweep of circuit sizes in the LogicNets setting (N=1,L=1,S=0) and
+the NeuraLUT setting (N=16,L=4,S=2), evaluates accuracy on synthetic MNIST
+(pooled), and derives latency/area from the cost model.  The reproduction
+claim: at matched accuracy NeuraLUT needs fewer circuit layers => lower
+latency and smaller area-delay product.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import cost_model as CM
+from repro.core.nl_config import NeuraLUTConfig
+from repro.core.train import train_neuralut
+from repro.data import mnist_synthetic
+from benchmarks.fig5_ablation import _pool
+
+# (widths, fan_in) sweep: NeuraLUT uses shallower circuits
+SWEEP = {
+    "logicnets": [((128, 64, 32, 10), 6), ((64, 32, 32, 10), 6),
+                  ((48, 24, 10), 6)],
+    "neuralut": [((64, 32, 10), 6), ((48, 10), 6), ((32, 10), 6)],
+}
+
+
+def _cfg(kind: str, widths, fan_in) -> NeuraLUTConfig:
+    if kind == "logicnets":
+        return NeuraLUTConfig(name=f"p-{kind}-{len(widths)}",
+                              in_features=196, layer_widths=widths,
+                              num_classes=10, beta=2, fan_in=fan_in,
+                              kind="linear", depth=1, width=1, skip=0)
+    return NeuraLUTConfig(name=f"p-{kind}-{len(widths)}", in_features=196,
+                          layer_widths=widths, num_classes=10, beta=2,
+                          fan_in=fan_in, kind="subnet", depth=4, width=16,
+                          skip=2)
+
+
+def run(epochs: int = 10, n_train: int = 6000) -> None:
+    xtr, ytr = mnist_synthetic(n_train, seed=0)
+    xte, yte = mnist_synthetic(1500, seed=1)
+    xtr, xte = _pool(xtr), _pool(xte)
+
+    frontier = {}
+    for kind, sweeps in SWEEP.items():
+        pts = []
+        for widths, fan_in in sweeps:
+            cfg = _cfg(kind, widths, fan_in)
+            t0 = time.time()
+            _, _, hist = train_neuralut(cfg, xtr, ytr, xte, yte,
+                                        epochs=epochs, batch=256, lr=3e-3)
+            est = CM.estimate(cfg)
+            err = 1.0 - hist["test_acc_q"][-1]
+            pts.append((err, est.latency_ns, est.luts, est.area_delay))
+            emit(f"fig6_7/{kind}_{'x'.join(map(str, widths))}",
+                 (time.time() - t0) * 1e6,
+                 f"err={err:.4f};latency_ns={est.latency_ns:.1f};"
+                 f"luts={est.luts:.0f};adp={est.area_delay:.2e}")
+        frontier[kind] = pts
+
+    # claim: best NeuraLUT point dominates comparable LogicNets point on
+    # latency at comparable-or-better error
+    ln_best = min(frontier["logicnets"], key=lambda p: p[0])
+    nl_best = min(frontier["neuralut"], key=lambda p: p[0])
+    emit("fig6_7/claim_latency_reduction", 0.0,
+         f"neuralut_lat={nl_best[1]:.1f}ns_err={nl_best[0]:.3f};"
+         f"logicnets_lat={ln_best[1]:.1f}ns_err={ln_best[0]:.3f};"
+         f"speedup={ln_best[1]/nl_best[1]:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""LM substrate step benchmark (reduced configs, CPU wall time): train-step
+and decode-step us/call for representative architectures."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.config import ShapeConfig, TrainConfig, get_config
+from repro.models import api
+from repro.optim.adamw import adamw_init
+from repro.train.step import make_serve_step, make_train_step
+
+ARCHS = ("llama3-8b", "deepseek-v2-lite-16b", "jamba-v0.1-52b", "xlstm-350m")
+
+
+def run() -> None:
+    for arch in ARCHS:
+        cfg = get_config(arch, reduced=True)
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        shape = ShapeConfig("b", "train", 64, 4)
+        batch = api.make_batch(cfg, shape, jax.random.PRNGKey(1))
+        batch = jax.tree.map(lambda x: x % cfg.vocab_size
+                             if x.dtype == jnp.int32 else x, batch)
+        step = jax.jit(make_train_step(cfg, TrainConfig(), q_chunk=32))
+        opt = adamw_init(params)
+
+        def train_once():
+            p2, o2, m = step(params, opt, batch)
+            jax.block_until_ready(m["loss"])
+
+        us = time_call(train_once, warmup=2, iters=5)
+        toks = shape.global_batch * shape.seq_len
+        emit(f"lm_step/train_{arch}", us, f"tok_per_s={toks/us*1e6:.0f}")
+
+        sspec = api.decode_state_spec(cfg, 4, 64)
+        state = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sspec,
+                             is_leaf=lambda x: isinstance(
+                                 x, jax.ShapeDtypeStruct))
+        state["pos"] = jnp.int32(8)
+        dstep = jax.jit(make_serve_step(cfg))
+        tok = jnp.ones((4, 1), jnp.int32)
+
+        def decode_once():
+            logits, _ = dstep(params, state, tok)
+            jax.block_until_ready(logits)
+
+        us = time_call(decode_once, warmup=2, iters=5)
+        emit(f"lm_step/decode_{arch}", us, f"tok_per_s={4/us*1e6:.0f}")
+
+
+if __name__ == "__main__":
+    run()

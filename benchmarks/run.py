@@ -1,0 +1,59 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one module per paper table/figure + kernel/LM benches.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+
+Emits CSV lines ``name,us_per_call,derived`` (see benchmarks/common.py).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer epochs/seeds (CI mode)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (fig3_boundaries, fig5_ablation, fig6_7_pareto,
+                            kernel_bench, lm_step_bench, table1_params,
+                            table3_eval)
+
+    suites = {
+        "table1": lambda: table1_params.run(),
+        "fig3": lambda: fig3_boundaries.run(epochs=8 if args.fast else 20),
+        "fig5": lambda: fig5_ablation.run(
+            epochs=5 if args.fast else 12,
+            n_train=3000 if args.fast else 6000),
+        "fig6_7": lambda: fig6_7_pareto.run(
+            epochs=4 if args.fast else 10,
+            n_train=3000 if args.fast else 6000),
+        "table3": lambda: table3_eval.run(fast=args.fast),
+        "kernel": lambda: kernel_bench.run(),
+        "lm_step": lambda: lm_step_bench.run(),
+    }
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+            print(f"# suite {name} done in {time.time()-t0:.0f}s",
+                  flush=True)
+        except Exception:
+            failed.append(name)
+            print(f"# suite {name} FAILED:", flush=True)
+            traceback.print_exc()
+    if failed:
+        sys.exit(f"failed suites: {failed}")
+
+
+if __name__ == "__main__":
+    main()

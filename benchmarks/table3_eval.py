@@ -1,0 +1,83 @@
+"""Table III: the paper's headline evaluation.
+
+For each published model (JSC-2L, JSC-5L, HDR-5L): train on the synthetic
+stand-in dataset, convert to truth tables, assert the LUT path is bit-exact,
+and report accuracy + modeled LUT/Fmax/latency/area-delay next to the
+paper's reported numbers.  Absolute accuracy differs (synthetic data);
+hardware-side numbers depend only on topology and are compared directly.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.config import get_config
+from repro.core import cost_model as CM
+from repro.core import lut_infer as LI
+from repro.core import model as M
+from repro.core import truth_table as TT
+from repro.core.train import train_neuralut
+from repro.data import jsc_synthetic, mnist_synthetic
+
+
+def _eval_model(arch: str, xtr, ytr, xte, yte, epochs: int):
+    cfg = get_config(arch)
+    t0 = time.time()
+    params, state, hist = train_neuralut(cfg, xtr, ytr, xte, yte,
+                                         epochs=epochs, batch=256, lr=2e-3)
+    train_s = time.time() - t0
+    statics = M.model_static(cfg)
+    t1 = time.time()
+    tables = TT.convert(cfg, params, state, statics)
+    convert_s = time.time() - t1
+
+    # bit-exactness on the test set
+    _, values, _ = M.model_apply(cfg, params, state, statics,
+                                 jnp.asarray(xte), train=False)
+    codes = LI.input_codes(cfg, params, jnp.asarray(xte))
+    out = LI.lut_forward(cfg, tables, statics, codes)
+    exact = float((np.asarray(values)
+                   == np.asarray(LI.class_values(cfg, params, out))).mean())
+
+    est = CM.estimate(cfg)
+    paper = CM.PAPER_TABLE3.get(arch, {})
+    emit(f"table3/{arch}", train_s * 1e6,
+         f"acc_q={hist['test_acc_q'][-1]:.4f};bit_exact={exact:.3f};"
+         f"luts={est.luts:.0f}(paper={paper.get('lut')});"
+         f"fmax={est.fmax_mhz:.0f}(paper={paper.get('fmax')});"
+         f"latency_ns={est.latency_ns:.1f}(paper={paper.get('latency')});"
+         f"adp={est.area_delay:.2e}(paper={paper.get('adp'):.2e});"
+         f"convert_s={convert_s:.1f}")
+    return est
+
+
+def run(fast: bool = False) -> None:
+    ep_jsc = 8 if fast else 25
+    ep_mnist = 4 if fast else 12
+    xtr, ytr = jsc_synthetic(20000, seed=0)
+    xte, yte = jsc_synthetic(4000, seed=1)
+    e2 = _eval_model("neuralut-jsc-2l", xtr, ytr, xte, yte, ep_jsc)
+    e5 = _eval_model("neuralut-jsc-5l", xtr, ytr, xte, yte, ep_jsc)
+
+    xtr, ytr = mnist_synthetic(8000, seed=0)
+    xte, yte = mnist_synthetic(2000, seed=1)
+    eh = _eval_model("neuralut-hdr-5l", xtr, ytr, xte, yte, ep_mnist)
+
+    # headline ratios vs published baselines (modeled / paper-reported)
+    p = CM.PAPER_TABLE3
+    emit("table3/adp_ratio_jsc2l_vs_logicnets", 0.0,
+         f"model={p['logicnets-jsc-m']['adp']/e2.area_delay:.1f}x"
+         f"(paper=35.2x)")
+    emit("table3/adp_ratio_jsc2l_vs_polylut", 0.0,
+         f"model={p['polylut-jsc-lite']['adp']/e2.area_delay:.1f}x"
+         f"(paper=4.4x)")
+    emit("table3/latency_ratio_hdr_vs_polylut", 0.0,
+         f"model={p['polylut-hdr']['latency']/eh.latency_ns:.2f}x"
+         f"(paper=1.33x)")
+
+
+if __name__ == "__main__":
+    run()

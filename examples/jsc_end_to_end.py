@@ -1,0 +1,60 @@
+"""Jet substructure tagging end-to-end: the paper's JSC-2L model.
+
+    PYTHONPATH=src python examples/jsc_end_to_end.py [--model jsc-5l]
+
+Full pipeline on the synthetic JSC stand-in: QAT training -> truth tables ->
+bit-exact check -> RTL -> cost model vs the paper's reported numbers.
+"""
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import get_config
+from repro.core import cost_model as CM
+from repro.core import lut_infer as LI
+from repro.core import model as M
+from repro.core import rtl
+from repro.core import truth_table as TT
+from repro.core.train import train_neuralut
+from repro.data import jsc_synthetic
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="jsc-2l", choices=["jsc-2l", "jsc-5l"])
+    ap.add_argument("--epochs", type=int, default=25)
+    args = ap.parse_args()
+    cfg = get_config(f"neuralut-{args.model}")
+
+    xtr, ytr = jsc_synthetic(20000, seed=0)
+    xte, yte = jsc_synthetic(4000, seed=1)
+    print(f"training {cfg.name}: widths={cfg.layer_widths} beta={cfg.beta} "
+          f"F={cfg.fan_in} subnet L={cfg.depth} N={cfg.width} S={cfg.skip}")
+    params, state, hist = train_neuralut(cfg, xtr, ytr, xte, yte,
+                                         epochs=args.epochs, batch=256,
+                                         lr=2e-3, log_every=5)
+
+    statics = M.model_static(cfg)
+    tables = TT.convert(cfg, params, state, statics)
+    codes = LI.input_codes(cfg, params, jnp.asarray(xte))
+    out = LI.lut_forward(cfg, tables, statics, codes)
+    pred = np.argmax(np.asarray(LI.class_values(cfg, params, out)), -1)
+    print(f"LUT-path accuracy: {(pred == yte).mean():.4f}")
+
+    outdir = pathlib.Path(__file__).parent / "out" / f"rtl_{args.model}"
+    rtl.generate_top(cfg, tables, statics, str(outdir))
+    est = CM.estimate(cfg)
+    paper = CM.PAPER_TABLE3[f"neuralut-{args.model}"]
+    print(f"cost model: {est.luts:.0f} LUTs (paper {paper['lut']}), "
+          f"Fmax {est.fmax_mhz:.0f} MHz (paper {paper['fmax']}), "
+          f"latency {est.latency_ns:.1f} ns (paper {paper['latency']}), "
+          f"ADP {est.area_delay:.2e} (paper {paper['adp']:.2e})")
+
+
+if __name__ == "__main__":
+    main()

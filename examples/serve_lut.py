@@ -1,0 +1,19 @@
+"""End-to-end serving driver (the paper's deployment scenario): train a
+NeuraLUT model, convert to LUTs, and serve batched classification requests
+through the bit-exact LUT path with latency percentiles.
+
+    PYTHONPATH=src python examples/serve_lut.py --requests 200 --batch 64
+
+This is the software twin of the FPGA: every request goes through integer
+LUT lookups only (the Pallas lut_gather kernel on TPU; jnp gather here).
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.serve import main  # the launcher is the implementation
+
+if __name__ == "__main__":
+    sys.argv += ["--mode", "lut"]
+    main()

@@ -1,0 +1,5 @@
+"""Architecture configs (one module per assigned architecture + paper's own).
+
+Import ``repro.config.registry`` and call ``get_config(name)`` rather than
+importing these modules directly.
+"""

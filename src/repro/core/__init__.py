@@ -1,0 +1,15 @@
+"""NeuraLUT core: the paper's contribution as a composable JAX module.
+
+Pipeline (paper Fig. 4): QAT training -> sub-network -> L-LUT truth tables
+-> Verilog RTL + cost model.  ``lut_infer`` is the bit-exact software twin
+of the generated hardware.
+"""
+from .nl_config import NeuraLUTConfig
+from . import cost_model, lut_infer, model, quant, rtl, sparsity, subnet
+from . import truth_table
+from .train import train_neuralut
+
+__all__ = [
+    "NeuraLUTConfig", "cost_model", "lut_infer", "model", "quant", "rtl",
+    "sparsity", "subnet", "truth_table", "train_neuralut",
+]

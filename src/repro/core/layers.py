@@ -1,0 +1,75 @@
+"""Circuit-level NeuraLUT layer: sparse gather -> hidden function -> BN ->
+quantize (paper Fig. 2 / §III).
+
+Between layers everything is beta-bit quantized with learned scales (the
+"exposed" circuit topology); inside a neuron the hidden function runs in
+full float32 precision (the "hidden" density).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.nl_config import NeuraLUTConfig
+from repro.core import quant, subnet
+from repro.core.sparsity import random_connectivity
+
+Params = Dict[str, Any]
+
+
+def layer_static(cfg: NeuraLUTConfig, idx: int, in_width: int,
+                 out_width: int) -> Dict[str, np.ndarray]:
+    """Non-trainable per-layer constants: connectivity (+ poly exponents)."""
+    conn = random_connectivity(in_width, out_width, cfg.layer_fan_in(idx),
+                               seed=hash((cfg.name, idx)) % (2 ** 31))
+    st = {"conn": conn}
+    if cfg.kind == "poly":
+        st["exps"] = subnet.monomial_exponents(cfg.layer_fan_in(idx),
+                                               cfg.degree)
+    return st
+
+
+def layer_spec(cfg: NeuraLUTConfig, idx: int, out_width: int
+               ) -> Tuple[Params, Params]:
+    """(params, state) ShapeDtypeStruct trees for one circuit layer."""
+    F = cfg.layer_fan_in(idx)
+    if cfg.kind == "linear":
+        fn = subnet.linear_spec(out_width, F)
+    elif cfg.kind == "poly":
+        fn = subnet.poly_spec(out_width, F, cfg.degree)
+    else:
+        fn = subnet.subnet_spec(out_width, F, cfg.depth, cfg.width, cfg.skip)
+    bn_p, bn_s = quant.bn_spec(out_width)
+    params = {"fn": fn, "bn": bn_p, "quant": quant.quant_spec(out_width)}
+    return params, {"bn": bn_s}
+
+
+def layer_apply(cfg: NeuraLUTConfig, idx: int, p: Params, state: Params,
+                static: Dict[str, np.ndarray], x: jax.Array, *,
+                train: bool, grouped_matmul=None
+                ) -> Tuple[jax.Array, jax.Array, Params]:
+    """x: (B, in_width) dequantized values.
+
+    Returns (values (B, O) after fake-quant, pre-quant logits (B, O),
+    new_state)."""
+    conn = jnp.asarray(static["conn"])  # (O, F)
+    xg = x[:, conn]  # (B, O, F) sparse gather
+    if cfg.kind == "linear":
+        f = subnet.linear_apply(p["fn"], xg)
+    elif cfg.kind == "poly":
+        f = subnet.poly_apply(p["fn"], xg, static["exps"])
+    else:
+        f = subnet.subnet_apply(p["fn"], xg, cfg.skip,
+                                grouped_matmul=grouped_matmul)
+    pre, new_bn = quant.bn_apply(p["bn"], state["bn"], f, train=train,
+                                 momentum=cfg.bn_momentum)
+    beta_out = cfg.beta  # outputs always use the model-wide beta
+    y = quant.quant_apply(p["quant"], pre, beta_out)
+    return y, pre, {"bn": new_bn}
+
+
+def layer_codes(cfg: NeuraLUTConfig, p: Params, pre: jax.Array) -> jax.Array:
+    return quant.quant_codes(p["quant"], pre, cfg.beta)

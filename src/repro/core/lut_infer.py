@@ -1,0 +1,62 @@
+"""Bit-exact LUT-network inference: the hardware-equivalent path.
+
+Runs entirely on integer codes — exactly what the generated Verilog ROMs
+compute — so it both validates the truth-table conversion against the
+quantized float forward pass and serves as the software "serving" engine
+(examples/serve_lut.py).  kernels/lut_gather.py provides the Pallas TPU
+version of ``lut_forward``; this module is the jnp oracle.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+from repro.core.nl_config import NeuraLUTConfig
+
+Params = Dict
+
+
+def pack_index(codes: jax.Array, beta: int) -> jax.Array:
+    """codes: (..., F) -> LUT addresses; slot 0 = MSB."""
+    f = codes.shape[-1]
+    idx = jnp.zeros(codes.shape[:-1], jnp.int32)
+    for j in range(f):
+        idx = (idx << beta) | codes[..., j].astype(jnp.int32)
+    return idx
+
+
+def input_codes(cfg: NeuraLUTConfig, params: Params, x: jax.Array) -> jax.Array:
+    beta_in = cfg.beta_in or cfg.beta
+    return quant.quant_codes(params["in_quant"], x, beta_in)
+
+
+def lut_forward(cfg: NeuraLUTConfig, tables: List[np.ndarray],
+                statics: List[Dict], codes: jax.Array) -> jax.Array:
+    """codes: (B, in_features) int32 -> (B, classes) output codes."""
+    c = codes
+    for i in range(cfg.num_layers):
+        beta_in = cfg.layer_in_bits(i)
+        conn = jnp.asarray(statics[i]["conn"])
+        gathered = c[:, conn]                      # (B, O, F)
+        addr = pack_index(gathered, beta_in)       # (B, O)
+        tbl = jnp.asarray(tables[i].astype(np.int32))  # (O, T)
+        c = tbl[jnp.arange(tbl.shape[0])[None, :], addr].astype(jnp.int32)
+    return c
+
+
+def class_values(cfg: NeuraLUTConfig, params: Params, out_codes: jax.Array
+                 ) -> jax.Array:
+    """Dequantize final-layer codes -> comparable class scores."""
+    s = jnp.exp(params["layers"][-1]["quant"]["log_s"])
+    return (out_codes.astype(jnp.float32) - 2 ** (cfg.beta - 1)) * s
+
+
+def predict(cfg: NeuraLUTConfig, params: Params, tables, statics,
+            x: jax.Array) -> jax.Array:
+    codes = input_codes(cfg, params, x)
+    out = lut_forward(cfg, tables, statics, codes)
+    return jnp.argmax(class_values(cfg, params, out), axis=-1)

@@ -1,0 +1,105 @@
+"""Full NeuraLUT circuit-level model (input quantizer + stacked layers).
+
+API:
+    statics   = model_static(cfg)                    # connectivity etc.
+    p, s      = model_init(cfg, key)                 # trainable / BN state
+    logits, values, states = model_apply(cfg, p, s, statics, x, train=...)
+    loss through ``logits`` (pre-quant output of the last layer); the
+    hardware path uses the quantized values (see truth_table / lut_infer).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layers as L
+from repro.core import quant
+from repro.core.nl_config import NeuraLUTConfig
+from repro.models.layers.common import init_from_spec
+
+Params = Dict[str, Any]
+
+
+def model_widths(cfg: NeuraLUTConfig) -> List[int]:
+    return [cfg.in_features] + list(cfg.layer_widths)
+
+
+def model_static(cfg: NeuraLUTConfig) -> List[Dict]:
+    w = model_widths(cfg)
+    return [L.layer_static(cfg, i, w[i], w[i + 1])
+            for i in range(cfg.num_layers)]
+
+
+def model_spec(cfg: NeuraLUTConfig) -> Tuple[Params, Params]:
+    w = model_widths(cfg)
+    lp, ls = [], []
+    for i in range(cfg.num_layers):
+        pi, si = L.layer_spec(cfg, i, w[i + 1])
+        lp.append(pi)
+        ls.append(si)
+    params = {
+        "in_quant": quant.quant_spec(cfg.in_features),
+        "layers": lp,
+    }
+    return params, {"layers": ls}
+
+
+def model_init(cfg: NeuraLUTConfig, key) -> Tuple[Params, Params]:
+    spec_p, spec_s = model_spec(cfg)
+    params = init_from_spec(spec_p, key)
+    # quantizer scales and BN need proper init, not trunc-normal
+    params["in_quant"] = quant.quant_init(cfg.in_features, 0.25)
+    for i, lp in enumerate(params["layers"]):
+        # scale such that +-2 sigma of a unit-variance BN output covers the
+        # code range
+        c = max(1, 2 ** (cfg.beta - 1) - 1)
+        lp["quant"] = quant.quant_init(cfg.layer_widths[i], 2.0 / c)
+        lp["bn"] = {"g": jnp.ones((cfg.layer_widths[i],), jnp.float32),
+                    "b": jnp.zeros((cfg.layer_widths[i],), jnp.float32)}
+    state = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec_s,
+                         is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    for ls_ in state["layers"]:
+        ls_["bn"]["var"] = jnp.ones_like(ls_["bn"]["var"])
+    return params, state
+
+
+def model_apply(cfg: NeuraLUTConfig, params: Params, state: Params,
+                statics: List[Dict], x: jax.Array, *, train: bool,
+                grouped_matmul=None):
+    """x: (B, in_features) raw features.
+
+    Returns (logits (B, classes) pre-quant, quantized class values,
+    new_state)."""
+    beta_in = cfg.beta_in or cfg.beta
+    v = quant.quant_apply(params["in_quant"], x, beta_in)
+    new_states = []
+    pre = None
+    for i in range(cfg.num_layers):
+        v, pre, ns = L.layer_apply(
+            cfg, i, params["layers"][i], state["layers"][i], statics[i], v,
+            train=train, grouped_matmul=grouped_matmul)
+        new_states.append(ns)
+    return pre, v, {"layers": new_states}
+
+
+def ce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - ll)
+
+
+def accuracy_from_values(values: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean(jnp.argmax(values, axis=-1) == labels)
+
+
+def total_params(cfg: NeuraLUTConfig) -> int:
+    p, _ = model_spec(cfg)
+    tot = 0
+    for leaf in jax.tree.leaves(p):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        tot += n
+    return tot

@@ -1,0 +1,57 @@
+"""NeuraLUT circuit-level model configuration (the paper's models).
+
+A NeuraLUT network is a sparse "circuit-level" DAG of L-LUT neurons.  Each
+neuron has fan-in F, input/output bit-width beta, and hides a function:
+
+  - kind="subnet": dense MLP of depth L, width N, skip period S  (NeuraLUT)
+  - kind="linear": affine + activation                           (LogicNets)
+  - kind="poly":   multivariate polynomial of degree D + act.    (PolyLUT)
+
+``layer_widths`` excludes the input: a model over ``in_features`` inputs with
+layer_widths=(256, 100, 10) has three L-LUT layers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class NeuraLUTConfig:
+    name: str
+    in_features: int
+    layer_widths: Tuple[int, ...]
+    num_classes: int
+    beta: int  # inter-partition activation bit-width
+    fan_in: int  # F
+    # Hidden-function parameters.
+    kind: str = "subnet"  # "subnet" | "linear" | "poly"
+    depth: int = 4  # L (subnet)
+    width: int = 16  # N (subnet)
+    skip: int = 2  # S; 0 = no skip connections (subnet)
+    degree: int = 2  # D (poly)
+    # First-layer exceptions (JSC-5L: beta_0=7, F_0=2).
+    beta_in: Optional[int] = None  # input-feature quantization bit-width
+    fan_in_0: Optional[int] = None
+    # Training details (paper §III-E).
+    bn_momentum: float = 0.1
+    family: str = "neuralut"
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.layer_widths)
+
+    def layer_fan_in(self, idx: int) -> int:
+        if idx == 0 and self.fan_in_0 is not None:
+            return self.fan_in_0
+        return self.fan_in
+
+    def layer_in_bits(self, idx: int) -> int:
+        """Bit-width of the inputs consumed by layer ``idx``."""
+        if idx == 0 and self.beta_in is not None:
+            return self.beta_in
+        return self.beta
+
+    def table_size(self, idx: int) -> int:
+        """Number of entries in each L-LUT of layer ``idx`` (2^{beta*F})."""
+        return 2 ** (self.layer_in_bits(idx) * self.layer_fan_in(idx))

@@ -1,0 +1,97 @@
+"""Quantization-aware training primitives (Brevitas-style, paper §III-E.1).
+
+Inter-partition activations are quantized to ``beta`` bits with a *learned
+per-channel scale* (the paper: "Brevitas quantized activation functions,
+which incorporate learned scaling factors").  Following the LogicNets
+toolflow that NeuraLUT extends, the quantizer is signed symmetric:
+
+    q(x) = clip(round(x / s), -2^{beta-1}, 2^{beta-1} - 1)
+    y    = q(x) * s
+    code = q(x) + 2^{beta-1}          (unsigned LUT address bits)
+
+``round`` uses the straight-through estimator; ``s = exp(log_s)`` keeps the
+scale positive.  The (code <-> value) maps are what make the sub-network ->
+truth-table conversion exact: a LUT address reconstructs exactly the float
+the quantized forward pass produced.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jax.Array]
+
+
+def quant_spec(channels: int) -> Params:
+    return {"log_s": jax.ShapeDtypeStruct((channels,), jnp.float32)}
+
+
+def quant_init(channels: int, init_scale: float = 0.25) -> Params:
+    return {"log_s": jnp.full((channels,), jnp.log(init_scale), jnp.float32)}
+
+
+def _ste_round(v: jax.Array) -> jax.Array:
+    return v + jax.lax.stop_gradient(jnp.round(v) - v)
+
+
+def quant_apply(p: Params, x: jax.Array, beta: int) -> jax.Array:
+    """Fake-quantize x (..., C) to beta bits; returns dequantized values."""
+    s = jnp.exp(p["log_s"])
+    lo, hi = -(2 ** (beta - 1)), 2 ** (beta - 1) - 1
+    v = x / s
+    vq = jnp.clip(_ste_round(v), lo, hi)
+    return vq * s
+
+
+def quant_codes(p: Params, x: jax.Array, beta: int) -> jax.Array:
+    """Unsigned integer LUT codes in [0, 2^beta)."""
+    s = jnp.exp(p["log_s"])
+    lo, hi = -(2 ** (beta - 1)), 2 ** (beta - 1) - 1
+    q = jnp.clip(jnp.round(x / s), lo, hi).astype(jnp.int32)
+    return q + 2 ** (beta - 1)
+
+
+def code_values(p: Params, beta: int) -> jax.Array:
+    """(C, 2^beta) dequantized value of every code for every channel."""
+    s = jnp.exp(p["log_s"])
+    codes = jnp.arange(2 ** beta, dtype=jnp.float32) - 2 ** (beta - 1)
+    return s[:, None] * codes[None, :]
+
+
+# ---------------------------------------------------------------------------
+# BatchNorm (running stats carried in a separate state tree)
+
+
+def bn_spec(channels: int) -> Tuple[Params, Params]:
+    p = {"g": jax.ShapeDtypeStruct((channels,), jnp.float32),
+         "b": jax.ShapeDtypeStruct((channels,), jnp.float32)}
+    s = {"mean": jax.ShapeDtypeStruct((channels,), jnp.float32),
+         "var": jax.ShapeDtypeStruct((channels,), jnp.float32)}
+    return p, s
+
+
+def bn_init(channels: int) -> Tuple[Params, Params]:
+    return ({"g": jnp.ones((channels,), jnp.float32),
+             "b": jnp.zeros((channels,), jnp.float32)},
+            {"mean": jnp.zeros((channels,), jnp.float32),
+             "var": jnp.ones((channels,), jnp.float32)})
+
+
+def bn_apply(p: Params, state: Params, x: jax.Array, *, train: bool,
+             momentum: float = 0.1, eps: float = 1e-5
+             ) -> Tuple[jax.Array, Params]:
+    """x: (B, C). Returns (normalized, new_state)."""
+    if train:
+        mu = jnp.mean(x, axis=0)
+        var = jnp.var(x, axis=0)
+        new_state = {
+            "mean": (1 - momentum) * state["mean"] + momentum * mu,
+            "var": (1 - momentum) * state["var"] + momentum * var,
+        }
+    else:
+        mu, var = state["mean"], state["var"]
+        new_state = state
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]
+    return y, new_state

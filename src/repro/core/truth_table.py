@@ -1,0 +1,91 @@
+"""Sub-network -> L-LUT conversion (paper §III-E.2).
+
+For every circuit layer we enumerate all 2^{beta_in * F} input code
+combinations, dequantize each code *with the source channel's learned
+scale*, evaluate the hidden function exactly as the quantized forward pass
+does (same jitted ops), and quantize the outputs back to codes.  The result
+is one (out_width, 2^{beta*F}) uint table per layer — the entire network
+becomes a cascade of lookups (see lut_infer / rtl).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import layers as L
+from repro.core import quant
+from repro.core.nl_config import NeuraLUTConfig
+
+Params = Dict
+
+
+def enumerate_codes(beta: int, fan_in: int) -> np.ndarray:
+    """(2^{beta*F}, F) all code combinations; slot 0 is the MSB of the LUT
+    address (matches lut_infer.pack_index and the Verilog bus order)."""
+    t = 2 ** (beta * fan_in)
+    idx = np.arange(t, dtype=np.int64)
+    cols = []
+    for j in range(fan_in):
+        shift = beta * (fan_in - 1 - j)
+        cols.append((idx >> shift) & (2 ** beta - 1))
+    return np.stack(cols, axis=1).astype(np.int32)
+
+
+def _input_scales(cfg: NeuraLUTConfig, params: Params, layer_idx: int
+                  ) -> jax.Array:
+    """Per-source-channel scale of the inputs feeding ``layer_idx``."""
+    if layer_idx == 0:
+        return jnp.exp(params["in_quant"]["log_s"])
+    return jnp.exp(params["layers"][layer_idx - 1]["quant"]["log_s"])
+
+
+def layer_truth_table(cfg: NeuraLUTConfig, params: Params, state: Params,
+                      statics: List[Dict], layer_idx: int, *,
+                      batch: int = 4096) -> np.ndarray:
+    """uint16 (out_width, 2^{beta_in*F}) output codes for one layer."""
+    beta_in = cfg.layer_in_bits(layer_idx)
+    F = cfg.layer_fan_in(layer_idx)
+    conn = statics[layer_idx]["conn"]  # (O, F)
+    out_width = conn.shape[0]
+    codes = enumerate_codes(beta_in, F)  # (T, F)
+    t = codes.shape[0]
+
+    src_scales = _input_scales(cfg, params, layer_idx)  # (in_width,)
+    offs = 2 ** (beta_in - 1)
+    # values per (neuron, slot, code): scale of the SOURCE channel
+    slot_scale = jnp.asarray(src_scales)[jnp.asarray(conn)]  # (O, F)
+
+    lp = params["layers"][layer_idx]
+    ls = state["layers"][layer_idx]
+
+    @jax.jit
+    def eval_chunk(code_chunk):
+        # (Bc, F) codes -> (Bc, O, F) dequantized values
+        vals = (code_chunk[:, None, :].astype(jnp.float32) - offs) \
+            * slot_scale[None]
+        from repro.core import subnet
+        if cfg.kind == "linear":
+            f = subnet.linear_apply(lp["fn"], vals)
+        elif cfg.kind == "poly":
+            f = subnet.poly_apply(lp["fn"], vals, statics[layer_idx]["exps"])
+        else:
+            f = subnet.subnet_apply(lp["fn"], vals, cfg.skip)
+        pre, _ = quant.bn_apply(lp["bn"], ls["bn"], f, train=False,
+                                momentum=cfg.bn_momentum)
+        return quant.quant_codes(lp["quant"], pre, cfg.beta)
+
+    outs = []
+    for s in range(0, t, batch):
+        outs.append(np.asarray(eval_chunk(jnp.asarray(codes[s:s + batch]))))
+    table = np.concatenate(outs, axis=0).T  # (O, T)
+    return table.astype(np.uint16)
+
+
+def convert(cfg: NeuraLUTConfig, params: Params, state: Params,
+            statics: List[Dict]) -> List[np.ndarray]:
+    """All layers' truth tables."""
+    return [layer_truth_table(cfg, params, state, statics, i)
+            for i in range(cfg.num_layers)]

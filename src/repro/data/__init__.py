@@ -1,0 +1,10 @@
+from .synthetic import (
+    jsc_synthetic,
+    mnist_synthetic,
+    token_stream,
+    two_semicircles,
+)
+from .pipeline import ShardedLoader
+
+__all__ = ["jsc_synthetic", "mnist_synthetic", "token_stream",
+           "two_semicircles", "ShardedLoader"]

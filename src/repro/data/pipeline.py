@@ -1,0 +1,90 @@
+"""Sharded, prefetching input pipeline.
+
+Host-side: each data-parallel host slices its shard of the global batch
+deterministically from the (synthetic) source, double-buffers the next batch
+on a worker thread, and hands back numpy arrays ready for
+``jax.device_put`` with the batch sharding.  Deterministic across restarts:
+the loader state is just (seed, step), which the checkpoint stores.
+
+Straggler mitigation hook: ``backup_after_s`` starts a redundant producer
+for a batch if the primary takes too long (work stealing at the input layer;
+see repro/runtime/straggler.py).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Iterator, Optional
+
+import numpy as np
+
+
+class ShardedLoader:
+    def __init__(self, make_batch: Callable[[int], Dict[str, np.ndarray]], *,
+                 start_step: int = 0, prefetch: int = 2,
+                 backup_after_s: Optional[float] = None):
+        """make_batch(step) must be deterministic in ``step``."""
+        self.make_batch = make_batch
+        self.step = start_step
+        self.prefetch = prefetch
+        self.backup_after_s = backup_after_s
+        self._q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _produce(self, step: int) -> Dict[str, np.ndarray]:
+        if self.backup_after_s is None:
+            return self.make_batch(step)
+        from repro.runtime.straggler import run_with_backup
+        return run_with_backup(lambda: self.make_batch(step),
+                               timeout_s=self.backup_after_s)
+
+    def _worker(self) -> None:
+        s = self.step
+        while not self._stop.is_set():
+            try:
+                batch = self._produce(s)
+            except Exception as e:  # surface in consumer
+                self._q.put(e)
+                return
+            self._q.put((s, batch))
+            s += 1
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if isinstance(item, Exception):
+            raise item
+        step, batch = item
+        self.step = step + 1
+        return batch
+
+    def close(self) -> None:
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+
+
+def lm_batch_fn(vocab: int, global_batch: int, seq_len: int, *,
+                seed: int = 0, host_index: int = 0, num_hosts: int = 1):
+    """Deterministic per-step LM batch; hosts carve disjoint row ranges."""
+    from .synthetic import token_stream
+
+    rows = global_batch // num_hosts
+    lo = host_index * rows
+
+    def make(step: int) -> Dict[str, np.ndarray]:
+        rng_seed = (seed * 1_000_003 + step) % (2 ** 31)
+        toks = token_stream(rows * (seq_len + 1), vocab,
+                            seed=rng_seed + lo)
+        toks = toks.reshape(rows, seq_len + 1)
+        return {"tokens": toks[:, :-1].astype(np.int32),
+                "labels": toks[:, 1:].astype(np.int32)}
+
+    return make

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: truth-table lookup (LUT-network inference).
+
+FPGA synthesis implements a >6-input L-LUT as LUT6 blocks + an F7/F8/LUT
+mux tree; the TPU-native analogue is a *vectorized binary mux tree* over the
+VMEM-resident table: for address bit k (MSB first) we halve the live table
+slice by selecting the upper/lower half per (token, neuron) lane:
+
+    live_0 = table tile (Ot, T)                     broadcast to (Bt, Ot, T)
+    live_k = where(bit_k, live_{k-1}[..., T/2:], live_{k-1}[..., :T/2])
+    out    = live_{log2 T}
+
+All selects are dense vector ops (no data-dependent addressing, which the
+VPU lacks); working set is bounded by the Bt tile: sum_k Bt*Ot*T/2^k ~=
+2*Bt*Ot*T elements.  Grid tiles (B, O); table tiles live in VMEM across the
+whole batch loop (constant operand).
+
+This kernel is the serving hot path of the converted NeuraLUT model: one
+lookup per neuron per token, entirely memory-resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(nbits: int, tbl_ref, addr_ref, out_ref):
+    tbl = tbl_ref[...]            # (Ot, T) int32
+    addr = addr_ref[...]          # (Bt, Ot) int32
+    bt = addr.shape[0]
+    live = jnp.broadcast_to(tbl[None], (bt,) + tbl.shape)  # (Bt, Ot, T)
+    for k in range(nbits):
+        half = live.shape[-1] // 2
+        bit = (addr >> (nbits - 1 - k)) & 1  # (Bt, Ot)
+        lo = live[..., :half]
+        hi = live[..., half:]
+        live = jnp.where(bit[..., None] == 1, hi, lo)
+    out_ref[...] = live[..., 0].astype(out_ref.dtype)
+
+
+def lut_lookup(
+    tables: jax.Array,  # (O, T) int32, T = 2^nbits
+    addr: jax.Array,    # (B, O) int32
+    *,
+    block_b: int = 8,
+    block_o: int = 32,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns (B, O) int32 == tables[o, addr[b, o]]."""
+    o, t = tables.shape
+    b = addr.shape[0]
+    nbits = int(t).bit_length() - 1
+    if 2 ** nbits != t:
+        raise ValueError(f"table size {t} not a power of two")
+    block_b = min(block_b, b)
+    block_o = min(block_o, o)
+    if b % block_b or o % block_o:
+        raise ValueError(f"(B={b}, O={o}) % ({block_b}, {block_o}) != 0")
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, nbits),
+        grid=(b // block_b, o // block_o),
+        in_specs=[
+            pl.BlockSpec((block_o, t), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_b, block_o), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_o), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, o), jnp.int32),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), addr.astype(jnp.int32))
+    return out

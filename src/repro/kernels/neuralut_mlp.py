@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: fused grouped sub-network evaluation.
+
+The paper hides a dense MLP inside an FPGA LUT; the TPU analogue is hiding
+the whole sub-network in VMEM: one kernel invocation loads a tile of
+gathered inputs (Bt, Ot, F) plus ALL layer/skip weights for those Ot
+neurons, runs the L-layer (skip-connected) MLP entirely in VMEM, and writes
+only the (Bt, Ot) result — eliminating the L x (B, O, N)-sized HBM
+round-trips an einsum-per-layer implementation performs.
+
+MXU note (hw-codesign): subnet dims (F<=6, N<=32) are far below the 128x128
+systolic array, so per-neuron matmuls cannot fill the MXU.  The kernel
+therefore batches tokens on the lane dim — each grouped dot is
+(Bt x n_in) @ (n_in x n_out) per neuron, with Bt = 128/256 filling lanes —
+and relies on fusion (not raw matmul throughput) for the win: the op is
+weight-streaming-bound, and fusing L layers cuts activations traffic by
+~2L x.  See EXPERIMENTS.md §Perf (kernel section) for the measured HLO-level
+op-count/traffic reduction.
+
+Weight layout per layer i: w (O, n_i, n_{i+1}), b (O, n_{i+1}); skip chunk
+c: r (O, n_{cS}, n_{(c+1)S}).  The last layer has n_out == 1; output is
+(B, O).
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(nlayers: int, skip: int, *refs):
+    """refs: xg, w_0, b_0, ..., w_{L-1}, b_{L-1} [, r_0, rb_0, ...], out."""
+    xg_ref = refs[0]
+    out_ref = refs[-1]
+    ws = [(refs[1 + 2 * i], refs[2 + 2 * i]) for i in range(nlayers)]
+    base = 1 + 2 * nlayers
+    nch = (nlayers // skip) if skip else 0
+    rs = [(refs[base + 2 * c], refs[base + 2 * c + 1]) for c in range(nch)]
+
+    x = xg_ref[...].astype(jnp.float32)  # (Bt, Ot, F)
+
+    def mm(h, w_ref, b_ref):
+        w = w_ref[...].astype(jnp.float32)  # (Ot, ni, no)
+        b = b_ref[...].astype(jnp.float32)  # (Ot, no)
+        # batch dim: neuron tile; contraction: n_in.
+        out = jax.lax.dot_general(
+            h, w,
+            dimension_numbers=(((2,), (1,)), ((1,), (0,))),
+            preferred_element_type=jnp.float32)  # (Ot, Bt, no)
+        return out.transpose(1, 0, 2) + b[None]
+
+    if skip == 0:
+        h = x
+        for i, (w, b) in enumerate(ws):
+            h = mm(h, w, b)
+            if i < nlayers - 1:
+                h = jnp.maximum(h, 0.0)
+    else:
+        h = x
+        for c in range(nch):
+            res = mm(h, rs[c][0], rs[c][1])
+            hh = h
+            for j in range(skip):
+                w, b = ws[c * skip + j]
+                hh = mm(hh, w, b)
+                if j < skip - 1:
+                    hh = jnp.maximum(hh, 0.0)
+            h = hh + res
+            if c < nch - 1:
+                h = jnp.maximum(h, 0.0)
+    out_ref[...] = h[..., 0].astype(out_ref.dtype)
+
+
+def grouped_subnet(
+    xg: jax.Array,                       # (B, O, F)
+    layer_ws: Sequence[jax.Array],       # each (O, n_i, n_{i+1})
+    layer_bs: Sequence[jax.Array],
+    skip_ws: Optional[Sequence[jax.Array]] = None,
+    skip_bs: Optional[Sequence[jax.Array]] = None,
+    *,
+    skip: int = 0,
+    block_b: int = 128,
+    block_o: int = 16,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused sub-network evaluation; returns (B, O) float32."""
+    b, o, f = xg.shape
+    block_b = min(block_b, b)
+    block_o = min(block_o, o)
+    if b % block_b or o % block_o:
+        raise ValueError(f"(B={b}, O={o}) not divisible by "
+                         f"({block_b}, {block_o})")
+    nlayers = len(layer_ws)
+    grid = (b // block_b, o // block_o)
+
+    in_specs = [pl.BlockSpec((block_b, block_o, f), lambda i, j: (i, j, 0))]
+    args = [xg]
+    for w, bb in zip(layer_ws, layer_bs):
+        in_specs.append(pl.BlockSpec((block_o,) + w.shape[1:],
+                                     lambda i, j: (j, 0, 0)))
+        in_specs.append(pl.BlockSpec((block_o, bb.shape[1]),
+                                     lambda i, j: (j, 0)))
+        args += [w, bb]
+    if skip:
+        for rw, rb in zip(skip_ws, skip_bs):
+            in_specs.append(pl.BlockSpec((block_o,) + rw.shape[1:],
+                                         lambda i, j: (j, 0, 0)))
+            in_specs.append(pl.BlockSpec((block_o, rb.shape[1]),
+                                         lambda i, j: (j, 0)))
+            args += [rw, rb]
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, nlayers, skip),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_b, block_o), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, o), jnp.float32),
+        interpret=interpret,
+    )(*args)
+    return out

@@ -1,0 +1,52 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels run in interpret mode (the kernel body
+executes as Python/jnp — bit-identical semantics, no TPU lowering); on TPU
+set ``interpret=False`` (the default flips on TPU backends).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .lut_gather import lut_lookup
+from .neuralut_mlp import grouped_subnet
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("skip", "block_b", "block_o",
+                                             "interpret"))
+def grouped_subnet_op(xg, layer_ws, layer_bs, skip_ws=None, skip_bs=None, *,
+                      skip: int = 0, block_b: int = 128, block_o: int = 16,
+                      interpret: Optional[bool] = None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return grouped_subnet(xg, list(layer_ws), list(layer_bs),
+                          list(skip_ws) if skip_ws else None,
+                          list(skip_bs) if skip_bs else None,
+                          skip=skip, block_b=block_b, block_o=block_o,
+                          interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_o",
+                                             "interpret"))
+def lut_lookup_op(tables, addr, *, block_b: int = 8, block_o: int = 32,
+                  interpret: Optional[bool] = None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return lut_lookup(tables, addr, block_b=block_b, block_o=block_o,
+                      interpret=interp)
+
+
+def subnet_params_to_kernel(fn_params: Dict) -> Dict:
+    """Adapt a repro.core.subnet param dict -> kernel argument lists."""
+    lw = [lp["w"] for lp in fn_params["layers"]]
+    lb = [lp["b"] for lp in fn_params["layers"]]
+    sw = [sp["w"] for sp in fn_params.get("skips", [])]
+    sb = [sp["b"] for sp in fn_params.get("skips", [])]
+    return dict(layer_ws=lw, layer_bs=lb,
+                skip_ws=sw or None, skip_bs=sb or None)

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness reference)."""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_subnet_ref(xg: jax.Array,
+                       layer_ws: List[jax.Array],
+                       layer_bs: List[jax.Array],
+                       skip_ws: Optional[List[jax.Array]] = None,
+                       skip_bs: Optional[List[jax.Array]] = None,
+                       skip: int = 0) -> jax.Array:
+    """Reference for the fused grouped sub-network kernel.
+
+    xg: (B, O, F); layer i: w (O, n_i, n_{i+1}), b (O, n_{i+1}).
+    Returns (B, O): the last layer has n_out == 1 and is squeezed.
+    Mirrors repro.core.subnet.subnet_apply (phi = ReLU between layers /
+    chunks, skips every ``skip`` layers).
+    """
+    mm = lambda h, w, b: jnp.einsum("boi,oij->boj", h, w) + b[None]
+    L = len(layer_ws)
+    if skip == 0:
+        h = xg
+        for i in range(L):
+            h = mm(h, layer_ws[i], layer_bs[i])
+            if i < L - 1:
+                h = jax.nn.relu(h)
+        return h[..., 0]
+    h = xg
+    nch = L // skip
+    for c in range(nch):
+        res = mm(h, skip_ws[c], skip_bs[c])
+        hh = h
+        for j in range(skip):
+            i = c * skip + j
+            hh = mm(hh, layer_ws[i], layer_bs[i])
+            if j < skip - 1:
+                hh = jax.nn.relu(hh)
+        h = hh + res
+        if c < nch - 1:
+            h = jax.nn.relu(h)
+    return h[..., 0]
+
+
+def lut_gather_ref(tables: jax.Array, addr: jax.Array) -> jax.Array:
+    """tables: (O, T) int32; addr: (B, O) int32 -> (B, O) int32."""
+    o = tables.shape[0]
+    return tables[jnp.arange(o)[None, :], addr].astype(jnp.int32)

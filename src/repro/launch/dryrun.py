@@ -1,0 +1,246 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the production meshes need 512 placeholder host devices.
+
+For each cell:
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=..., out_shardings=...,
+                           donate_argnums=...).lower(*input_specs)
+        compiled = lowered.compile()
+        memory_analysis / cost_analysis / HLO-text roofline terms
+
+Results are cached incrementally in results/dryrun/<cell>.json so the sweep
+is restartable (the 40x2 grid takes a while on one CPU core).
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.config import SHAPES, TrainConfig, get_config, list_archs
+from repro.launch.mesh import make_mesh_from_config, mesh_config
+from repro.models import api
+from repro.roofline.analysis import (
+    model_flops_estimate, param_count, roofline_report,
+)
+from repro.sharding import (
+    batch_partition, cache_partition, named, param_partition,
+)
+from repro.train.step import make_serve_step, make_train_step
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+LM_ARCHS = (
+    "deepseek-v2-lite-16b", "qwen2-moe-a2.7b", "xlstm-350m",
+    "jamba-v0.1-52b", "whisper-small", "qwen2-vl-72b", "granite-34b",
+    "gemma3-12b", "llama3-8b", "yi-9b",
+)
+SHAPE_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def cell_id(arch: str, shape: str, mesh: str, variant: str = "") -> str:
+    base = f"{arch}__{shape}__{mesh}"
+    return f"{base}__{variant}" if variant else base
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, *,
+             force: bool = False, save_hlo: bool = False,
+             overrides=None, cfg_overrides=None, variant: str = "") -> dict:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    out_path = RESULTS_DIR / (
+        cell_id(arch, shape_name, mesh_name, variant) + ".json")
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg_overrides = dict(cfg_overrides)
+        moe_sharding = cfg_overrides.pop("moe_sharding", None)
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+        if moe_sharding and cfg.moe is not None:
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, sharding=moe_sharding))
+            cfg_overrides["moe_sharding"] = moe_sharding
+    shape = SHAPES[shape_name]
+    mcfg = mesh_config(multi_pod=(mesh_name == "multi"))
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "mesh_shape": list(mcfg.shape), "status": "running",
+        "variant": variant, "cfg_overrides": cfg_overrides or {},
+    }
+
+    skip = api.runnable_cells(cfg, [shape])[shape_name]
+    if skip:
+        record.update(status="skip", reason=skip)
+        out_path.write_text(json.dumps(record, indent=2))
+        return record
+
+    try:
+        from repro.sharding.ctx import active_mesh
+        t0 = time.time()
+        mesh = make_mesh_from_config(mcfg)
+        spec = api.param_spec(cfg, model_axis=mcfg.shape[-1])
+        pshard = named(mesh, param_partition(cfg, spec, mcfg))
+        ins = api.input_specs(cfg, shape)
+        tkw = dict(layer_mode="scan", remat="full")
+        tkw.update(overrides or {})
+        tcfg = TrainConfig(**tkw)
+
+        with active_mesh(mesh, data_axes=mcfg.data_axes):
+            if shape.kind in ("train", "prefill"):
+                from repro.optim.adamw import adamw_init_spec
+                opt_spec = adamw_init_spec(spec)
+                opt_shard = {
+                    "m": pshard, "v": pshard,
+                    "count": named(mesh, jax.sharding.PartitionSpec()),
+                    "master": jax.tree.map(
+                        lambda p, s: s if p.dtype == jax.numpy.bfloat16 else None,
+                        spec, pshard),
+                }
+                bshard = named(mesh, batch_partition(cfg, shape, mcfg, ins))
+                step = make_train_step(cfg, tcfg)
+                jfn = jax.jit(step,
+                              in_shardings=(pshard, opt_shard, bshard),
+                              out_shardings=(pshard, opt_shard, None),
+                              donate_argnums=(0, 1))
+                lowered = jfn.lower(spec, opt_spec, ins)
+            else:
+                sshard = named(mesh, cache_partition(cfg, shape, mcfg,
+                                                     ins["state"]))
+                tokshard = named(mesh, batch_partition(cfg, shape, mcfg,
+                                                       {"token": ins["token"]}))
+                step = make_serve_step(cfg)
+                jfn = jax.jit(step,
+                              in_shardings=(pshard, sshard, tokshard["token"]),
+                              out_shardings=(None, sshard),
+                              donate_argnums=(1,))
+                lowered = jfn.lower(spec, ins["state"], ins["token"])
+
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        try:
+            mem = compiled.memory_analysis()
+        except Exception:
+            mem = None
+        hlo = compiled.as_text()
+        rep = roofline_report(
+            arch=arch, shape=shape_name, mesh=mesh_name,
+            num_devices=mcfg.num_devices, hlo_text=hlo, cost=dict(cost),
+            memstats=mem, model_flops=model_flops_estimate(cfg, shape))
+
+        record.update(
+            status="ok",
+            lower_s=round(t1 - t0, 1),
+            compile_s=round(t2 - t1, 1),
+            num_devices=mcfg.num_devices,
+            param_count=param_count(cfg),
+            roofline=rep.to_dict(),
+            memory={
+                "peak_per_device": getattr(mem, "peak_memory_in_bytes", None),
+                "arguments_per_device": getattr(mem, "argument_size_in_bytes", None),
+                "temp_per_device": getattr(mem, "temp_size_in_bytes", None),
+                "output_per_device": getattr(mem, "output_size_in_bytes", None),
+            },
+            hlo_bytes=len(hlo),
+        )
+        if save_hlo:
+            (RESULTS_DIR / (cell_id(arch, shape_name, mesh_name, variant)
+                            + ".hlo")).write_text(hlo)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+    out_path.write_text(json.dumps(record, indent=2))
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--variant", default="",
+                    help="suffix for §Perf experiment records")
+    ap.add_argument("--attn-impl", default=None,
+                    choices=[None, "chunked", "flash"])
+    ap.add_argument("--moe-dispatch", default=None,
+                    choices=[None, "dense", "sparse_capacity"])
+    ap.add_argument("--head-dim-sharding", action="store_true")
+    ap.add_argument("--seq-shard-residual", action="store_true")
+    ap.add_argument("--attn-chunk", type=int, default=0)
+    ap.add_argument("--fused-qkv", action="store_true")
+    ap.add_argument("--moe-sharding", default=None, choices=[None, "ep", "tp"])
+    ap.add_argument("--remat", default=None, choices=[None, "full", "dots",
+                                                      "none"])
+    args = ap.parse_args()
+
+    cfg_over = {}
+    if args.attn_impl:
+        cfg_over["attn_impl"] = args.attn_impl
+    if args.moe_dispatch:
+        cfg_over["moe_dispatch"] = args.moe_dispatch
+    if args.head_dim_sharding:
+        cfg_over["head_dim_sharding"] = True
+    if args.seq_shard_residual:
+        cfg_over["seq_shard_residual"] = True
+    if args.attn_chunk:
+        cfg_over["attn_chunk"] = args.attn_chunk
+    if args.fused_qkv:
+        cfg_over["fused_qkv"] = True
+    if args.moe_sharding:
+        cfg_over["moe_sharding"] = args.moe_sharding
+    overrides = {"remat": args.remat} if args.remat else None
+
+    archs = LM_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = SHAPE_ORDER if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_ok = n_skip = n_err = 0
+    for mesh_name in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                t0 = time.time()
+                rec = run_cell(arch, shape_name, mesh_name, force=args.force,
+                               save_hlo=args.save_hlo, variant=args.variant,
+                               cfg_overrides=cfg_over or None,
+                               overrides=overrides)
+                dt = time.time() - t0
+                st = rec["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skip"
+                n_err += st == "error"
+                extra = ""
+                if st == "ok":
+                    r = rec["roofline"]
+                    peak = rec["memory"]["peak_per_device"]
+                    extra = (f"bottleneck={r['bottleneck']} "
+                             f"frac={r['roofline_fraction']:.3f} "
+                             f"peak={0 if peak is None else peak/2**30:.2f}GiB")
+                elif st == "error":
+                    extra = rec["error"][:160]
+                print(f"[{cell_id(arch, shape_name, mesh_name, args.variant)}]"
+                      f" {st} ({dt:.0f}s) {extra}", flush=True)
+    print(f"done: ok={n_ok} skip={n_skip} err={n_err}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level constant) so importing never touches jax device
+state.  Single pod: (16, 16) = 256 chips, axes (data, model).  Multi-pod:
+(2, 16, 16) = 512 chips, axes (pod, data, model) — the "pod" axis carries
+data parallelism across pods (gradients reduce over pod+data; within-pod
+axes map to the 2D ICI torus, the pod axis to DCI).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.config import MeshConfig, MULTI_POD, SINGLE_POD
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
+    return MULTI_POD if multi_pod else SINGLE_POD
+
+
+def make_mesh_from_config(mcfg: MeshConfig):
+    return jax.make_mesh(tuple(mcfg.shape), tuple(mcfg.axes))
+
+
+def make_host_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh over however many (fake) host devices exist — used by
+    multi-device tests."""
+    return jax.make_mesh(shape, axes)

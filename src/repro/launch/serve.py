@@ -1,0 +1,117 @@
+"""Serving launcher.
+
+Two modes, matching the paper's kind (ultra-low-latency inference):
+
+  * ``--mode lut``: train (or load) a NeuraLUT model, convert to truth
+    tables, and serve batched classification requests over the bit-exact
+    LUT path — the software twin of the generated FPGA.  Reports
+    p50/p95/p99 request latency and throughput.
+
+  * ``--mode lm``: decode tokens from a reduced LM with a KV cache
+    (greedy), demonstrating the serve_step path end-to-end.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def serve_lut(args) -> None:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.config import get_config
+    from repro.core import lut_infer as LI
+    from repro.core import model as M
+    from repro.core import truth_table as TT
+    from repro.core.train import train_neuralut
+    from repro.data import jsc_synthetic
+    from repro.kernels.ops import lut_lookup_op
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    xtr, ytr = jsc_synthetic(20000, seed=0)
+    xte, yte = jsc_synthetic(4000, seed=1)
+    if cfg.in_features != 16:
+        raise SystemExit("lut serving demo expects a JSC config")
+    print(f"training {cfg.name} ...", flush=True)
+    params, state, hist = train_neuralut(
+        cfg, xtr, ytr, xte, yte, epochs=args.epochs, batch=256, lr=2e-3,
+        log_every=max(1, args.epochs // 4))
+    statics = M.model_static(cfg)
+    tables = TT.convert(cfg, params, state, statics)
+    print(f"accuracy (quantized): {hist['test_acc_q'][-1]:.4f}", flush=True)
+
+    @jax.jit
+    def serve_batch(x):
+        codes = LI.input_codes(cfg, params, x)
+        out = LI.lut_forward(cfg, tables, statics, codes)
+        return jnp.argmax(LI.class_values(cfg, params, out), axis=-1)
+
+    # warmup + request loop
+    rng = np.random.default_rng(0)
+    lat = []
+    bsz = args.batch
+    _ = serve_batch(jnp.asarray(xte[:bsz])).block_until_ready()
+    n_req = args.requests
+    t_start = time.time()
+    for _ in range(n_req):
+        idx = rng.integers(0, len(xte), bsz)
+        t0 = time.perf_counter()
+        pred = serve_batch(jnp.asarray(xte[idx]))
+        pred.block_until_ready()
+        lat.append((time.perf_counter() - t0) * 1e3)
+    wall = time.time() - t_start
+    lat = np.sort(np.array(lat))
+    acc = float((np.asarray(serve_batch(jnp.asarray(xte))) == yte).mean())
+    print(f"served {n_req} requests x batch {bsz}: "
+          f"p50={lat[int(.5*n_req)]:.2f}ms p95={lat[int(.95*n_req)]:.2f}ms "
+          f"p99={lat[int(.99*n_req)-1]:.2f}ms "
+          f"throughput={n_req*bsz/wall:.0f} samples/s acc={acc:.4f}",
+          flush=True)
+
+
+def serve_lm(args) -> None:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.config import ShapeConfig, get_config
+    from repro.models import api
+    from repro.train.step import make_serve_step
+
+    cfg = get_config(args.arch, reduced=True)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    bsz, ctx = args.batch, 128
+    spec = api.decode_state_spec(cfg, bsz, ctx)
+    state = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec,
+                         is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    state["pos"] = jnp.int32(0)
+    step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+    tok = jnp.ones((bsz, 1), jnp.int32)
+    t0 = time.time()
+    n = args.requests
+    for i in range(n):
+        logits, state = step(params, state, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None] % cfg.vocab_size
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    print(f"decoded {n} steps x batch {bsz}: {dt/n*1e3:.2f} ms/token, "
+          f"{n*bsz/dt:.0f} tok/s", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="lut", choices=["lut", "lm"])
+    ap.add_argument("--arch", default="neuralut-jsc-2l")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--epochs", type=int, default=20)
+    args = ap.parse_args()
+    if args.mode == "lut":
+        serve_lut(args)
+    else:
+        serve_lm(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Unified model API: config -> (specs, init, loss, decode) + input specs.
+
+``input_specs(cfg, shape)`` produces ShapeDtypeStruct stand-ins for every
+model input of a given (architecture x shape) cell — weak-type-correct,
+shardable, no device allocation — consumed by the dry-run and the trainer.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from . import encdec, lm
+from .layers.common import init_from_spec
+
+Params = Dict[str, Any]
+
+
+def is_encdec(cfg: ModelConfig) -> bool:
+    return cfg.encoder is not None
+
+
+def param_spec(cfg: ModelConfig, *, model_axis: int = 16) -> Params:
+    if is_encdec(cfg):
+        return encdec.param_spec(cfg, model_axis=model_axis)
+    return lm.param_spec(cfg, model_axis=model_axis)
+
+
+def init_params(cfg: ModelConfig, key, *, model_axis: int = 1) -> Params:
+    return init_from_spec(param_spec(cfg, model_axis=model_axis), key)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch, *, layer_mode="scan",
+            remat="full", q_chunk: int = 512):
+    if is_encdec(cfg):
+        return encdec.encdec_loss(cfg, params, batch, layer_mode=layer_mode,
+                                  remat=remat, q_chunk=q_chunk)
+    return lm.lm_loss(cfg, params, batch, layer_mode=layer_mode, remat=remat,
+                      q_chunk=q_chunk)
+
+
+def decode_state_spec(cfg: ModelConfig, batch: int, seq: int) -> Params:
+    if is_encdec(cfg):
+        return encdec.decode_state_spec(cfg, batch, seq)
+    return lm.decode_state_spec(cfg, batch, seq)
+
+
+def decode_step(cfg: ModelConfig, params: Params, state: Params, token,
+                *, layer_mode="scan"):
+    if is_encdec(cfg):
+        return encdec.decode_step(cfg, params, state, token,
+                                  layer_mode=layer_mode)
+    return lm.decode_step(cfg, params, state, token, layer_mode=layer_mode)
+
+
+# ---------------------------------------------------------------------------
+# Input specs per (arch x shape) cell
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Model inputs for one cell.
+
+    train/prefill: token batch (+ modality stub embeddings).
+    decode: one new token + the decode state holding a seq_len-long context.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        batch: Dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        if cfg.vision is not None:
+            v = cfg.vision
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, v.num_patches, v.patch_dim), jnp.bfloat16)
+            batch["positions"] = jax.ShapeDtypeStruct((b, s, 3), i32)
+        if cfg.encoder is not None:
+            e = cfg.encoder
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, e.seq_len, e.feature_dim), jnp.bfloat16)
+        return batch
+    # decode
+    return {
+        "token": jax.ShapeDtypeStruct((b, 1), i32),
+        "state": decode_state_spec(cfg, b, s),
+    }
+
+
+def make_batch(cfg: ModelConfig, shape_or_specs, key) -> Dict[str, Any]:
+    """Materialize random data matching input_specs (for smoke tests)."""
+    specs = shape_or_specs if isinstance(shape_or_specs, dict) \
+        else input_specs(cfg, shape_or_specs)
+
+    def gen(path, sds):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        k = jax.random.fold_in(key, hash(name) % (2 ** 31))
+        if jnp.issubdtype(sds.dtype, jnp.integer):
+            if name == "pos":
+                return jnp.zeros((), jnp.int32)
+            return jax.random.randint(k, sds.shape, 0,
+                                      max(2, cfg.vocab_size), sds.dtype)
+        return (jax.random.normal(k, sds.shape, jnp.float32) * 0.1).astype(sds.dtype)
+
+    return jax.tree_util.tree_map_with_path(gen, specs)
+
+
+def runnable_cells(cfg: ModelConfig, shapes) -> Dict[str, str]:
+    """Which assigned shapes run for this arch; value '' = run, else skip
+    reason (recorded in DESIGN.md / EXPERIMENTS.md)."""
+    out = {}
+    for sh in shapes:
+        reason = ""
+        if sh.name == "long_500k" and not cfg.sub_quadratic:
+            reason = ("pure full-attention stack: 500k-token decode needs "
+                      "sub-quadratic sequence mixing (skip per assignment)")
+        out[sh.name] = reason
+    return out

@@ -1,0 +1,517 @@
+"""Grouped-query attention with flash-style q-chunking, sliding windows,
+ring-buffer KV caches, and cross-attention (whisper).
+
+TPU adaptation notes (DESIGN.md §Hardware-adaptation):
+  * Prefill attention is chunked over query blocks (one-level chunking with a
+    full-row stable softmax) so the per-layer working set is
+    O(q_chunk * kv_band) instead of O(S^2) — sized to VMEM-friendly tiles.
+  * Sliding-window layers attend over a *band* of KV per query chunk during
+    prefill and keep a ring-buffer cache of size ``window`` during decode, so
+    local layers have O(window) state — this is what makes the gemma3
+    long_500k decode shape feasible.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import AttentionConfig
+from repro.sharding.ctx import constrain
+from .rope import apply_mrope, apply_rope
+
+Params = Dict[str, jax.Array]
+
+NEG_INF = -2.0 ** 30
+
+
+def repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """(B, T, KV, D) -> (B, T, KV*n_rep, D).
+
+    Training-path GQA: KV heads are materialized to the full head count so
+    the head dim shards cleanly on the model axis even when
+    num_kv_heads < axis size (XLA broadcasts internally anyway; this makes
+    the layout explicit instead of letting GSPMD shard half a head)."""
+    if n_rep == 1:
+        return k
+    b, t, kv, d = k.shape
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, t, kv, n_rep, d))
+    return k.reshape(b, t, kv * n_rep, d)
+
+
+# ---------------------------------------------------------------------------
+# Params
+
+
+def attention_spec(cfg: AttentionConfig, d_model: int, dtype) -> Params:
+    return {
+        "wq": jax.ShapeDtypeStruct((d_model, cfg.q_dim), dtype),
+        "wk": jax.ShapeDtypeStruct((d_model, cfg.kv_dim), dtype),
+        "wv": jax.ShapeDtypeStruct((d_model, cfg.kv_dim), dtype),
+        "wo": jax.ShapeDtypeStruct((cfg.q_dim, d_model), dtype),
+    }
+
+
+def cross_attention_spec(cfg: AttentionConfig, d_model: int, dtype) -> Params:
+    return attention_spec(cfg, d_model, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Core grouped scaled-dot-product with banding
+
+
+def _sdpa(q, k, v, *, mask) -> jax.Array:
+    """q: (B, Lq, KV, G, D); k/v: (B, Lk, KV, D); mask: (B?, Lq, Lk) bool or None.
+
+    Returns (B, Lq, KV, G, D).  Softmax in fp32.
+    """
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,btkd->bkgqt", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        while mask.ndim < scores.ndim:
+            mask = mask[:, None]
+        scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgqt,btkd->bqkgd", w, v)
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, T, KV, D)
+    v: jax.Array,  # (B, T, KV, D)
+    *,
+    causal: bool,
+    window: int = 0,
+    q_chunk: int = 512,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Flash-style attention, chunked over query blocks.
+
+    For windowed (local) layers with self-attention (T == S and causal), only
+    the KV band [chunk_start - window, chunk_end) is touched per q-chunk.
+    """
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    kv = k.shape[2]
+    dv = v.shape[-1]  # value head dim may differ from query (MLA)
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, d)
+
+    if s % q_chunk != 0:
+        # pick the largest divisor of s not exceeding q_chunk (whisper's
+        # 1500-frame encoder: 500)
+        q_chunk = next((c for c in range(q_chunk, 0, -1) if s % c == 0), s)
+    if s <= q_chunk:
+        mask = _build_mask(s, t, causal=causal, window=window,
+                           q_offset=q_offset)
+        out = _sdpa(qg, k, v, mask=mask)
+        return out.reshape(b, s, h, dv)
+
+    nchunk = s // q_chunk
+    banded = window > 0 and causal and t == s and q_offset == 0
+    if banded:
+        # Band size: window rounded up to q_chunk + the chunk itself.
+        band = ((window + q_chunk - 1) // q_chunk) * q_chunk + q_chunk
+
+    qs = qg.reshape(b, nchunk, q_chunk, kv, g, d).transpose(1, 0, 2, 3, 4, 5)
+
+    def body(_, args):
+        ci, qc = args  # qc: (B, cq, KV, G, D)
+        start = ci * q_chunk
+        if banded:
+            kstart = jnp.maximum(start + q_chunk - band, 0)
+            kc = jax.lax.dynamic_slice_in_dim(k, kstart, band, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, kstart, band, axis=1)
+            rows = start + jnp.arange(q_chunk)
+            cols = kstart + jnp.arange(band)
+            m = (cols[None, :] <= rows[:, None]) & (
+                cols[None, :] > rows[:, None] - window)
+            out = _sdpa(qc, kc, vc, mask=m[None])
+        else:
+            rows = q_offset + start + jnp.arange(q_chunk)
+            cols = jnp.arange(t)
+            m = jnp.ones((q_chunk, t), bool)
+            if causal:
+                m &= cols[None, :] <= rows[:, None]
+            if window > 0:
+                m &= cols[None, :] > rows[:, None] - window
+            out = _sdpa(qc, k, v, mask=m[None])
+        return (), out
+
+    _, outs = jax.lax.scan(body, (), (jnp.arange(nchunk), qs))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, kv, g, dv)
+    return out.reshape(b, s, h, dv)
+
+
+def _pick_chunk(n: int, chunk: int) -> int:
+    if n % chunk == 0:
+        return chunk
+    return next((c for c in range(chunk, 0, -1) if n % c == 0), n)
+
+
+def _tile_mask(rows, cols, causal, window):
+    m = jnp.ones((rows.shape[0], cols.shape[0]), bool)
+    if causal:
+        m &= cols[None, :] <= rows[:, None]
+    if window > 0:
+        m &= cols[None, :] > rows[:, None] - window
+    return m
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_core(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, T, H, D)  (kv already repeated to H heads)
+    v: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Two-level flash attention: online softmax over KV tiles.
+
+    Beyond-paper §Perf optimization: the baseline one-level chunking
+    materializes (q_chunk, T) scores in HBM.  Here the working set per step
+    is one (q_chunk, kv_chunk) tile — VMEM-sized at chunk 128 — and a
+    custom VJP (the production flash contract) saves only (out, lse),
+    recomputing tiles in backward, so no per-tile stacks are saved for AD.
+    Tiles above the causal diagonal still execute (masked) to keep HLO trip
+    counts static for the roofline accounting.
+    """
+    out, _ = _flash_fwd_lse(q, k, v, causal, window, q_chunk, kv_chunk,
+                            q_offset)
+    return out
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, q_chunk=512,
+                    kv_chunk=512, q_offset=0):
+    """Keyword-friendly wrapper (custom_vjp needs positional nondiff args)."""
+    return _flash_core(q, k, v, causal, window, q_chunk, kv_chunk, q_offset)
+
+
+def _flash_fwd_lse(q, k, v, causal, window, q_chunk, kv_chunk, q_offset):
+    b, s, h, d = q.shape
+    dv = v.shape[-1]
+    t = k.shape[1]
+    q_chunk = _pick_chunk(s, q_chunk)
+    kv_chunk = _pick_chunk(t, kv_chunk)
+    nq, nk = s // q_chunk, t // kv_chunk
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+
+    qs = q.reshape(b, nq, q_chunk, h, d).transpose(1, 0, 2, 3, 4)
+    ks = k.reshape(b, nk, kv_chunk, h, d).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, nk, kv_chunk, h, dv).transpose(1, 0, 2, 3, 4)
+
+    def q_body(_, args):
+        qi, qc = args  # qc: (B, cq, H, D)
+        rows = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_body(carry, kv_args):
+            m_run, l_run, acc = carry
+            ki, kc, vc = kv_args
+            cols = ki * kv_chunk + jnp.arange(kv_chunk)
+            sc = jnp.einsum("bqhd,bthd->bhqt", qc, kc).astype(jnp.float32)
+            sc = sc * scale
+            msk = _tile_mask(rows, cols, causal, window)
+            sc = jnp.where(msk[None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhqt,bthd->bqhd", p.astype(qc.dtype), vc)
+            acc = acc * corr.transpose(0, 2, 1)[..., None].astype(acc.dtype) \
+                + pv.astype(jnp.float32)
+            return (m_new, l_new, acc), ()
+
+        m0 = jnp.full((b, h, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, q_chunk, h, dv), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_body, (m0, l0, a0), (jnp.arange(nk), ks, vs))
+        out = acc / jnp.maximum(l_f, 1e-30).transpose(0, 2, 1)[..., None]
+        lse = m_f + jnp.log(jnp.maximum(l_f, 1e-30))  # (B, H, cq)
+        return (), (out.astype(q.dtype), lse)
+
+    _, (outs, lses) = jax.lax.scan(q_body, (), (jnp.arange(nq), qs))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dv)
+    lse = lses.transpose(1, 2, 0, 3).reshape(b, h, s)
+    return out, lse
+
+
+def _flash_fwd_rule(q, k, v, causal, window, q_chunk, kv_chunk, q_offset):
+    out, lse = _flash_fwd_lse(q, k, v, causal, window, q_chunk, kv_chunk,
+                              q_offset)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd_rule(causal, window, q_chunk, kv_chunk, q_offset, res, dout):
+    """Tile-recomputing backward (flash contract): two passes, one producing
+    dq (outer loop over q tiles), one producing dk/dv (outer over kv tiles);
+    all accumulators are tile-sized."""
+    q, k, v, out, lse = res
+    b, s, h, d = q.shape
+    dv_dim = v.shape[-1]
+    t = k.shape[1]
+    q_chunk = _pick_chunk(s, q_chunk)
+    kv_chunk = _pick_chunk(t, kv_chunk)
+    nq, nk = s // q_chunk, t // kv_chunk
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1)  # (B, S, H)
+    qs = q.reshape(b, nq, q_chunk, h, d).transpose(1, 0, 2, 3, 4)
+    ks = k.reshape(b, nk, kv_chunk, h, d).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, nk, kv_chunk, h, dv_dim).transpose(1, 0, 2, 3, 4)
+    dos = dout.reshape(b, nq, q_chunk, h, dv_dim).transpose(1, 0, 2, 3, 4)
+    lses = lse.reshape(b, h, nq, q_chunk).transpose(2, 0, 1, 3)
+    deltas = delta.reshape(b, nq, q_chunk, h).transpose(1, 0, 3, 2)  # (nq,B,H,cq)
+
+    def p_tile(qc, kc, lse_c, rows, cols):
+        sc = jnp.einsum("bqhd,bthd->bhqt", qc, kc).astype(jnp.float32) * scale
+        msk = _tile_mask(rows, cols, causal, window)
+        sc = jnp.where(msk[None, None], sc, NEG_INF)
+        return jnp.exp(sc - lse_c[..., None])  # (B,H,cq,ct)
+
+    # pass 1: dq, outer over q tiles
+    def dq_body(_, args):
+        qi, qc, do_c, lse_c, dl_c = args
+        rows = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def inner(acc, kv_args):
+            ki, kc, vc = kv_args
+            cols = ki * kv_chunk + jnp.arange(kv_chunk)
+            p = p_tile(qc, kc, lse_c, rows, cols)
+            dp = jnp.einsum("bqhd,bthd->bhqt", do_c, vc).astype(jnp.float32)
+            ds = p * (dp - dl_c[..., None])
+            return acc + jnp.einsum("bhqt,bthd->bqhd", ds.astype(qc.dtype),
+                                    kc).astype(jnp.float32) * scale, ()
+
+        a0 = jnp.zeros((b, q_chunk, h, d), jnp.float32)
+        dq_c, _ = jax.lax.scan(inner, a0, (jnp.arange(nk), ks, vs))
+        return (), dq_c.astype(q.dtype)
+
+    _, dqs = jax.lax.scan(dq_body, (), (jnp.arange(nq), qs, dos, lses, deltas))
+    dq = dqs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, d)
+
+    # pass 2: dk/dv, outer over kv tiles
+    def dkv_body(_, args):
+        ki, kc, vc = args
+        cols = ki * kv_chunk + jnp.arange(kv_chunk)
+
+        def inner(carry, q_args):
+            dk_c, dv_c = carry
+            qi, qc, do_c, lse_c, dl_c = q_args
+            rows = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+            p = p_tile(qc, kc, lse_c, rows, cols)
+            dv_c = dv_c + jnp.einsum("bhqt,bqhd->bthd", p.astype(qc.dtype),
+                                     do_c).astype(jnp.float32)
+            dp = jnp.einsum("bqhd,bthd->bhqt", do_c, vc).astype(jnp.float32)
+            ds = p * (dp - dl_c[..., None])
+            dk_c = dk_c + jnp.einsum("bhqt,bqhd->bthd", ds.astype(qc.dtype),
+                                     qc).astype(jnp.float32) * scale
+            return (dk_c, dv_c), ()
+
+        z = (jnp.zeros((b, kv_chunk, h, d), jnp.float32),
+             jnp.zeros((b, kv_chunk, h, dv_dim), jnp.float32))
+        (dk_c, dv_c), _ = jax.lax.scan(
+            inner, z, (jnp.arange(nq), qs, dos, lses, deltas))
+        return (), (dk_c.astype(k.dtype), dv_c.astype(v.dtype))
+
+    _, (dks, dvs) = jax.lax.scan(dkv_body, (), (jnp.arange(nk), ks, vs))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(b, t, h, d)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(b, t, h, dv_dim)
+    return dq, dk, dv
+
+
+_flash_core.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def _build_mask(s, t, *, causal, window, q_offset):
+    if not causal and window <= 0:
+        return None
+    rows = q_offset + jnp.arange(s)
+    cols = jnp.arange(t)
+    m = jnp.ones((s, t), bool)
+    if causal:
+        m &= cols[None, :] <= rows[:, None]
+    if window > 0:
+        m &= cols[None, :] > rows[:, None] - window
+    return m[None]
+
+
+# ---------------------------------------------------------------------------
+# Full block: projections + rope + attention
+
+
+def _tile_kv_weight(w: jax.Array, kv: int, rep: int) -> jax.Array:
+    """(D, KV*hd) -> (D, KV*rep*hd): repeat each kv head's columns so the
+    projection directly produces full-head outputs (kv-major order, matching
+    repeat_kv)."""
+    d = w.shape[0]
+    hd = w.shape[1] // kv
+    w = w.reshape(d, kv, 1, hd)
+    w = jnp.broadcast_to(w, (d, kv, rep, hd))
+    return w.reshape(d, kv * rep * hd)
+
+
+def apply_attention(
+    p: Params,
+    cfg: AttentionConfig,
+    x: jax.Array,  # (B, S, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    positions: Optional[jax.Array] = None,
+    q_chunk: int = 512,
+    impl: str = "chunked",
+    head_dim_sharding: bool = False,
+    fused_qkv: bool = False,
+) -> jax.Array:
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    rep = cfg.num_heads // cfg.num_kv_heads
+    h = cfg.num_heads
+    if fused_qkv:
+        wk = _tile_kv_weight(p["wk"], cfg.num_kv_heads, rep)
+        wv = _tile_kv_weight(p["wv"], cfg.num_kv_heads, rep)
+        wqkv = jnp.concatenate([p["wq"], wk, wv], axis=1)
+        wqkv = constrain(wqkv, None, "model")
+        qkv = (x @ wqkv).reshape(b, s, 3, h, hd)
+        qkv = constrain(qkv, "batch", None, None, "model", None)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        q, k = _rope_qk(cfg, q, k, positions, b, s)
+    else:
+        q = (x @ p["wq"]).reshape(b, s, cfg.num_heads, hd)
+        k = (x @ p["wk"]).reshape(b, s, cfg.num_kv_heads, hd)
+        v = (x @ p["wv"]).reshape(b, s, cfg.num_kv_heads, hd)
+        q, k = _rope_qk(cfg, q, k, positions, b, s)
+        k = repeat_kv(k, rep)
+        v = repeat_kv(v, rep)
+    if head_dim_sharding:
+        # heads don't divide the model axis (whisper: 12 on 16): shard the
+        # head_dim instead of replicating all attention work (§Perf).
+        spec = ("batch", None, None, "model")
+    else:
+        spec = ("batch", None, "model", None)
+    q = constrain(q, *spec)
+    k = constrain(k, *spec)
+    v = constrain(v, *spec)
+    if impl == "flash":
+        o = flash_attention(q, k, v, causal=causal, window=window,
+                            q_chunk=q_chunk, kv_chunk=q_chunk)
+    else:
+        o = chunked_attention(q, k, v, causal=causal, window=window,
+                              q_chunk=q_chunk)
+    o = constrain(o, *spec)
+    return o.reshape(b, s, cfg.q_dim) @ p["wo"]
+
+
+def apply_cross_attention(
+    p: Params,
+    cfg: AttentionConfig,
+    x: jax.Array,       # (B, S, D) decoder states
+    enc: jax.Array,     # (B, T, D) encoder states
+    q_chunk: int = 512,
+    impl: str = "chunked",
+    head_dim_sharding: bool = False,
+) -> jax.Array:
+    b, s, _ = x.shape
+    t = enc.shape[1]
+    hd = cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, cfg.num_heads, hd)
+    k = (enc @ p["wk"]).reshape(b, t, cfg.num_kv_heads, hd)
+    v = (enc @ p["wv"]).reshape(b, t, cfg.num_kv_heads, hd)
+    rep = cfg.num_heads // cfg.num_kv_heads
+    k, v = repeat_kv(k, rep), repeat_kv(v, rep)
+    spec = ("batch", None, None, "model") if head_dim_sharding \
+        else ("batch", None, "model", None)
+    q = constrain(q, *spec)
+    k = constrain(k, *spec)
+    v = constrain(v, *spec)
+    if impl == "flash":
+        o = flash_attention(q, k, v, causal=False, q_chunk=q_chunk,
+                            kv_chunk=q_chunk)
+    else:
+        o = chunked_attention(q, k, v, causal=False, q_chunk=q_chunk)
+    return o.reshape(b, s, cfg.q_dim) @ p["wo"]
+
+
+def _rope_qk(cfg, q, k, positions, b, s):
+    if cfg.rope_kind == "none":
+        return q, k
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        if cfg.rope_kind == "mrope":
+            positions = jnp.broadcast_to(positions[..., None], (b, s, 3))
+    if cfg.rope_kind == "mrope":
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+# ---------------------------------------------------------------------------
+# Decode with KV cache (ring buffer for windowed layers)
+
+
+def cache_spec(cfg: AttentionConfig, batch: int, seq: int, window: int,
+               dtype) -> Params:
+    """Cache for one layer. Windowed layers keep a ring of size ``window``."""
+    t = window if window > 0 else seq
+    kshape = (batch, t, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jax.ShapeDtypeStruct(kshape, dtype),
+        "v": jax.ShapeDtypeStruct(kshape, dtype),
+    }
+
+
+def decode_attention(
+    p: Params,
+    cfg: AttentionConfig,
+    x: jax.Array,        # (B, 1, D)
+    cache: Params,       # {"k","v"}: (B, T, KV, hd)
+    pos: jax.Array,      # scalar int32: current position
+    *,
+    window: int = 0,
+):
+    """One decode step: write new KV at pos (mod window for local layers),
+    attend over the cache.  Returns (out (B,1,D), new_cache)."""
+    b = x.shape[0]
+    hd = cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, 1, cfg.num_heads, hd)
+    k = (x @ p["wk"]).reshape(b, 1, cfg.num_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(b, 1, cfg.num_kv_heads, hd)
+    posb = jnp.broadcast_to(pos.astype(jnp.int32), (b, 1))
+    if cfg.rope_kind == "mrope":
+        posb = jnp.broadcast_to(posb[..., None], (b, 1, 3))
+    q, k = _rope_qk(cfg, q, k, posb, b, 1)
+
+    t = cache["k"].shape[1]
+    slot = pos % jnp.int32(t) if window > 0 else pos
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+
+    kv = cfg.num_kv_heads
+    g = cfg.num_heads // kv
+    qg = q.reshape(b, 1, kv, g, hd)
+    cols = jnp.arange(t)
+    if window > 0:
+        # Ring buffer: slot i holds some position p with p % t == i; valid if
+        # that position is within (pos-window, pos].  Since t == window, a
+        # slot is valid iff it has been written: its position <= pos.
+        # Position held by slot i: the largest p <= pos with p % t == i.
+        valid = cols <= pos  # before first wrap some slots are unwritten
+        valid = valid | (pos >= t)
+        mask = valid[None, :]
+    else:
+        mask = (cols <= pos)[None, :]
+    out = _sdpa(qg, ck, cv, mask=mask)
+    out = out.reshape(b, 1, cfg.q_dim) @ p["wo"]
+    return out, {"k": ck, "v": cv}

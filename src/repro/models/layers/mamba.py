@@ -1,0 +1,156 @@
+"""Mamba (selective SSM) block, TPU-adapted.
+
+The CUDA reference implements the selective scan as a fused kernel with
+recomputation.  On TPU we express the recurrence
+
+    h_t = Abar_t * h_{t-1} + Bbar_t x_t        (diagonal A)
+
+as a first-order linear recurrence evaluated with a *chunked associative
+scan*: the sequence is split into chunks; within a chunk
+``jax.lax.associative_scan`` (log-depth, maps to efficient XLA while loops of
+matmul-free elementwise ops) computes the prefix recurrence, and a thin
+``lax.scan`` carries the (B, d_inner, d_state) state across chunks.  This
+bounds the materialized state tensor to chunk_len x state instead of
+seq x state — the TPU analogue of the paper's kernel blocking (DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SSMConfig
+from repro.sharding.ctx import constrain
+
+Params = Dict[str, jax.Array]
+
+
+def _dt_rank(cfg: SSMConfig, d_model: int) -> int:
+    return cfg.dt_rank or max(1, -(-d_model // 16))
+
+
+def mamba_spec(cfg: SSMConfig, d_model: int, dtype) -> Params:
+    di = cfg.expand * d_model
+    dr = _dt_rank(cfg, d_model)
+    n = cfg.d_state
+    return {
+        "w_in": jax.ShapeDtypeStruct((d_model, 2 * di), dtype),
+        "conv_w": jax.ShapeDtypeStruct((cfg.d_conv, di), dtype),
+        "conv_b": jax.ShapeDtypeStruct((di,), dtype),
+        "w_x": jax.ShapeDtypeStruct((di, dr + 2 * n), dtype),
+        "w_dt": jax.ShapeDtypeStruct((dr, di), dtype),
+        "dt_bias": jax.ShapeDtypeStruct((di,), jnp.float32),
+        "a_log": jax.ShapeDtypeStruct((di, n), jnp.float32),
+        "d_skip": jax.ShapeDtypeStruct((di,), jnp.float32),
+        "w_out": jax.ShapeDtypeStruct((di, d_model), dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array = None) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, C), w: (K, C). state: (B, K-1, C)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def _ssm_scan_chunked(abar, bx, h0, chunk: int):
+    """abar, bx: (B, S, DI, N) fp32; h0: (B, DI, N). Returns (ys, h_final)."""
+    b, s, di, n = abar.shape
+    if s % chunk:
+        raise ValueError(f"seq {s} % chunk {chunk}")
+    nchunks = s // chunk
+    abar = abar.reshape(b, nchunks, chunk, di, n).transpose(1, 0, 2, 3, 4)
+    bx = bx.reshape(b, nchunks, chunk, di, n).transpose(1, 0, 2, 3, 4)
+
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    def body(h, args):
+        ac, bc = args  # (B, chunk, DI, N)
+        aa, bb = jax.lax.associative_scan(comb, (ac, bc), axis=1)
+        hs = aa * h[:, None] + bb  # (B, chunk, DI, N)
+        return hs[:, -1], hs
+
+    h_fin, ys = jax.lax.scan(body, h0, (abar, bx))
+    ys = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, di, n)
+    return ys, h_fin
+
+
+def apply_mamba(p: Params, cfg: SSMConfig, x: jax.Array, *,
+                chunk: int = 256) -> jax.Array:
+    """Training/prefill forward. x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    di = cfg.expand * d
+    xz = x @ p["w_in"]
+    xi, z = xz[..., :di], xz[..., di:]
+    xi = constrain(xi, "batch", None, "model")
+    xi = jax.nn.silu(_causal_conv(xi, p["conv_w"], p["conv_b"]))
+
+    dbc = xi @ p["w_x"]
+    dr = _dt_rank(cfg, d)
+    n = cfg.d_state
+    dt = jax.nn.softplus(dbc[..., :dr] @ p["w_dt"]
+                         + p["dt_bias"]).astype(jnp.float32)  # (B,S,DI)
+    bmat = dbc[..., dr:dr + n].astype(jnp.float32)  # (B,S,N)
+    cmat = dbc[..., dr + n:].astype(jnp.float32)    # (B,S,N)
+
+    a = -jnp.exp(p["a_log"])  # (DI, N)
+    abar = jnp.exp(dt[..., None] * a)  # (B,S,DI,N)
+    bx = (dt * xi.astype(jnp.float32))[..., None] * bmat[..., None, :]
+
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    chunk = min(chunk, s)
+    hs, _ = _ssm_scan_chunked(abar, bx, h0, chunk)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, cmat)
+    y = y + xi.astype(jnp.float32) * p["d_skip"]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    return y @ p["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# Decode
+
+
+def mamba_state_spec(cfg: SSMConfig, d_model: int, batch: int, dtype) -> Params:
+    di = cfg.expand * d_model
+    return {
+        "h": jax.ShapeDtypeStruct((batch, di, cfg.d_state), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.d_conv - 1, di), dtype),
+    }
+
+
+def decode_mamba(p: Params, cfg: SSMConfig, x: jax.Array, state: Params
+                 ) -> Tuple[jax.Array, Params]:
+    """One token. x: (B, 1, D)."""
+    b, _, d = x.shape
+    di = cfg.expand * d
+    xz = x @ p["w_in"]
+    xi, z = xz[..., :di], xz[..., di:]
+    xi_conv = jax.nn.silu(_causal_conv(xi, p["conv_w"], p["conv_b"],
+                                       state["conv"]))
+    new_conv = jnp.concatenate([state["conv"][:, 1:], xi.astype(state["conv"].dtype)], axis=1)
+
+    dbc = xi_conv @ p["w_x"]
+    dr = _dt_rank(cfg, d)
+    n = cfg.d_state
+    dt = jax.nn.softplus(dbc[..., :dr] @ p["w_dt"] + p["dt_bias"]).astype(jnp.float32)
+    bmat = dbc[..., dr:dr + n].astype(jnp.float32)
+    cmat = dbc[..., dr + n:].astype(jnp.float32)
+
+    a = -jnp.exp(p["a_log"])
+    abar = jnp.exp(dt[:, 0, :, None] * a)  # (B,DI,N)
+    bx = (dt[:, 0] * xi_conv[:, 0].astype(jnp.float32))[..., None] * bmat[:, 0, None, :]
+    h = abar * state["h"] + bx
+    y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0])
+    y = y + xi_conv[:, 0].astype(jnp.float32) * p["d_skip"]
+    y = y[:, None].astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["w_out"], {"h": h, "conv": new_conv}

@@ -1,0 +1,223 @@
+"""Mixture-of-experts FFN with top-k routing, shared experts, load-balancing
+auxiliary loss, and expert-parallel sharding.
+
+Dispatch is dense (one-hot combine weights einsummed against all experts'
+outputs per token would be O(E) compute); instead we use the standard
+capacity-free "segment-sum via one-hot matmul" formulation:
+
+    gates  (T, E)  = top-k softmax weights (zeros elsewhere)
+    h_e    (E, T_ff) computed for all experts over all tokens is avoided by
+    contracting through the expert dim with einsum on a *stacked* expert
+    weight tensor — XLA partitions the expert dim across the model axis (EP),
+    turning the contraction into an all-to-all-free gather/psum pattern that
+    maps well to TPU all-reduce.
+
+This "dense-dispatch" form computes every expert on every token and masks by
+the gate — at 16-64 experts with top-4..6 this wastes compute but has zero
+routing irregularity (no sorting/ragged ops, ideal for the MXU and for GSPMD
+partitioning).  A capacity-based sparse dispatch is provided for production
+training (dispatch="sparse_capacity") and used by the perf hillclimb; see
+EXPERIMENTS.md §Perf.
+
+Expert count not divisible by the model axis (qwen2's 60) is padded with
+inert experts (zero gates); see pad_experts().
+
+router_type="neuralut" replaces the linear router with a NeuraLUT
+sparse-quantized sub-network router (the paper's technique applied to MoE —
+see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import MoEConfig
+
+Params = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# NeuraLUT router (the paper's technique applied to MoE routing)
+#
+# The router is a latency-critical d_model -> E function in serving; it fits
+# the paper's regime exactly: quantize a sparse subset of inputs (beta bits,
+# fan-in F per expert-logit "neuron") and hide a dense float sub-network
+# behind them.  After training it converts to one 2^{beta*F}-entry table per
+# expert via repro.core.truth_table — routing becomes integer lookups.
+
+ROUTER_BETA = 2
+ROUTER_FAN_IN = 6
+ROUTER_DEPTH = 2
+ROUTER_WIDTH = 8
+
+
+def neuralut_router_spec(d_model: int, num_experts: int, dtype=jnp.float32):
+    from repro.core.subnet import subnet_spec
+    spec = {
+        "log_s": jax.ShapeDtypeStruct((d_model,), jnp.float32),
+        "fn": subnet_spec(num_experts, ROUTER_FAN_IN, ROUTER_DEPTH,
+                          ROUTER_WIDTH, 0),
+    }
+    return spec
+
+
+def _router_conn(d_model: int, num_experts: int):
+    from repro.core.sparsity import random_connectivity
+    return random_connectivity(d_model, num_experts, ROUTER_FAN_IN,
+                               seed=(d_model * 7919 + num_experts))
+
+
+def apply_neuralut_router(p, xt: jax.Array) -> jax.Array:
+    """xt: (T, D) -> expert logits (T, E) through a quantized sparse
+    sub-network (trainable end-to-end; convertible to truth tables)."""
+    from repro.core import quant
+    from repro.core.subnet import subnet_apply
+    e = p["fn"]["layers"][0]["w"].shape[0]
+    d = xt.shape[-1]
+    conn = jnp.asarray(_router_conn(d, e))
+    xq = quant.quant_apply({"log_s": p["log_s"]}, xt.astype(jnp.float32),
+                           ROUTER_BETA)
+    gathered = xq[:, conn]  # (T, E, F)
+    return subnet_apply(p["fn"], gathered, 0)
+
+
+def padded_num_experts(cfg: MoEConfig, model_axis: int) -> int:
+    e = cfg.num_experts
+    if cfg.sharding == "tp":
+        return e
+    if e % model_axis == 0:
+        return e
+    return ((e + model_axis - 1) // model_axis) * model_axis
+
+
+def moe_spec(cfg: MoEConfig, d_model: int, dtype, model_axis: int = 16,
+             router_extra: Optional[Params] = None) -> Params:
+    e = padded_num_experts(cfg, model_axis)
+    ff = cfg.d_ff_expert
+    spec = {
+        "router": jax.ShapeDtypeStruct((d_model, e), jnp.float32),
+        "w_gate": jax.ShapeDtypeStruct((e, d_model, ff), dtype),
+        "w_up": jax.ShapeDtypeStruct((e, d_model, ff), dtype),
+        "w_down": jax.ShapeDtypeStruct((e, ff, d_model), dtype),
+    }
+    if cfg.num_shared > 0:
+        sff = cfg.d_ff_shared or cfg.d_ff_expert
+        spec.update({
+            "ws_gate": jax.ShapeDtypeStruct((d_model, cfg.num_shared * sff), dtype),
+            "ws_up": jax.ShapeDtypeStruct((d_model, cfg.num_shared * sff), dtype),
+            "ws_down": jax.ShapeDtypeStruct((cfg.num_shared * sff, d_model), dtype),
+        })
+    if cfg.router_type == "neuralut":
+        spec["router_nl"] = neuralut_router_spec(d_model, e)
+    elif router_extra:
+        spec["router_nl"] = router_extra
+    return spec
+
+
+def _topk_gates(logits: jax.Array, cfg: MoEConfig, e_padded: int
+                ) -> Tuple[jax.Array, jax.Array]:
+    """logits (T, E) -> (gates (T, E) with top-k softmax weights, aux loss)."""
+    if e_padded > cfg.num_experts:
+        # inert padding experts can never win
+        pad = jnp.full((logits.shape[0], e_padded - cfg.num_experts),
+                       -2.0 ** 30, logits.dtype)
+        logits = jnp.concatenate([logits[:, :cfg.num_experts], pad], axis=-1)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, cfg.top_k)  # (T, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+    gates = jnp.zeros_like(probs)
+    gates = jax.vmap(lambda g, i, w: g.at[i].set(w))(gates, top_i, top_w)
+    # Switch-style load-balance loss: E * sum_e (frac_tokens_e * mean_prob_e)
+    me = jnp.mean(probs, axis=0)
+    one_hot_top1 = jax.nn.one_hot(top_i[:, 0], probs.shape[-1], dtype=jnp.float32)
+    ce = jnp.mean(one_hot_top1, axis=0)
+    aux = probs.shape[-1] * jnp.sum(me * ce)
+    return gates.astype(jnp.float32), aux
+
+
+def apply_moe(
+    p: Params,
+    cfg: MoEConfig,
+    x: jax.Array,  # (B, S, D)
+    act,
+    *,
+    dispatch: str = "dense",
+    capacity_factor: float = 1.25,
+    router_fn=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,D), aux_loss scalar)."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    e = p["w_gate"].shape[0]
+
+    if router_fn is not None:
+        logits = router_fn(p.get("router_nl"), xt)
+    elif cfg.router_type == "neuralut":
+        logits = apply_neuralut_router(p["router_nl"], xt)
+    else:
+        logits = xt.astype(jnp.float32) @ p["router"]
+    gates, aux = _topk_gates(logits, cfg, e)
+
+    if dispatch == "dense":
+        out = _dense_dispatch(p, xt, gates, act)
+    elif dispatch == "sparse_capacity":
+        out = _capacity_dispatch(p, cfg, xt, gates, act, capacity_factor)
+    else:
+        raise ValueError(dispatch)
+
+    if "ws_gate" in p:
+        h = act(xt @ p["ws_gate"]) * (xt @ p["ws_up"])
+        out = out + h @ p["ws_down"]
+    return out.reshape(b, s, d), aux * cfg.aux_loss_coef
+
+
+def _dense_dispatch(p, xt, gates, act):
+    """Every expert runs on every token, masked by gate weight.  Regular,
+    MXU-friendly; compute O(E/topk) overhead traded for zero raggedness."""
+    # (T, D) x (E, D, F) -> (E, T, F)
+    h = jnp.einsum("td,edf->etf", xt, p["w_gate"])
+    u = jnp.einsum("td,edf->etf", xt, p["w_up"])
+    h = act(h) * u
+    o = jnp.einsum("etf,efd->etd", h, p["w_down"])  # (E, T, D)
+    return jnp.einsum("etd,te->td", o, gates.astype(o.dtype))
+
+
+def _capacity_dispatch(p, cfg, xt, gates, act, capacity_factor):
+    """Capacity-based sparse dispatch, scatter/gather form.
+
+    Each expert processes at most C = ceil(T/E * k * cf) tokens; overflow
+    drops to the residual path.  Dispatch uses scatter-add into an (E, C, D)
+    buffer and combine uses a (T, k) gather — O(T*k*D) data movement, unlike
+    the O(T*E*C*D) one-hot-matmul form (which the §Perf log shows blowing
+    the compute term 30x at 65k tokens/device).
+    """
+    t, d = xt.shape
+    e = p["w_gate"].shape[0]
+    k = cfg.top_k
+    cap = int(max(1, round(t / e * k * capacity_factor)))
+
+    # top-k expert ids per token from the gate weights
+    top_w, top_i = jax.lax.top_k(gates, k)  # (T, k)
+    # slot of each (token, choice) within its expert's capacity buffer
+    chosen = gates > 0  # (T, E)
+    pos_in_e = jnp.cumsum(chosen.astype(jnp.int32), axis=0) - 1  # (T, E)
+    slot = jnp.take_along_axis(pos_in_e, top_i, axis=1)  # (T, k)
+    keep = (slot < cap) & (top_w > 0)
+    slot_c = jnp.clip(slot, 0, cap - 1)
+
+    # scatter tokens into expert buffers: (E, C, D)
+    xe = jnp.zeros((e, cap, d), xt.dtype)
+    upd = jnp.where(keep[..., None], 1.0, 0.0).astype(xt.dtype) \
+        * xt[:, None, :]
+    xe = xe.at[top_i, slot_c].add(upd)
+
+    h = act(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    oe = jnp.einsum("ecf,efd->ecd", h, p["w_down"])  # (E, C, D)
+
+    # combine: gather each token's k expert outputs, weight, sum
+    y = oe[top_i, slot_c]  # (T, k, D)
+    w = jnp.where(keep, top_w, 0.0).astype(oe.dtype)
+    return jnp.einsum("tkd,tk->td", y, w)

@@ -1,0 +1,70 @@
+"""Rotary position embeddings: standard RoPE and qwen2-vl M-RoPE.
+
+M-RoPE splits the rotary dimensions into (temporal, height, width) sections;
+text tokens use identical position ids in all three sections (degenerating to
+standard RoPE), vision patches use their 3D coordinates.  The backbone here
+receives position ids of shape (batch, seq, 3); the vision stub supplies the
+patch coordinates.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim//2,) inverse frequencies, float32."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)  # (half,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., seq, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections: tuple) -> jax.Array:
+    """M-RoPE. x: (..., seq, heads, head_dim); positions3: (..., seq, 3).
+
+    ``sections`` gives the number of rotary frequency pairs assigned to each
+    of the 3 axes; sum(sections) == head_dim // 2.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)  # (half,)
+    # Build per-frequency position: frequencies are assigned to sections.
+    sec_id = jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)
+    ])  # (half,)
+    # positions3: (..., seq, 3) -> select per-frequency: (..., seq, half)
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        jnp.broadcast_to(sec_id, positions3.shape[:-1] + (half,)),
+        axis=-1,
+    )
+    angles = pos[..., None, :] * freqs  # (..., seq, 1, half) after expand
+    cos = jnp.cos(angles)
+    sin = jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def positions_for(attn_cfg, batch: int, seq: int, offset=0) -> jax.Array:
+    """Default position ids. For mrope, text-only ids (t=h=w=linear)."""
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (batch, seq)) if not hasattr(offset, "shape") \
+        else pos
+    if attn_cfg.rope_kind == "mrope":
+        return jnp.broadcast_to(pos[..., None], (batch, seq, 3))
+    return pos

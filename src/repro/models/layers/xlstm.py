@@ -1,0 +1,301 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential scan).
+
+mLSTM recurrence (per head, stabilized, following arXiv:2405.04517):
+
+    m_t = max(lf_t + m_{t-1}, li_t)                      (stabilizer)
+    C_t = exp(lf_t + m_{t-1} - m_t) C_{t-1} + exp(li_t - m_t) v_t k_t^T
+    n_t = exp(lf_t + m_{t-1} - m_t) n_{t-1} + exp(li_t - m_t) k_t
+    h_t = (C_t q_t) / max(|n_t . q_t|, exp(-m_t))
+
+Training uses a *chunkwise-parallel* form (intra-chunk quadratic attention
+with a decay mask + inter-chunk recurrent state), the TPU-native analogue of
+the paper's fused recurrence: all heavy math is chunk-sized matmuls for the
+MXU.  ``mlstm_recurrent`` is the step-by-step oracle used in tests and for
+decode.
+
+sLSTM has a true sequential dependency through its recurrent weights R, so it
+is evaluated with ``lax.scan`` over time (this is inherent to the
+architecture; see DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SSMConfig
+
+Params = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+
+
+def mlstm_spec(cfg: SSMConfig, d_model: int, dtype) -> Params:
+    di = int(cfg.proj_factor * d_model)
+    h = cfg.num_heads
+    return {
+        "w_up": jax.ShapeDtypeStruct((d_model, 2 * di), dtype),
+        "conv_w": jax.ShapeDtypeStruct((cfg.d_conv, di), dtype),
+        "conv_b": jax.ShapeDtypeStruct((di,), dtype),
+        "wq": jax.ShapeDtypeStruct((di, di), dtype),
+        "wk": jax.ShapeDtypeStruct((di, di), dtype),
+        "wv": jax.ShapeDtypeStruct((di, di), dtype),
+        "w_if": jax.ShapeDtypeStruct((di, 2 * h), jnp.float32),
+        "if_bias": jax.ShapeDtypeStruct((2 * h,), jnp.float32),
+        "skip": jax.ShapeDtypeStruct((di,), dtype),
+        "norm_g": jax.ShapeDtypeStruct((di,), dtype),
+        "w_down": jax.ShapeDtypeStruct((di, d_model), dtype),
+    }
+
+
+def _headwise_norm(x: jax.Array, g: jax.Array, nheads: int) -> jax.Array:
+    """GroupNorm with one group per head (affine g)."""
+    b, s, di = x.shape
+    xh = x.reshape(b, s, nheads, di // nheads).astype(jnp.float32)
+    mu = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    y = (xh - mu) * jax.lax.rsqrt(var + 1e-6)
+    return (y.reshape(b, s, di) * g.astype(jnp.float32)).astype(x.dtype)
+
+
+def _qkv_gates(p, cfg, x):
+    from .mamba import _causal_conv
+    b, s, _ = x.shape
+    di = p["wq"].shape[0]
+    h = cfg.num_heads
+    dh = di // h
+    up = x @ p["w_up"]
+    xi, z = up[..., :di], up[..., di:]
+    xc = jax.nn.silu(_causal_conv(xi, p["conv_w"], p["conv_b"]))
+    q = (xc @ p["wq"]).reshape(b, s, h, dh)
+    k = (xc @ p["wk"]).reshape(b, s, h, dh) / jnp.sqrt(dh).astype(x.dtype)
+    v = (xi @ p["wv"]).reshape(b, s, h, dh)
+    gates = xc @ p["w_if"] + p["if_bias"]  # (B,S,2H) fp32
+    li = gates[..., :h].astype(jnp.float32)              # log input gate
+    lf = jax.nn.log_sigmoid(gates[..., h:].astype(jnp.float32))  # log forget
+    return xi, z, q, k, v, li, lf
+
+
+def mlstm_chunkwise(q, k, v, li, lf, *, chunk: int = 128):
+    """Chunkwise-parallel stabilized mLSTM.
+
+    q,k,v: (B,S,H,dh); li,lf: (B,S,H).  Returns h: (B,S,H,dh).
+    """
+    b, s, h, dh = q.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    # reshape to (B, nc, W, H, ...)
+    rs = lambda x: x.reshape((b, nc, chunk) + x.shape[2:])
+    q, k, v, li, lf = map(rs, (q, k, v, li, lf))
+
+    # cumulative log-forget within chunk: bcum[j] = sum_{u<=j} lf_u
+    bcum = jnp.cumsum(lf, axis=2)  # (B,nc,W,H)
+    btot = bcum[:, :, -1]  # (B,nc,H)
+
+    def body(carry, xs):
+        c_prev, n_prev, m_prev = carry
+        qc, kc, vc, lic, bc, bt = xs
+        # intra-chunk log weights: lw[j,u] = bc[j] - bc[u] + li[u], u <= j
+        lw = bc[:, :, None, :] - bc[:, None, :, :] + lic[:, None, :, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        lw = jnp.where(tri[None, :, :, None], lw, -jnp.inf)
+        # inter-chunk log decay for row j: bc[j] + m_prev
+        l_inter = bc + m_prev[:, None, :]  # (B,W,H)
+        m_intra = jnp.max(lw, axis=2)  # (B,W,H)
+        m_cur = jnp.maximum(l_inter, m_intra)  # row stabilizer (B,W,H)
+        wts = jnp.exp(lw - m_cur[:, :, None, :])  # (B,W,W,H)
+        scores = jnp.einsum("bwhd,buhd->bwuh", qc.astype(jnp.float32),
+                            kc.astype(jnp.float32))
+        intra = jnp.einsum("bwuh,bwuh,buhd->bwhd", scores, wts,
+                           vc.astype(jnp.float32))
+        inter_scale = jnp.exp(l_inter - m_cur)  # (B,W,H)
+        inter = jnp.einsum("bwhd,bhde->bwhe", qc.astype(jnp.float32),
+                           c_prev) * inter_scale[..., None]
+        num = intra + inter
+        # normalizer vector n
+        n_intra = jnp.einsum("bwuh,buhd->bwhd", wts, kc.astype(jnp.float32))
+        n_vec = n_intra + n_prev[:, None] * inter_scale[..., None]
+        qdot = jnp.abs(jnp.einsum("bwhd,bwhd->bwh", n_vec,
+                                  qc.astype(jnp.float32)))
+        denom = jnp.maximum(qdot, jnp.exp(-m_cur))
+        hc = num / denom[..., None]
+        # chunk-final state update (stabilized at m_new)
+        m_new = jnp.maximum(bt + m_prev, jnp.max(bt[:, None] - bc + lic, axis=1))
+        dec_state = jnp.exp(bt + m_prev - m_new)  # (B,H)
+        lk = bt[:, None] - bc + lic  # (B,W,H) log weight of k_u into state
+        kw = jnp.exp(lk - m_new[:, None])
+        c_new = dec_state[:, :, None, None] * c_prev + jnp.einsum(
+            "bwh,bwhd,bwhe->bhde", kw, kc.astype(jnp.float32),
+            vc.astype(jnp.float32))
+        n_new = dec_state[:, :, None] * n_prev + jnp.einsum(
+            "bwh,bwhd->bhd", kw, kc.astype(jnp.float32))
+        return (c_new, n_new, m_new), hc
+
+    c0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, h, dh), jnp.float32)
+    m0 = jnp.full((b, h), -jnp.inf, jnp.float32)
+    xs = (q.transpose(1, 0, 2, 3, 4), k.transpose(1, 0, 2, 3, 4),
+          v.transpose(1, 0, 2, 3, 4), li.transpose(1, 0, 2, 3),
+          bcum.transpose(1, 0, 2, 3), btot.transpose(1, 0, 2))
+    _, hs = jax.lax.scan(body, (c0, n0, m0), xs)
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dh)
+    return hs
+
+
+def mlstm_recurrent_step(c, n, m, q, k, v, li, lf):
+    """Oracle/decode step. c: (B,H,dh,dh) n: (B,H,dh) m: (B,H);
+    q,k,v: (B,H,dh); li,lf: (B,H)."""
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    m_new = jnp.maximum(lf + m, li)
+    fg = jnp.exp(lf + m - m_new)[..., None]
+    ig = jnp.exp(li - m_new)[..., None]
+    c_new = fg[..., None] * c + ig[..., None] * (vf[..., None] * kf[..., None, :])
+    n_new = fg * n + ig * kf
+    num = jnp.einsum("bhde,bhe->bhd", c_new, qf)
+    qdot = jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, qf))
+    denom = jnp.maximum(qdot, jnp.exp(-m_new))
+    return c_new, n_new, m_new, num / denom[..., None]
+
+
+def apply_mlstm(p: Params, cfg: SSMConfig, x: jax.Array, *,
+                chunk: int = 128) -> jax.Array:
+    xi, z, q, k, v, li, lf = _qkv_gates(p, cfg, x)
+    hs = mlstm_chunkwise(q, k, v, li, lf, chunk=chunk)
+    b, s, h, dh = hs.shape
+    hs = hs.reshape(b, s, h * dh).astype(x.dtype)
+    hs = _headwise_norm(hs, p["norm_g"], cfg.num_heads)
+    hs = hs + xi * p["skip"]
+    out = hs * jax.nn.silu(z)
+    return out @ p["w_down"]
+
+
+def mlstm_state_spec(cfg: SSMConfig, d_model: int, batch: int, dtype) -> Params:
+    di = int(cfg.proj_factor * d_model)
+    h = cfg.num_heads
+    dh = di // h
+    return {
+        "c": jax.ShapeDtypeStruct((batch, h, dh, dh), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, h, dh), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, h), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.d_conv - 1, di), dtype),
+    }
+
+
+def decode_mlstm(p: Params, cfg: SSMConfig, x: jax.Array, state: Params
+                 ) -> Tuple[jax.Array, Params]:
+    from .mamba import _causal_conv
+    b, _, _ = x.shape
+    di = p["wq"].shape[0]
+    h = cfg.num_heads
+    dh = di // h
+    up = x @ p["w_up"]
+    xi, z = up[..., :di], up[..., di:]
+    xc = jax.nn.silu(_causal_conv(xi, p["conv_w"], p["conv_b"], state["conv"]))
+    new_conv = jnp.concatenate([state["conv"][:, 1:],
+                                xi.astype(state["conv"].dtype)], axis=1)
+    q = (xc @ p["wq"]).reshape(b, h, dh)
+    k = ((xc @ p["wk"]) / jnp.sqrt(dh).astype(x.dtype)).reshape(b, h, dh)
+    v = (xi @ p["wv"]).reshape(b, h, dh)
+    gates = (xc @ p["w_if"] + p["if_bias"])[:, 0]
+    li = gates[..., :h].astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(gates[..., h:].astype(jnp.float32))
+    c, n, m, hv = mlstm_recurrent_step(state["c"], state["n"], state["m"],
+                                       q[:, 0] if q.ndim == 4 else q,
+                                       k[:, 0] if k.ndim == 4 else k,
+                                       v[:, 0] if v.ndim == 4 else v, li, lf)
+    hv = hv.reshape(b, 1, di).astype(x.dtype)
+    hv = _headwise_norm(hv, p["norm_g"], cfg.num_heads)
+    hv = hv + xi * p["skip"]
+    out = hv * jax.nn.silu(z)
+    return out @ p["w_down"], {"c": c, "n": n, "m": m, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+
+
+def slstm_spec(cfg: SSMConfig, d_model: int, dtype) -> Params:
+    h = cfg.num_heads
+    dh = d_model // h
+    return {
+        # input projections for gates i, f, z, o
+        "w_gates": jax.ShapeDtypeStruct((d_model, 4 * d_model), dtype),
+        # per-head recurrent weights for each gate: (4, H, dh, dh)
+        "r_gates": jax.ShapeDtypeStruct((4, h, dh, dh), dtype),
+        "bias": jax.ShapeDtypeStruct((4 * d_model,), jnp.float32),
+        "norm_g": jax.ShapeDtypeStruct((d_model,), dtype),
+        "w_out": jax.ShapeDtypeStruct((d_model, d_model), dtype),
+    }
+
+
+def slstm_state_spec(cfg: SSMConfig, d_model: int, batch: int, dtype) -> Params:
+    h = cfg.num_heads
+    dh = d_model // h
+    sh = (batch, h, dh)
+    return {
+        "c": jax.ShapeDtypeStruct(sh, jnp.float32),
+        "n": jax.ShapeDtypeStruct(sh, jnp.float32),
+        "m": jax.ShapeDtypeStruct(sh, jnp.float32),
+        "h": jax.ShapeDtypeStruct(sh, jnp.float32),
+    }
+
+
+def _slstm_step(p, cfg, state, xw):
+    """xw: (B, 4*D) pre-computed input projection for this step."""
+    h_heads = cfg.num_heads
+    bsz = xw.shape[0]
+    d = xw.shape[-1] // 4
+    dh = d // h_heads
+    hprev = state["h"]  # (B,H,dh)
+    rec = jnp.einsum("bhd,ghde->bghe", hprev.astype(p["r_gates"].dtype),
+                     p["r_gates"])  # (B,4,H,dh)
+    z = xw.reshape(bsz, 4, h_heads, dh) + rec.astype(jnp.float32)
+    li, lf_raw, zt, ot = z[:, 0], z[:, 1], z[:, 2], z[:, 3]
+    lf = jax.nn.log_sigmoid(lf_raw)
+    m_new = jnp.maximum(lf + state["m"], li)
+    fg = jnp.exp(lf + state["m"] - m_new)
+    ig = jnp.exp(li - m_new)
+    c_new = fg * state["c"] + ig * jnp.tanh(zt)
+    n_new = fg * state["n"] + ig
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1.0)
+    return {"c": c_new, "n": n_new, "m": m_new, "h": h_new}
+
+
+def apply_slstm(p: Params, cfg: SSMConfig, x: jax.Array) -> jax.Array:
+    """Sequential scan over time. x: (B, S, D)."""
+    b, s, d = x.shape
+    xw = (x @ p["w_gates"]).astype(jnp.float32) + p["bias"]  # (B,S,4D)
+    state = {
+        "c": jnp.zeros((b, cfg.num_heads, d // cfg.num_heads), jnp.float32),
+        "n": jnp.zeros((b, cfg.num_heads, d // cfg.num_heads), jnp.float32),
+        "m": jnp.full((b, cfg.num_heads, d // cfg.num_heads), -jnp.inf),
+        "h": jnp.zeros((b, cfg.num_heads, d // cfg.num_heads), jnp.float32),
+    }
+
+    def body(st, xt):
+        st2 = _slstm_step(p, cfg, st, xt)
+        return st2, st2["h"]
+
+    _, hs = jax.lax.scan(body, state, xw.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    from .common import apply_norm
+    hs = apply_norm({"g": p["norm_g"], "b": jnp.zeros_like(p["norm_g"])},
+                    hs, "layernorm")
+    return hs @ p["w_out"]
+
+
+def decode_slstm(p: Params, cfg: SSMConfig, x: jax.Array, state: Params
+                 ) -> Tuple[jax.Array, Params]:
+    b, _, d = x.shape
+    xw = (x[:, 0] @ p["w_gates"]).astype(jnp.float32) + p["bias"]
+    st = _slstm_step(p, cfg, state, xw)
+    hs = st["h"].reshape(b, 1, d).astype(x.dtype)
+    from .common import apply_norm
+    hs = apply_norm({"g": p["norm_g"], "b": jnp.zeros_like(p["norm_g"])},
+                    hs, "layernorm")
+    return hs @ p["w_out"], st

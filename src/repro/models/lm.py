@@ -1,0 +1,470 @@
+"""Decoder-only LM assembly: embeds -> repeated block pattern -> head.
+
+Covers dense / moe / ssm / hybrid / vlm families.  Whisper (audio enc-dec)
+lives in ``encdec.py`` and reuses the same block machinery.
+
+Layer stacking: per-pattern-position parameter *stacks* with leading dim
+``pattern_repeat``.  ``layer_mode="scan"`` runs a ``lax.scan`` over the
+repeat dim (production: small HLO, fast compile); ``layer_mode="unroll"``
+runs a Python loop over the same stacked params (used to validate the
+roofline accounting — identical pytree, identical math).
+
+Embeddings:
+  * untied: input table sharded on d_model (pure gather, no collective);
+    separate output head sharded on vocab.
+  * tied: one table sharded on vocab; the input side uses a chunked one-hot
+    matmul (psum over the model axis) to avoid gathering a sharded table.
+
+The loss is computed in vocab-sharded chunks over the sequence so the full
+(tokens x vocab) logits tensor never materializes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import LayerSpec, ModelConfig
+from repro.sharding.ctx import constrain
+from .layers import attention as attn_lib
+from .layers import mamba as mamba_lib
+from .layers import mla as mla_lib
+from .layers import moe as moe_lib
+from .layers import xlstm as xlstm_lib
+from .layers.common import (
+    activation, apply_mlp, apply_norm, dtype_of, mlp_spec, norm_spec,
+)
+
+Params = Dict[str, Any]
+
+LOSS_CHUNK = 512
+EMBED_CHUNK = 2048
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+
+
+def _mixer_spec(spec: LayerSpec, cfg: ModelConfig, dtype) -> Params:
+    a = cfg.attention
+    if spec.mixer == "attn":
+        if a.kind == "mla":
+            return mla_lib.mla_spec(a, cfg.d_model, dtype)
+        return attn_lib.attention_spec(a, cfg.d_model, dtype)
+    if spec.mixer == "mamba":
+        return mamba_lib.mamba_spec(cfg.ssm, cfg.d_model, dtype)
+    if spec.mixer == "mlstm":
+        return xlstm_lib.mlstm_spec(cfg.ssm, cfg.d_model, dtype)
+    if spec.mixer == "slstm":
+        return xlstm_lib.slstm_spec(cfg.ssm, cfg.d_model, dtype)
+    raise ValueError(spec.mixer)
+
+
+def _ffn_spec(spec: LayerSpec, cfg: ModelConfig, dtype, model_axis: int
+              ) -> Optional[Params]:
+    if spec.ffn == "none":
+        return None
+    if spec.ffn == "dense":
+        return mlp_spec(cfg.d_model, cfg.d_ff, dtype)
+    return moe_lib.moe_spec(cfg.moe, cfg.d_model, dtype, model_axis)
+
+
+def block_spec(spec: LayerSpec, cfg: ModelConfig, dtype, model_axis: int
+               ) -> Params:
+    p: Params = {
+        "ln1": norm_spec(cfg.d_model, cfg.norm, dtype),
+        "mixer": _mixer_spec(spec, cfg, dtype),
+    }
+    ffn = _ffn_spec(spec, cfg, dtype, model_axis)
+    if ffn is not None:
+        p["ln2"] = norm_spec(cfg.d_model, cfg.norm, dtype)
+        p["ffn"] = ffn
+    return p
+
+
+def _stack(tree: Params, n: int) -> Params:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree)
+
+
+def param_spec(cfg: ModelConfig, *, model_axis: int = 16) -> Params:
+    """Full parameter pytree as ShapeDtypeStructs.
+
+    Layer params: ``blocks`` is a list over pattern positions; each entry is
+    the block pytree stacked over ``pattern_repeat``.  Dense-prefix overrides
+    (deepseek layer 0) are kept as separate unstacked entries in
+    ``prefix_blocks``.
+    """
+    dtype = dtype_of(cfg.dtype)
+    rep = cfg.pattern_repeat
+    p: Params = {}
+    v, d = cfg.vocab_size, cfg.d_model
+    p["embed"] = jax.ShapeDtypeStruct((v, d), dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = jax.ShapeDtypeStruct((d, v), dtype)
+    p["final_norm"] = norm_spec(d, cfg.norm, dtype)
+
+    # Dense-prefix layers replace the first layers of the repeated pattern.
+    n_prefix = cfg.num_dense_prefix
+    p["prefix_blocks"] = [
+        block_spec(LayerSpec(mixer=s.mixer, ffn="dense", window=s.window),
+                   cfg, dtype, model_axis)
+        for s in cfg.layer_specs()[:n_prefix]
+    ]
+
+    p["blocks"] = []
+    for j, spec in enumerate(cfg.pattern):
+        stack = block_spec(spec, cfg, dtype, model_axis)
+        p["blocks"].append(_stack(stack, rep))
+
+    if cfg.vision is not None:
+        p["vision_proj"] = jax.ShapeDtypeStruct(
+            (cfg.vision.patch_dim, d), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head / loss
+
+
+def embed_tokens(cfg: ModelConfig, params: Params, tokens: jax.Array
+                 ) -> jax.Array:
+    dtype = dtype_of(cfg.dtype)
+    emb = params["embed"]
+    if not cfg.tie_embeddings:
+        return emb[tokens]
+    # Tied: table is vocab-sharded; chunked one-hot matmul.
+    b, s = tokens.shape
+    flat = tokens.reshape(-1)
+    n = flat.shape[0]
+    chunk = min(EMBED_CHUNK, n)
+    pad = (-n) % chunk
+    flat = jnp.pad(flat, (0, pad))
+    nk = flat.shape[0] // chunk
+
+    @jax.checkpoint
+    def body(_, tk):
+        oh = jax.nn.one_hot(tk, cfg.vocab_size, dtype=dtype)
+        return (), oh @ emb
+
+    _, xs = jax.lax.scan(body, (), flat.reshape(nk, chunk))
+    x = xs.reshape(-1, cfg.d_model)[:n]
+    return x.reshape(b, s, cfg.d_model)
+
+
+def _head_logits(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
+    """x: (..., D) -> logits (..., V) (vocab dim sharded on model)."""
+    if cfg.tie_embeddings:
+        return x @ params["embed"].T
+    return x @ params["lm_head"]
+
+
+def chunked_ce_loss(cfg: ModelConfig, params: Params, x: jax.Array,
+                    labels: jax.Array) -> jax.Array:
+    """Mean cross-entropy without materializing (tokens, vocab) logits."""
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+    lf = labels.reshape(b * s)
+    n = xf.shape[0]
+    chunk = min(LOSS_CHUNK * max(1, b), n)
+    pad = (-n) % chunk
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+        lf = jnp.pad(lf, (0, pad), constant_values=-1)
+    nk = xf.shape[0] // chunk
+    iota_v = jax.lax.broadcasted_iota(jnp.int32, (1, cfg.vocab_size), 1)
+
+    @jax.checkpoint
+    def body(tot, args):
+        # rematerialized: the (chunk, vocab) logits are recomputed in the
+        # backward pass instead of being saved across all chunks.
+        xc, lc = args
+        logits = _head_logits(cfg, params, xc).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.sum(jnp.where(iota_v == lc[:, None], logits, 0.0), axis=-1)
+        valid = lc >= 0
+        return tot + jnp.sum(jnp.where(valid, lse - ll, 0.0)), ()
+
+    tot, _ = jax.lax.scan(
+        body, jnp.float32(0),
+        (xf.reshape(nk, chunk, d), lf.reshape(nk, chunk)))
+    return tot / n
+
+
+# ---------------------------------------------------------------------------
+# Block application
+
+
+def _resolve_window(spec: LayerSpec, cfg: ModelConfig) -> int:
+    if spec.window is not None:
+        return spec.window
+    return cfg.attention.window
+
+
+def apply_block(spec: LayerSpec, cfg: ModelConfig, p: Params, x: jax.Array,
+                *, positions=None, q_chunk: int = 512) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x, moe_aux_loss)."""
+    a = cfg.attention
+    if cfg.attn_chunk:
+        q_chunk = cfg.attn_chunk
+    aux = jnp.float32(0)
+    if cfg.seq_shard_residual:
+        x = constrain(x, "batch", "model", None)
+    else:
+        x = constrain(x, "batch", None, None)
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    if spec.mixer == "attn":
+        if a.kind == "mla":
+            h = mla_lib.apply_mla(p["mixer"], a, h, q_chunk=q_chunk,
+                                  impl=cfg.attn_impl)
+        else:
+            h = attn_lib.apply_attention(
+                p["mixer"], a, h, causal=True,
+                window=_resolve_window(spec, cfg), positions=positions,
+                q_chunk=q_chunk, impl=cfg.attn_impl,
+                head_dim_sharding=cfg.head_dim_sharding,
+                fused_qkv=cfg.fused_qkv)
+    elif spec.mixer == "mamba":
+        h = mamba_lib.apply_mamba(p["mixer"], cfg.ssm, h)
+    elif spec.mixer == "mlstm":
+        h = xlstm_lib.apply_mlstm(p["mixer"], cfg.ssm, h)
+    elif spec.mixer == "slstm":
+        h = xlstm_lib.apply_slstm(p["mixer"], cfg.ssm, h)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + h
+    if spec.ffn != "none":
+        h = apply_norm(p["ln2"], x, cfg.norm)
+        if spec.ffn == "dense":
+            h = apply_mlp(p["ffn"], h, cfg.act, fused=cfg.fused_qkv)
+        else:
+            h, aux = moe_lib.apply_moe(p["ffn"], cfg.moe, h,
+                                       activation(cfg.act),
+                                       dispatch=cfg.moe_dispatch)
+        x = x + h
+    return x, aux
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)  # "full"
+
+
+def apply_stack(cfg: ModelConfig, params: Params, x: jax.Array, *,
+                positions=None, layer_mode: str = "scan",
+                remat: str = "full", q_chunk: int = 512) -> Tuple[jax.Array, jax.Array]:
+    """Run all layers. Returns (x, total_moe_aux)."""
+    aux_total = jnp.float32(0)
+    n_prefix = cfg.num_dense_prefix
+    specs = cfg.layer_specs()
+
+    for i, bp in enumerate(params["prefix_blocks"]):
+        s = specs[i]
+        s = LayerSpec(mixer=s.mixer, ffn="dense", window=s.window)
+        fn = _remat(
+            functools.partial(apply_block, s, cfg, positions=positions,
+                              q_chunk=q_chunk), remat)
+        x, aux = fn(bp, x)
+        aux_total += aux
+
+    rep = cfg.pattern_repeat
+
+    def superblock(x_in, stacks_r):
+        """Apply one repeat of the pattern. stacks_r: list of per-position
+        param trees (unstacked)."""
+        aux_sb = jnp.float32(0)
+        for j, spec in enumerate(cfg.pattern):
+            fn = _remat(
+                functools.partial(apply_block, spec, cfg, positions=positions,
+                                  q_chunk=q_chunk), remat)
+            x_in, aux = fn(stacks_r[j], x_in)
+            aux_sb += aux
+        return x_in, aux_sb
+
+    if layer_mode == "unroll":
+        for r in range(rep):
+            stacks_r = [jax.tree.map(lambda a: a[r], params["blocks"][j])
+                        for j in range(len(cfg.pattern))]
+            # Skip the repeats fully covered by prefix overrides.
+            if (r + 1) * len(cfg.pattern) <= n_prefix:
+                continue
+            x, aux = superblock(x, stacks_r)
+            aux_total += aux
+    else:
+        def body(carry, stacks_r):
+            x_c, aux_c = carry
+            x_c, aux = superblock(x_c, stacks_r)
+            return (x_c, aux_c + aux), ()
+
+        # note: prefix layers (< len(pattern)) already applied above; the
+        # scan still runs the full stack — prefix configs therefore restrict
+        # num_dense_prefix < len(pattern) so repeat 0 is only partially
+        # overridden. We handle the common case num_dense_prefix == 1 with
+        # pattern length 1 by skipping repeat 0's slot 0 via masking below.
+        stacks = params["blocks"]
+        if n_prefix:
+            # drop the first n_prefix layers from the scan by slicing the
+            # repeat dim when the pattern length divides n_prefix cleanly.
+            assert len(cfg.pattern) == 1, (
+                "num_dense_prefix requires pattern length 1")
+            stacks = [jax.tree.map(lambda a: a[n_prefix:], stacks[0])]
+        (x, aux), _ = jax.lax.scan(body, (x, aux_total), stacks)
+        aux_total = aux
+
+    return x, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Train-mode forward + loss
+
+
+def lm_loss(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array], *,
+            layer_mode: str = "scan", remat: str = "full",
+            q_chunk: int = 512) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    b, s = tokens.shape
+    x = embed_tokens(cfg, params, tokens)
+    positions = None
+    if cfg.vision is not None:
+        patches = batch["patch_embeds"].astype(x.dtype) @ params["vision_proj"]
+        npatch = patches.shape[1]
+        x = jax.lax.dynamic_update_slice_in_dim(x, patches, 0, axis=1)
+        positions = batch.get("positions")
+    x, aux = apply_stack(cfg, params, x, positions=positions,
+                         layer_mode=layer_mode, remat=remat, q_chunk=q_chunk)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    ce = chunked_ce_loss(cfg, params, x, labels)
+    loss = ce + aux
+    return loss, {"ce": ce, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode: state spec + one step
+
+
+def _mixer_cache_spec(spec: LayerSpec, cfg: ModelConfig, batch: int,
+                      seq: int, dtype) -> Params:
+    a = cfg.attention
+    if spec.mixer == "attn":
+        if a.kind == "mla":
+            return mla_lib.mla_cache_spec(a, batch, seq, dtype)
+        w = _resolve_window(spec, cfg)
+        return attn_lib.cache_spec(a, batch, seq, w, dtype)
+    if spec.mixer == "mamba":
+        return mamba_lib.mamba_state_spec(cfg.ssm, cfg.d_model, batch, dtype)
+    if spec.mixer == "mlstm":
+        return xlstm_lib.mlstm_state_spec(cfg.ssm, cfg.d_model, batch, dtype)
+    if spec.mixer == "slstm":
+        return xlstm_lib.slstm_state_spec(cfg.ssm, cfg.d_model, batch, dtype)
+    raise ValueError(spec.mixer)
+
+
+def decode_state_spec(cfg: ModelConfig, batch: int, seq: int) -> Params:
+    """Pytree of ShapeDtypeStructs for the decode cache."""
+    dtype = dtype_of(cfg.dtype)
+    rep = cfg.pattern_repeat
+    st: Params = {"pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    st["prefix_blocks"] = [
+        _mixer_cache_spec(s, cfg, batch, seq, dtype)
+        for s in cfg.layer_specs()[:cfg.num_dense_prefix]
+    ]
+    st["blocks"] = []
+    for spec in cfg.pattern:
+        one = _mixer_cache_spec(spec, cfg, batch, seq, dtype)
+        st["blocks"].append(_stack(one, rep))
+    return st
+
+
+def _decode_mixer(spec: LayerSpec, cfg: ModelConfig, p, h, cache, pos):
+    a = cfg.attention
+    if spec.mixer == "attn":
+        if a.kind == "mla":
+            return mla_lib.decode_mla(p["mixer"], a, h, cache, pos)
+        return attn_lib.decode_attention(
+            p["mixer"], a, h, cache, pos, window=_resolve_window(spec, cfg))
+    if spec.mixer == "mamba":
+        return mamba_lib.decode_mamba(p["mixer"], cfg.ssm, h, cache)
+    if spec.mixer == "mlstm":
+        return xlstm_lib.decode_mlstm(p["mixer"], cfg.ssm, h, cache)
+    if spec.mixer == "slstm":
+        return xlstm_lib.decode_slstm(p["mixer"], cfg.ssm, h, cache)
+    raise ValueError(spec.mixer)
+
+
+def _decode_block(spec: LayerSpec, cfg: ModelConfig, p, x, cache, pos):
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    h, new_cache = _decode_mixer(spec, cfg, p, h, cache, pos)
+    x = x + h
+    if spec.ffn != "none":
+        h = apply_norm(p["ln2"], x, cfg.norm)
+        if spec.ffn == "dense":
+            h = apply_mlp(p["ffn"], h, cfg.act, fused=cfg.fused_qkv)
+        else:
+            h, _ = moe_lib.apply_moe(p["ffn"], cfg.moe, h, activation(cfg.act))
+        x = x + h
+    return x, new_cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, state: Params,
+                token: jax.Array, *, layer_mode: str = "scan"
+                ) -> Tuple[jax.Array, Params]:
+    """One token for the whole batch. token: (B, 1) int32.
+
+    Returns (logits (B, vocab), new_state).
+    """
+    pos = state["pos"]
+    x = embed_tokens(cfg, params, token)
+    new_state: Params = {"pos": pos + 1}
+
+    specs = cfg.layer_specs()
+    new_state["prefix_blocks"] = []
+    for i, bp in enumerate(params["prefix_blocks"]):
+        s = LayerSpec(mixer=specs[i].mixer, ffn="dense", window=specs[i].window)
+        x, c = _decode_block(s, cfg, bp, x, state["prefix_blocks"][i], pos)
+        new_state["prefix_blocks"].append(c)
+
+    n_prefix = cfg.num_dense_prefix
+    new_state["blocks"] = []
+    for j, spec in enumerate(cfg.pattern):
+        pstack = params["blocks"][j]
+        cstack = state["blocks"][j]
+        if n_prefix and j == 0:
+            assert len(cfg.pattern) == 1
+            pstack = jax.tree.map(lambda a: a[n_prefix:], pstack)
+            cfull = cstack
+            cstack = jax.tree.map(lambda a: a[n_prefix:], cstack)
+
+        if layer_mode == "unroll":
+            rep = jax.tree.leaves(pstack)[0].shape[0]
+            new_cs = []
+            for r in range(rep):
+                pr = jax.tree.map(lambda a: a[r], pstack)
+                cr = jax.tree.map(lambda a: a[r], cstack)
+                x, c = _decode_block(spec, cfg, pr, x, cr, pos)
+                new_cs.append(c)
+            new_c = jax.tree.map(lambda *xs: jnp.stack(xs), *new_cs)
+        else:
+            def body(x_c, pr_cr):
+                pr, cr = pr_cr
+                x_c, c = _decode_block(spec, cfg, pr, x_c, cr, pos)
+                return x_c, c
+
+            x, new_c = jax.lax.scan(body, x, (pstack, cstack))
+        if n_prefix and j == 0:
+            # re-attach the prefix cache slots (updated separately above)
+            new_c = jax.tree.map(
+                lambda full, upd: jnp.concatenate(
+                    [full[:n_prefix], upd], axis=0),
+                cfull, new_c)
+        new_state["blocks"].append(new_c)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = _head_logits(cfg, params, x[:, 0]).astype(jnp.float32)
+    return logits, new_state

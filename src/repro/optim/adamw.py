@@ -1,0 +1,100 @@
+"""AdamW (decoupled weight decay, Loshchilov & Hutter) in pure JAX.
+
+The paper trains with "Decoupled Weight Decay Regularization" + SGDR warm
+restarts (§III-E.1); the LM substrate reuses the same optimizer.
+
+State layout: {"m": tree, "v": tree, "count": scalar}.  Moments are fp32
+regardless of param dtype; a fp32 master copy is kept for bf16 params so
+that repeated tiny updates do not underflow (standard mixed-precision
+practice; adds 4 bytes/param accounted in the dry-run memory analysis).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+OptState = Dict[str, Any]
+
+
+def adamw_init(params) -> OptState:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "m": jax.tree.map(zeros32, params),
+        "v": jax.tree.map(zeros32, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+    state["master"] = jax.tree.map(
+        lambda p: p.astype(jnp.float32)
+        if p.dtype == jnp.bfloat16 else None, params,
+    )
+    return state
+
+
+def adamw_init_spec(param_spec) -> OptState:
+    """ShapeDtypeStruct mirror of adamw_init for dry-run lowering."""
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(f32, param_spec),
+        "v": jax.tree.map(f32, param_spec),
+        "count": jax.ShapeDtypeStruct((), jnp.int32),
+        "master": jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+            if p.dtype == jnp.bfloat16 else None, param_spec),
+    }
+
+
+def adamw_update(
+    grads,
+    state: OptState,
+    params,
+    *,
+    lr,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    grad_clip: float = 0.0,
+) -> Tuple[Any, OptState]:
+    count = state["count"] + 1
+    cf = count.astype(jnp.float32)
+    bc1 = 1.0 - beta1 ** cf
+    bc2 = 1.0 - beta2 ** cf
+
+    if grad_clip > 0:
+        gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                  for g in jax.tree.leaves(grads))
+        gnorm = jnp.sqrt(gsq)
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+    else:
+        scale = jnp.float32(1.0)
+
+    def upd(g, m, v, p, master):
+        g32 = g.astype(jnp.float32) * scale
+        m2 = beta1 * m + (1 - beta1) * g32
+        v2 = beta2 * v + (1 - beta2) * g32 * g32
+        mh = m2 / bc1
+        vh = v2 / bc2
+        base = master if master is not None else p.astype(jnp.float32)
+        step = lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * base)
+        new_master = base - step
+        newp = new_master.astype(p.dtype)
+        return newp, m2, v2, (new_master if master is not None else None)
+
+    flat_g, td = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    flat_p = jax.tree.leaves(params)
+    flat_master = td.flatten_up_to(state["master"])
+
+    outs = [upd(g, m, v, p, mm) for g, m, v, p, mm in
+            zip(flat_g, flat_m, flat_v, flat_p, flat_master)]
+    newp = td.unflatten([o[0] for o in outs])
+    new_state = {
+        "m": td.unflatten([o[1] for o in outs]),
+        "v": td.unflatten([o[2] for o in outs]),
+        "count": count,
+        "master": td.unflatten([o[3] for o in outs]),
+    }
+    return newp, new_state

@@ -1,0 +1,30 @@
+"""SGDR: cosine annealing with warm restarts (Loshchilov & Hutter, ICLR'17),
+as used for NeuraLUT training (paper §III-E.1).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sgdr_schedule(step, *, lr_max: float, lr_min: float = 0.0,
+                  t0: int = 100, t_mult: int = 2):
+    """Vectorizable SGDR schedule.
+
+    Restart cycle i has length t0 * t_mult**i.  Within a cycle of length T at
+    progress t: lr = lr_min + 0.5*(lr_max-lr_min)*(1+cos(pi*t/T)).
+    """
+    step = jnp.asarray(step, jnp.float32)
+    t0f = jnp.float32(t0)
+    if t_mult == 1:
+        t_in = jnp.mod(step, t0f)
+        t_len = t0f
+    else:
+        tm = jnp.float32(t_mult)
+        # cycle index: smallest i with t0*(tm^(i+1)-1)/(tm-1) > step
+        ratio = step * (tm - 1.0) / t0f + 1.0
+        i = jnp.floor(jnp.log(ratio) / jnp.log(tm))
+        start = t0f * (tm ** i - 1.0) / (tm - 1.0)
+        t_in = step - start
+        t_len = t0f * tm ** i
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t_in / t_len))
+    return lr_min + (lr_max - lr_min) * cos

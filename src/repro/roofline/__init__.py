@@ -1,0 +1,4 @@
+from .hlo import HloAnalysis, analyze_hlo
+from .analysis import RooflineReport, roofline_report, HW
+
+__all__ = ["HloAnalysis", "analyze_hlo", "RooflineReport", "roofline_report", "HW"]

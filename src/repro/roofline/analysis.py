@@ -1,0 +1,160 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+Hardware model (TPU v5e, per assignment):
+    197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Terms (seconds, for one step, per the assignment's formulas; note
+``compiled.cost_analysis()`` and the HLO text are PER-DEVICE after SPMD
+partitioning, so chips cancel):
+
+    compute    = dot_flops_per_dev / peak_flops
+    memory     = hbm_bytes_per_dev / hbm_bw
+    collective = collective_bytes_per_dev / ici_bw
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from .hlo import HloAnalysis, analyze_hlo
+
+
+@dataclass(frozen=True)
+class Hardware:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12  # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9       # bytes/s per chip
+    ici_bw: float = 50e9        # bytes/s per link
+    hbm_bytes: float = 16 * 2 ** 30
+
+
+HW = Hardware()
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    num_devices: int
+    # raw per-device numbers
+    cost_flops_raw: float
+    cost_bytes_raw: float
+    dot_flops: float          # loop-corrected, per device
+    hbm_bytes: float          # loop-corrected traffic estimate, per device
+    collective_bytes: float   # per device
+    collective_breakdown: Dict[str, float]
+    peak_memory_bytes: Optional[float]
+    argument_bytes: Optional[float]
+    # derived terms (seconds)
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    bottleneck: str = ""
+    model_flops: float = 0.0      # global 6*N*D
+    useful_ratio: float = 0.0     # model_flops / (dot_flops * num_devices)
+    roofline_fraction: float = 0.0  # model-flops-time / max(term)
+    unknown_trip_loops: int = 0
+
+    def finish(self, hw: Hardware = HW):
+        self.t_compute = self.dot_flops / hw.peak_flops
+        self.t_memory = self.hbm_bytes / hw.hbm_bw
+        self.t_collective = self.collective_bytes / hw.ici_bw
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        self.bottleneck = max(terms, key=terms.get)
+        if self.dot_flops > 0 and self.num_devices:
+            self.useful_ratio = self.model_flops / (
+                self.dot_flops * self.num_devices)
+        t_bound = max(terms.values())
+        if t_bound > 0 and self.num_devices:
+            t_ideal = self.model_flops / self.num_devices / hw.peak_flops
+            self.roofline_fraction = t_ideal / t_bound
+        return self
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_report(*, arch: str, shape: str, mesh: str, num_devices: int,
+                    hlo_text: str, cost: Dict[str, float],
+                    memstats=None, model_flops: float = 0.0,
+                    bf16_model: bool = True,
+                    hw: Hardware = HW) -> RooflineReport:
+    # CPU-backend artifact: XLA float-normalization upcasts bf16 tensors to
+    # f32 *before* SPMD partitioning, so collective/HBM bytes in the
+    # partitioned HLO are 2x what a TPU (native bf16) would move.  For bf16
+    # models we therefore count f32 tensors at half size.  This slightly
+    # *undercounts* genuinely-f32 traffic (optimizer moments, softmax
+    # internals) — documented in EXPERIMENTS.md §Roofline.
+    ana: HloAnalysis = analyze_hlo(hlo_text, num_partitions=num_devices,
+                                   f32_factor=0.5 if bf16_model else 1.0)
+    rep = RooflineReport(
+        arch=arch, shape=shape, mesh=mesh, num_devices=num_devices,
+        cost_flops_raw=float(cost.get("flops", 0.0)),
+        cost_bytes_raw=float(cost.get("bytes accessed", 0.0)),
+        dot_flops=ana.dot_flops,
+        hbm_bytes=ana.hbm_bytes,
+        collective_bytes=ana.collective_bytes,
+        collective_breakdown=dict(ana.collective_breakdown),
+        peak_memory_bytes=(float(memstats.peak_memory_in_bytes)
+                           if memstats is not None else None),
+        argument_bytes=(float(memstats.argument_size_in_bytes)
+                        if memstats is not None else None),
+        model_flops=model_flops,
+        unknown_trip_loops=ana.unknown_trip_loops,
+    )
+    return rep.finish(hw)
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """Global MODEL_FLOPS = 6*N_active*D for train, 2*N_active*D for
+    inference (D = tokens processed)."""
+    n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch  # one token per sequence
+    return 2.0 * n_active * tokens
+
+
+def param_count(cfg) -> int:
+    """Total parameter count from the spec tree."""
+    import jax
+    from repro.models import api
+    spec = api.param_spec(cfg)
+    tot = 0
+    for leaf in jax.tree.leaves(spec):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        tot += n
+    return tot
+
+
+def active_param_count(cfg) -> int:
+    """Parameters touched per token (MoE: shared + top_k experts only)."""
+    import jax
+    from repro.models import api
+    spec = api.param_spec(cfg)
+    tot = 0
+    flat = jax.tree_util.tree_flatten_with_path(spec)[0]
+    if cfg.moe is not None:
+        from repro.models.layers.moe import padded_num_experts
+        e_pad = padded_num_experts(cfg.moe, 16)
+    for path, leaf in flat:
+        names = [str(getattr(p, "key", "")) for p in path]
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        if (cfg.moe is not None and "ffn" in names
+                and names[-1] in ("w_gate", "w_up", "w_down")
+                and leaf.ndim >= 3 and e_pad in leaf.shape):
+            # routed experts: only top_k of num_experts active per token
+            n = n // e_pad * cfg.moe.top_k
+        tot += n
+    return tot

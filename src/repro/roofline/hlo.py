@@ -1,0 +1,409 @@
+"""Post-SPMD HLO text analysis: collective bytes, loop-aware dot FLOPs,
+HBM-traffic estimate.
+
+Why text parsing: ``compiled.cost_analysis()`` visits every computation
+exactly ONCE — a ``lax.scan`` over 88 layers reports the flops/bytes of a
+single layer (validated empirically; see tests/test_roofline.py which checks
+scan-vs-unroll agreement).  We therefore parse the optimized HLO, build the
+call graph, propagate ``known_trip_count`` multipliers through while-loop
+bodies, and sum:
+
+  * dot FLOPs   = 2 * prod(result_shape) * prod(contracting_dims), scaled by
+                  the computation's execution multiplier,
+  * collective bytes per device, using ring conventions:
+      all-gather       out_bytes * (g-1)/g
+      reduce-scatter   out_bytes * (g-1)          (input = out * g)
+      all-reduce       2 * bytes * (g-1)/g
+      all-to-all       bytes * (g-1)/g
+      collective-permute  bytes
+  * HBM traffic estimate = sum over top-level instructions of
+    (result + operand bytes), excluding no-cost ops — an upper-ish bound on
+    DRAM traffic used for the memory roofline term.
+
+Everything here is per-device: the input is the SPMD-partitioned module.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1,
+    "f8e5m2fnuz": 1, "s4": 1, "u4": 1, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?(%?[\w\.\-]+)\s*\((.*)\)\s*->")
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_NOCOST_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "token", "partition-id", "replica-id", "iota",
+    # control flow: their bodies are visited separately; the instruction
+    # itself moves no data beyond what the body ops account for.
+    "while", "conditional", "call", "custom-call", "copy-start", "copy-done",
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _f32_bytes(type_str: str) -> int:
+    """Bytes attributable to f32 sub-shapes (for the CPU-backend bf16
+    upcast correction; see analyze_hlo docstring)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt != "f32":
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * 4
+    return total
+
+
+def _shape_dims(type_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "", []
+    dt, dims = m.groups()
+    return dt, ([int(d) for d in dims.split(",")] if dims else [])
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # operand list + attributes (raw tail)
+
+
+@dataclass
+class Computation:
+    name: str
+    params: Dict[str, str] = field(default_factory=dict)  # %name -> type str
+    instrs: List[Instr] = field(default_factory=list)
+    is_entry: bool = False
+
+
+def _parse_computations(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            if line.rstrip().endswith("{"):
+                m = _COMP_HDR_RE.match(line.strip())
+                if m:
+                    entry, name, params_str = m.groups()
+                    name = name.lstrip("%")
+                    cur = Computation(name=name, is_entry=bool(entry))
+                    # params: "param.1: f32[8,512], param2: (f32[..])"
+                    for pm in re.finditer(
+                            r"([\w\.\-]+)\s*:\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?))",
+                            params_str):
+                        cur.params["%" + pm.group(1)] = pm.group(2)
+            continue
+        if line.startswith("}") or line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        ins = _parse_instr(line)
+        if ins is not None:
+            cur.instrs.append(ins)
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+def _parse_instr(line: str) -> Optional[Instr]:
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[:eq]
+    rest = s[eq + 3:]
+    if rest.startswith("("):
+        depth = 0
+        i = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        tstr, tail = rest[:i + 1], rest[i + 1:].strip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        tstr, tail = rest[:sp], rest[sp + 1:].strip()
+    m = re.match(r"([\w\-]+)\((.*)$", tail)
+    if not m:
+        return None
+    opcode, args = m.groups()
+    return Instr(name, tstr, opcode, args)
+
+
+def _call_edges(comp: Computation):
+    """Yield (callee_name, trip_count or None) for calls out of ``comp``."""
+    for ins in comp.instrs:
+        rest = ins.rest
+        if ins.opcode == "while":
+            body = re.search(r"body=(%?[\w\.\-]+)", rest)
+            cond = re.search(r"condition=(%?[\w\.\-]+)", rest)
+            tc = None
+            mtc = re.search(r'known_trip_count[\\\"":{\s]*n[\\\"":\s]*(\d+)', rest)
+            if mtc:
+                tc = int(mtc.group(1))
+            if body:
+                yield body.group(1).lstrip("%"), tc
+            if cond:
+                yield cond.group(1).lstrip("%"), tc
+        else:
+            for attr in ("calls", "to_apply", "body", "condition",
+                         "true_computation", "false_computation"):
+                for m in re.finditer(attr + r"=(%?[\w\.\-]+)", rest):
+                    yield m.group(1).lstrip("%"), None
+            m = re.search(r"branch_computations=\{([^}]*)\}", rest)
+            if m:
+                for nm in m.group(1).split(","):
+                    yield nm.strip().lstrip("%"), None
+
+
+def _group_size(rest: str, num_partitions: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", rest)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", rest)
+    if m:
+        return len(m.group(1).split(","))
+    return num_partitions
+
+
+@dataclass
+class HloAnalysis:
+    dot_flops: float = 0.0
+    collective_bytes: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_breakdown: Dict[str, float] = field(default_factory=dict)
+    per_collective: List[Tuple[str, float, int, float]] = field(default_factory=list)
+    unknown_trip_loops: int = 0
+    dot_count: int = 0
+
+
+def analyze_hlo(text: str, *, num_partitions: int,
+                f32_factor: float = 1.0,
+                vmem_threshold: float = 4 * 2 ** 20) -> HloAnalysis:
+    """vmem_threshold: tensors below this size are assumed to stay
+    VMEM/register-resident on TPU (XLA fusion / Pallas tiling) and are not
+    charged as HBM traffic.  Weights and activation-sized tensors (>=4MiB)
+    are always charged.  Collectives and FLOPs are never thresholded."""
+    comps = _parse_computations(text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    # Propagate execution multipliers through the call graph (HLO
+    # computation graphs are DAGs; while bodies multiply by trip count).
+    res = HloAnalysis()
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+
+    def visit(name: str, m: float):
+        if name not in comps:
+            return
+        mult[name] += m
+        for callee, tc in _call_edges(comps[name]):
+            visit(callee, m * (tc if tc else 1))
+
+    visit(entry.name, 1.0)
+
+    # Computations that are bodies of fusions (or reductions/maps): their
+    # instructions run in registers/VMEM, not HBM — exclude from the HBM
+    # traffic model (dots inside them still count as FLOPs).
+    fused: set = set()
+    for c in comps.values():
+        for ins in c.instrs:
+            if ins.opcode in ("fusion", "reduce", "map", "scatter",
+                              "reduce-window", "sort", "all-reduce",
+                              "reduce-scatter"):
+                for m in re.finditer(r"(?:calls|to_apply)=(%?[\w\.\-]+)",
+                                     ins.rest):
+                    fused.add(m.group(1).lstrip("%"))
+
+    # count unknown-trip-count whiles
+    for c in comps.values():
+        for ins in c.instrs:
+            if ins.opcode == "while" and "known_trip_count" not in ins.rest:
+                res.unknown_trip_loops += 1
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        # symbol table for operand lookup
+        sym: Dict[str, str] = dict(comp.params)
+        for ins in comp.instrs:
+            sym[ins.name] = ins.type_str
+
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op == "dot":
+                f = _dot_flops(ins, sym)
+                res.dot_flops += m * f
+                res.dot_count += 1
+            elif any(op.startswith(c) for c in COLLECTIVES):
+                if op.endswith("-done"):
+                    continue
+                base = next(c for c in COLLECTIVES if op.startswith(c))
+                g = _group_size(ins.rest, num_partitions)
+                if g <= 1:
+                    continue
+                bytes_ = _shape_bytes(ins.type_str)
+                bytes_ -= (1.0 - f32_factor) * _f32_bytes(ins.type_str)
+                if base == "all-gather":
+                    comm = bytes_ * (g - 1) / g
+                elif base == "reduce-scatter":
+                    comm = bytes_ * (g - 1)
+                elif base == "all-reduce":
+                    comm = 2 * bytes_ * (g - 1) / g
+                elif base == "all-to-all":
+                    comm = bytes_ * (g - 1) / g
+                else:  # collective-permute
+                    comm = bytes_
+                res.collective_bytes += m * comm
+                res.collective_breakdown[base] = (
+                    res.collective_breakdown.get(base, 0.0) + m * comm)
+                res.per_collective.append((base, bytes_, g, m))
+            if (op not in _NOCOST_OPS and not op.endswith("-done")
+                    and cname not in fused):
+                if op == "fusion":
+                    res.hbm_bytes += m * _fusion_traffic(
+                        ins, sym, comps, f32_factor, vmem_threshold)
+                else:
+                    rb = _tensor_bytes(ins.type_str, f32_factor)
+                    tot = rb if rb >= vmem_threshold else 0.0
+                    for o in _operand_names(ins)[:16]:
+                        if o in sym:
+                            ob = _tensor_bytes(sym[o], f32_factor)
+                            if ob >= vmem_threshold:
+                                tot += ob
+                    res.hbm_bytes += m * tot
+    return res
+
+
+def _operand_names(ins: Instr):
+    head = ins.rest.split(" calls=")[0].split(", metadata=")[0]
+    return re.findall(r"%[\w\.\-]+", head)
+
+
+def _tensor_bytes(type_str: str, f32_factor: float) -> float:
+    return _shape_bytes(type_str) - (1.0 - f32_factor) * _f32_bytes(type_str)
+
+
+def _fusion_traffic(ins: Instr, sym: Dict[str, str],
+                    comps: Dict[str, "Computation"],
+                    f32_factor: float = 1.0,
+                    vmem_threshold: float = 0.0) -> float:
+    """HBM traffic of one fusion instruction.
+
+    Operands consumed through an internal dynamic-slice are charged at the
+    *slice* size; an internal (root) dynamic-update-slice writes only the
+    update region (the output buffer is aliased in-place).  All other
+    operands are read in full; the result is written in full unless the root
+    is a DUS.
+    """
+    mcall = re.search(r"calls=(%?[\w\.\-]+)", ins.rest)
+    fc = comps.get(mcall.group(1).lstrip("%")) if mcall else None
+    opnds = _operand_names(ins)
+    if fc is None:
+        rb = _tensor_bytes(ins.type_str, f32_factor)
+        return rb + sum(_tensor_bytes(sym[o], f32_factor)
+                        for o in opnds[:16] if o in sym)
+
+    # map fusion params (in order) to outer operands
+    pnames = list(fc.params)
+    outer_of = {pn: (opnds[i] if i < len(opnds) else None)
+                for i, pn in enumerate(pnames)}
+    sliced_params = set()
+    traffic = 0.0
+    root_is_dus = False
+    internal_sym = dict(fc.params)
+    for fi in fc.instrs:
+        internal_sym[fi.name] = fi.type_str
+    for fi in fc.instrs:
+        if fi.opcode == "dynamic-slice":
+            ops = _operand_names(fi)
+            if ops and ops[0] in fc.params:
+                sliced_params.add(ops[0])
+            piece = _tensor_bytes(fi.type_str, f32_factor)
+            traffic += piece if piece >= vmem_threshold else 0.0
+        elif fi.opcode == "dynamic-update-slice":
+            ops = _operand_names(fi)
+            if ops:
+                if ops[0] in fc.params:
+                    sliced_params.add(ops[0])
+                if len(ops) > 1 and ops[1] in internal_sym:
+                    piece = _tensor_bytes(internal_sym[ops[1]], f32_factor)
+                    traffic += 2 * piece if piece >= vmem_threshold else 0.0
+            if fi is fc.instrs[-1]:
+                root_is_dus = True
+    for pn in pnames:
+        if pn in sliced_params:
+            continue
+        outer = outer_of.get(pn)
+        if outer and outer in sym:
+            piece = _tensor_bytes(sym[outer], f32_factor)
+        else:
+            piece = _tensor_bytes(fc.params[pn], f32_factor)
+        traffic += piece if piece >= vmem_threshold else 0.0
+    if not root_is_dus:
+        piece = _tensor_bytes(ins.type_str, f32_factor)
+        traffic += piece if piece >= vmem_threshold else 0.0
+    return traffic
+
+
+def _dot_flops(ins: Instr, sym: Dict[str, str]) -> float:
+    _, rdims = _shape_dims(ins.type_str)
+    rprod = 1
+    for d in rdims:
+        rprod *= d
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+    opnds = re.findall(r"%[\w\.\-]+", ins.rest)
+    if not opnds:
+        return 0.0
+    lhs_t = sym.get(opnds[0], "")
+    _, ldims = _shape_dims(lhs_t)
+    cprod = 1
+    if mc and ldims:
+        for idx in mc.group(1).split(","):
+            if idx:
+                i = int(idx)
+                if i < len(ldims):
+                    cprod *= ldims[i]
+    return 2.0 * rprod * cprod

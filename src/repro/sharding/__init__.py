@@ -1,0 +1,8 @@
+from .partition import (
+    batch_partition,
+    cache_partition,
+    named,
+    param_partition,
+)
+
+__all__ = ["batch_partition", "cache_partition", "named", "param_partition"]

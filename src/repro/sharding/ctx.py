@@ -1,0 +1,78 @@
+"""Ambient mesh context for activation sharding constraints.
+
+Model code calls ``constrain(x, "batch", None, "model")`` with *logical*
+roles; under an active mesh (set by the launcher) this lowers to
+``with_sharding_constraint`` pinning GSPMD's propagation at block
+boundaries — preventing pathological reshards (e.g. unsharding the batch to
+shard half a KV head).  With no active mesh (single-device smoke tests) it
+is a no-op.
+
+Roles:
+    "batch"  -> the data axes ("pod","data") / ("data",)
+    "model"  -> the tensor axis
+    None     -> unsharded
+A role is silently dropped if the dim is not divisible by the axis size.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def set_active_mesh(mesh, data_axes: Tuple[str, ...] = ("data",),
+                    model_axis: str = "model") -> None:
+    _state.mesh = mesh
+    _state.data_axes = tuple(data_axes)
+    _state.model_axis = model_axis
+
+
+def clear_active_mesh() -> None:
+    _state.mesh = None
+
+
+def get_active_mesh():
+    return getattr(_state, "mesh", None)
+
+
+@contextmanager
+def active_mesh(mesh, data_axes=("data",), model_axis="model"):
+    prev = (getattr(_state, "mesh", None),
+            getattr(_state, "data_axes", ("data",)),
+            getattr(_state, "model_axis", "model"))
+    set_active_mesh(mesh, data_axes, model_axis)
+    try:
+        yield
+    finally:
+        _state.mesh, _state.data_axes, _state.model_axis = prev
+
+
+def _axis_size(mesh, names) -> int:
+    n = 1
+    for nm in (names if isinstance(names, tuple) else (names,)):
+        n *= mesh.shape[nm]
+    return n
+
+
+def constrain(x: jax.Array, *roles) -> jax.Array:
+    mesh = getattr(_state, "mesh", None)
+    if mesh is None:
+        return x
+    assert len(roles) == x.ndim, (roles, x.shape)
+    spec = []
+    for dim, role in zip(x.shape, roles):
+        if role is None:
+            spec.append(None)
+            continue
+        ax = (_state.data_axes if role == "batch" else _state.model_axis)
+        if dim % _axis_size(mesh, ax) == 0:
+            spec.append(ax)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

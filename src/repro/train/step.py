@@ -1,0 +1,87 @@
+"""Train/serve step factories.
+
+``make_train_step`` builds the full production step: loss -> grad ->
+global-norm clip -> AdamW(+SGDR) -> new params.  Optional gradient
+accumulation (microbatching) runs as a ``lax.scan`` over microbatch slices
+with the model+optimizer update once at the end; optional int8 gradient
+compression applies around the cross-replica reduction (see
+repro.optim.grad_compress).
+
+These are the exact callables lowered by the dry-run; the memory analysis
+therefore includes gradients, fp32 master weights, and both Adam moments.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, TrainConfig
+from repro.models import api
+from repro.optim import adamw_update, sgdr_schedule
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, *,
+                    q_chunk: int = 512, compress_grads=None):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, batch):
+        return api.loss_fn(cfg, params, batch, layer_mode=tcfg.layer_mode,
+                           remat=tcfg.remat, q_chunk=q_chunk)
+
+    def step(params, opt_state, batch):
+        if tcfg.grad_accum > 1:
+            grads, (loss, metrics) = _accum_grads(
+                loss_fn, params, batch, tcfg.grad_accum)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+
+        if compress_grads is not None:
+            grads = compress_grads(grads)
+
+        lr = sgdr_schedule(opt_state["count"], lr_max=tcfg.lr,
+                           lr_min=tcfg.lr_min, t0=tcfg.sgdr_t0,
+                           t_mult=tcfg.sgdr_t_mult)
+        params, opt_state = adamw_update(
+            grads, opt_state, params, lr=lr, beta1=tcfg.beta1,
+            beta2=tcfg.beta2, eps=tcfg.eps, weight_decay=tcfg.weight_decay,
+            grad_clip=tcfg.grad_clip)
+        metrics = dict(metrics, loss=loss, lr=lr)
+        return params, opt_state, metrics
+
+    return step
+
+
+def _accum_grads(loss_fn, params, batch, accum: int):
+    """Microbatch gradient accumulation via scan over batch slices."""
+    def slice_mb(x):
+        b = x.shape[0]
+        assert b % accum == 0, (b, accum)
+        return x.reshape((accum, b // accum) + x.shape[1:])
+
+    mbs = jax.tree.map(slice_mb, batch)
+    gz = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def body(carry, mb):
+        g_acc, loss_acc = carry
+        (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+        g_acc = jax.tree.map(lambda a, b_: a + b_.astype(jnp.float32), g_acc, g)
+        return (g_acc, loss_acc + loss), metrics
+
+    (g, loss), metrics = jax.lax.scan(body, (gz, jnp.float32(0)), mbs)
+    g = jax.tree.map(lambda a: a / accum, g)
+    metrics = jax.tree.map(lambda m: m[-1], metrics)
+    return g, (loss / accum, metrics)
+
+
+def make_serve_step(cfg: ModelConfig, *, layer_mode: str = "scan"):
+    """Returns step(params, state, token) -> (logits, new_state)."""
+
+    def step(params, state, token):
+        return api.decode_step(cfg, params, state, token,
+                               layer_mode=layer_mode)
+
+    return step

@@ -1,0 +1,75 @@
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointStore
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(rng.normal(0, 1, (4, 4)), jnp.float32),
+                   "blocks": [{"a": jnp.arange(3)}, {"a": jnp.arange(3) + 1}]},
+        "opt": {"count": jnp.int32(7)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    t = _tree()
+    store.save(10, t)
+    step, t2 = store.restore(t)
+    assert step == 10
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(t2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_and_keep_k(tmp_path):
+    store = CheckpointStore(str(tmp_path), keep=2)
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        store.save(s, t)
+    assert store.list_steps() == [3, 4]
+    assert store.latest_step() == 4
+
+
+def test_uncommitted_ignored(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    t = _tree()
+    store.save(5, t)
+    # corrupt a later "checkpoint": no manifest
+    bad = tmp_path / "step_0000000009"
+    bad.mkdir()
+    assert store.latest_step() == 5
+    # manifest without committed flag
+    bad2 = tmp_path / "step_0000000011"
+    bad2.mkdir()
+    (bad2 / "manifest.json").write_text(json.dumps({"committed": False}))
+    assert store.latest_step() == 5
+    step, _ = store.restore(t)
+    assert step == 5
+
+
+def test_async_save(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    t = _tree()
+    fut = store.save_async(42, t)
+    path = fut.result(timeout=30)
+    assert path.name == "step_0000000042"
+    step, t2 = store.restore(t)
+    assert step == 42
+
+
+def test_restore_different_values_not_shapes(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    t = _tree(seed=1)
+    store.save(1, t)
+    template = jax.tree.map(jnp.zeros_like, t)
+    _, t2 = store.restore(template)
+    np.testing.assert_array_equal(np.asarray(t["params"]["w"]),
+                                  np.asarray(t2["params"]["w"]))

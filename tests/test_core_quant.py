@@ -1,0 +1,58 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+
+@pytest.mark.parametrize("beta", [2, 3, 4, 7])
+def test_quant_levels(beta):
+    p = quant.quant_init(4, 0.5)
+    x = jnp.linspace(-10, 10, 101)[:, None].repeat(4, 1)
+    y = quant.quant_apply(p, x, beta)
+    codes = quant.quant_codes(p, x, beta)
+    assert int(codes.min()) >= 0 and int(codes.max()) < 2 ** beta
+    # dequantized values live on the code grid
+    cv = quant.code_values(p, beta)  # (C, 2^beta)
+    for c in range(4):
+        assert np.all(np.isin(np.asarray(y[:, c]),
+                              np.asarray(cv[c])))
+
+
+def test_codes_values_consistent():
+    p = quant.quant_init(8, 0.3)
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (64, 8)),
+                    jnp.float32)
+    beta = 3
+    y = quant.quant_apply(p, x, beta)
+    codes = quant.quant_codes(p, x, beta)
+    s = jnp.exp(p["log_s"])
+    recon = (codes.astype(jnp.float32) - 2 ** (beta - 1)) * s
+    np.testing.assert_allclose(np.asarray(y), np.asarray(recon), rtol=1e-6)
+
+
+def test_ste_gradient_flows():
+    p = quant.quant_init(1, 1.0)
+
+    def f(x):
+        return jnp.sum(quant.quant_apply(p, x, 3))
+
+    g = jax.grad(f)(jnp.asarray([[0.4]], jnp.float32))
+    assert float(g[0, 0]) == pytest.approx(1.0)  # in-range: identity STE
+    g_sat = jax.grad(f)(jnp.asarray([[100.0]], jnp.float32))
+    assert float(g_sat[0, 0]) == pytest.approx(0.0)  # clipped: no grad
+
+
+def test_bn_train_vs_eval():
+    p, s = quant.bn_init(4)
+    x = jnp.asarray(np.random.default_rng(1).normal(3, 2, (256, 4)),
+                    jnp.float32)
+    y, s2 = quant.bn_apply(p, s, x, train=True)
+    assert abs(float(jnp.mean(y))) < 1e-4
+    assert float(jnp.std(y)) == pytest.approx(1.0, abs=2e-2)
+    # running stats moved toward batch stats
+    assert float(s2["mean"][0]) != 0.0
+    y_eval, s3 = quant.bn_apply(p, s2, x, train=False)
+    assert s3 is s2  # eval does not update state

@@ -1,0 +1,54 @@
+import numpy as np
+import jax
+
+from repro.core import model as M
+from repro.core import rtl
+from repro.core import truth_table as TT
+from repro.core.nl_config import NeuraLUTConfig
+
+
+def _toy():
+    cfg = NeuraLUTConfig(name="rtl-toy", in_features=4, layer_widths=(6, 3),
+                         num_classes=3, beta=2, fan_in=3, kind="subnet",
+                         depth=2, width=4, skip=2)
+    statics = M.model_static(cfg)
+    params, state = M.model_init(cfg, jax.random.PRNGKey(0))
+    tables = TT.convert(cfg, params, state, statics)
+    return cfg, statics, tables
+
+
+def test_rtl_rom_matches_tables(tmp_path):
+    cfg, statics, tables = _toy()
+    paths = rtl.generate_top(cfg, tables, statics, str(tmp_path))
+    assert len(paths) == cfg.num_layers + 1
+    for li, tbl in enumerate(tables):
+        txt = open(paths[li]).read()
+        for n in range(tbl.shape[0]):
+            addrs = np.arange(tbl.shape[1])
+            sim = rtl.simulate_verilog_rom(txt, f"rom_l{li}_n{n}", addrs)
+            assert (sim == tbl[n]).all(), (li, n)
+
+
+def test_rtl_top_structure(tmp_path):
+    cfg, statics, tables = _toy()
+    paths = rtl.generate_top(cfg, tables, statics, str(tmp_path))
+    top = open(paths[-1]).read()
+    assert "module neuralut_top" in top
+    # one pipeline stage (wire) per layer => latency == n layers
+    assert top.count("layer0 l0") == 1 and top.count("layer1 l1") == 1
+    # bus widths: in = beta_in*in_features, out = beta*classes
+    assert f"input [{cfg.beta * cfg.in_features - 1}:0] in_bus" in top
+    assert f"output [{cfg.beta * cfg.layer_widths[-1] - 1}:0] out_bus" in top
+
+
+def test_rom_addressing_matches_connectivity(tmp_path):
+    """The concatenated-select wiring must put slot 0 at the MSB."""
+    cfg, statics, tables = _toy()
+    txt = rtl.generate_layer(cfg, 0, tables[0], statics[0]["conn"])
+    conn = statics[0]["conn"]
+    beta = cfg.beta
+    # neuron 0 wiring line
+    line = [l for l in txt.splitlines() if "rom_l0_n0 u0" in l][0]
+    first_src = conn[0, 0]
+    hi = beta * (first_src + 1) - 1
+    assert f"in_bus[{hi}:" in line.split("{")[1].split(",")[0]

@@ -1,0 +1,86 @@
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import subnet
+from repro.models.layers.common import init_from_spec
+
+
+@settings(max_examples=40, deadline=None)
+@given(F=st.integers(2, 8), L=st.integers(1, 6), N=st.integers(1, 24),
+       S=st.sampled_from([0, 1, 2, 3]))
+def test_param_count_formula_matches_pytree(F, L, N, S):
+    """Table I / eqs. (5)-(7) vs the actual parameter pytree."""
+    if S > 0 and L % S != 0:
+        S = 0
+    spec = subnet.subnet_spec(3, F, L, N, S)
+    actual = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(spec)) // 3
+    assert actual == subnet.param_count_formula(F, L, N, S)
+
+
+def test_logicnets_equivalence_when_L1():
+    """Paper: N=L=1, S=0 NeuraLUT == LogicNets (a single affine)."""
+    key = jax.random.PRNGKey(0)
+    spec = subnet.subnet_spec(5, 4, 1, 1, 0)
+    p = init_from_spec(spec, key)
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (16, 5, 4)),
+                    jnp.float32)
+    out = subnet.subnet_apply(p, x, 0)
+    lin = {"w": p["layers"][0]["w"][:, :, 0], "b": p["layers"][0]["b"][:, 0]}
+    ref = subnet.linear_apply(lin, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
+
+
+@pytest.mark.parametrize("F,D", [(2, 1), (3, 2), (6, 2), (4, 3)])
+def test_monomial_count(F, D):
+    exps = subnet.monomial_exponents(F, D)
+    assert len(exps) == math.comb(F + D, D)
+    assert exps.shape[1] == F
+    assert (exps.sum(1) <= D).all()
+    # uniqueness
+    assert len({tuple(e) for e in exps}) == len(exps)
+
+
+def test_skip_connection_structure():
+    """With identity-ish weights, skips add a linear bypass: f(0) follows
+    biases; gradient flows to first layer even with zeroed mid layers."""
+    F, L, N, S = 3, 4, 8, 2
+    spec = subnet.subnet_spec(2, F, L, N, S)
+    p = init_from_spec(spec, jax.random.PRNGKey(1))
+    # zero the main path entirely: output = skip path only
+    pz = jax.tree.map(jnp.zeros_like, p)
+    pz["skips"] = p["skips"]
+    x = jnp.asarray(np.random.default_rng(1).normal(0, 1, (8, 2, F)),
+                    jnp.float32)
+    out = subnet.subnet_apply(pz, x, S)
+    # skip path: R2(relu(R1(x)))
+    r1 = jnp.einsum("boi,oij->boj", x, p["skips"][0]["w"]) + p["skips"][0]["b"]
+    r2 = jnp.einsum("boi,oij->boj", jax.nn.relu(r1), p["skips"][1]["w"]) \
+        + p["skips"][1]["b"]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r2[..., 0]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_gradient_flow_deep_subnet_with_skips():
+    """Skips keep gradient magnitude healthy in deep subnets (paper §III-B)."""
+    F, L, N = 4, 8, 8
+    x = jnp.asarray(np.random.default_rng(2).normal(0, 1, (32, 1, F)),
+                    jnp.float32)
+
+    def gnorm(S):
+        spec = subnet.subnet_spec(1, F, L, N, S)
+        p = init_from_spec(spec, jax.random.PRNGKey(3))
+        if S == 0 and "skips" in p:
+            del p["skips"]
+
+        def loss(p):
+            return jnp.mean(subnet.subnet_apply(p, x, S) ** 2)
+
+        g = jax.grad(loss)(p)
+        return float(jnp.linalg.norm(g["layers"][0]["w"]))
+
+    assert gnorm(2) > 0.0

@@ -1,0 +1,86 @@
+"""The paper's central conversion: sub-network -> L-LUT must be bit-exact."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lut_infer as LI
+from repro.core import model as M
+from repro.core import truth_table as TT
+from repro.core.nl_config import NeuraLUTConfig
+
+
+def _mk(kind, beta, fan_in, widths, depth=2, width=4, skip=0, degree=2,
+        beta_in=None, fan_in_0=None, in_features=6):
+    return NeuraLUTConfig(
+        name=f"tt-{kind}-{beta}-{fan_in}", in_features=in_features,
+        layer_widths=widths, num_classes=widths[-1], beta=beta,
+        fan_in=fan_in, kind=kind, depth=depth, width=width, skip=skip,
+        degree=degree, beta_in=beta_in, fan_in_0=fan_in_0)
+
+
+def _roundtrip(cfg, seed=0, n=128):
+    statics = M.model_static(cfg)
+    params, state = M.model_init(cfg, jax.random.PRNGKey(seed))
+    x = jnp.asarray(
+        np.random.default_rng(seed).normal(0, 1, (n, cfg.in_features)),
+        jnp.float32)
+    # run a couple of train steps so BN state is non-trivial
+    _, _, state = M.model_apply(cfg, params, state, statics, x, train=True)
+    tables = TT.convert(cfg, params, state, statics)
+    _, values, _ = M.model_apply(cfg, params, state, statics, x, train=False)
+    codes = LI.input_codes(cfg, params, x)
+    out_codes = LI.lut_forward(cfg, tables, statics, codes)
+    lut_vals = LI.class_values(cfg, params, out_codes)
+    return np.asarray(values), np.asarray(lut_vals), tables
+
+
+@pytest.mark.parametrize("kind", ["subnet", "linear", "poly"])
+def test_bit_exact_by_kind(kind):
+    cfg = _mk(kind, beta=3, fan_in=3, widths=(8, 4), depth=2, width=4,
+              skip=2 if kind == "subnet" else 0)
+    v, lv, _ = _roundtrip(cfg)
+    assert (v == lv).all(), f"mismatch rate {(v != lv).mean()}"
+
+
+@settings(max_examples=12, deadline=None)
+@given(beta=st.integers(2, 4), fan_in=st.integers(2, 4),
+       skip=st.sampled_from([0, 2]), seed=st.integers(0, 5))
+def test_bit_exact_property(beta, fan_in, skip, seed):
+    cfg = _mk("subnet", beta=beta, fan_in=fan_in, widths=(6, 3),
+              depth=2, width=4, skip=skip)
+    v, lv, _ = _roundtrip(cfg, seed=seed, n=64)
+    assert (v == lv).all()
+
+
+def test_first_layer_exceptions():
+    """JSC-5L-style beta_0/F_0 overrides change only layer-0 geometry."""
+    cfg = _mk("subnet", beta=3, fan_in=3, widths=(8, 4), skip=2,
+              beta_in=5, fan_in_0=2)
+    assert cfg.layer_in_bits(0) == 5 and cfg.layer_fan_in(0) == 2
+    assert cfg.layer_in_bits(1) == 3 and cfg.layer_fan_in(1) == 3
+    assert cfg.table_size(0) == 2 ** 10
+    v, lv, tables = _roundtrip(cfg)
+    assert tables[0].shape[1] == 2 ** 10
+    assert tables[1].shape[1] == 2 ** 9
+    assert (v == lv).all()
+
+
+def test_enumerate_codes():
+    codes = TT.enumerate_codes(2, 3)
+    assert codes.shape == (64, 3)
+    # slot 0 is the MSB pair
+    assert codes[0].tolist() == [0, 0, 0]
+    assert codes[1].tolist() == [0, 0, 1]
+    assert codes[4].tolist() == [0, 1, 0]
+    assert codes[16].tolist() == [1, 0, 0]
+    # pack_index inverts enumerate
+    import jax.numpy as jnp
+    idx = LI.pack_index(jnp.asarray(codes), 2)
+    assert (np.asarray(idx) == np.arange(64)).all()
+
+
+def test_table_size_formula():
+    cfg = _mk("subnet", beta=2, fan_in=6, widths=(4, 2))
+    assert cfg.table_size(0) == 2 ** 12  # paper: 2^{beta*F} entries

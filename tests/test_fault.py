@@ -1,0 +1,115 @@
+"""Fault tolerance: supervised restarts, resume determinism, straggler
+watchdog, backup producers."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointStore
+from repro.runtime.fault import FailureInjector, NodeFailure, TrainSupervisor
+from repro.runtime.straggler import StepWatchdog, run_with_backup
+
+
+def _toy_problem():
+    """Quadratic fit; step = one SGD update. Deterministic in step index."""
+
+    def make_batch(step):
+        rng = np.random.default_rng(step)
+        return jnp.asarray(rng.normal(0, 1, (8, 4)), jnp.float32)
+
+    @jax.jit
+    def step_fn(w, x):
+        def loss(w):
+            return jnp.mean((x @ w) ** 2) + 0.01 * jnp.sum(w ** 2)
+
+        g = jax.grad(loss)(w)
+        w = w - 0.05 * g
+        return w, {"loss": loss(w)}
+
+    return make_batch, step_fn
+
+
+def test_supervisor_restarts_and_finishes(tmp_path):
+    make_batch, step_fn = _toy_problem()
+    store = CheckpointStore(str(tmp_path), keep=2)
+    restarts = []
+    sup = TrainSupervisor(
+        store=store,
+        make_step=lambda: step_fn,
+        make_batch=make_batch,
+        ckpt_every=5,
+    )
+    w0 = jnp.ones((4,), jnp.float32)
+    inj = FailureInjector(fail_at=(7, 13))
+    out = sup.run(w0, num_steps=20, injector=inj,
+                  on_restart=lambda s: restarts.append(s))
+    assert out["step"] == 20
+    assert out["restarts"] == 2
+    assert restarts == [5, 10]  # resumed from the latest checkpoints
+
+
+def test_resume_bitwise_deterministic(tmp_path):
+    """train(20) == train(10) + resume(10..20): the pipeline is
+    deterministic in the step index and the checkpoint captures the carry."""
+    make_batch, step_fn = _toy_problem()
+
+    w = jnp.ones((4,), jnp.float32)
+    for s in range(20):
+        w, _ = step_fn(w, make_batch(s))
+    ref = np.asarray(w)
+
+    store = CheckpointStore(str(tmp_path))
+    sup = TrainSupervisor(store=store, make_step=lambda: step_fn,
+                          make_batch=make_batch, ckpt_every=10)
+    out = sup.run(jnp.ones((4,), jnp.float32), num_steps=10)
+    # "process restart": new supervisor restores from disk
+    sup2 = TrainSupervisor(store=store, make_step=lambda: step_fn,
+                           make_batch=make_batch, ckpt_every=10)
+    start, carry = store.restore(out["carry"])
+    out2 = sup2.run(carry, start_step=start, num_steps=20)
+    np.testing.assert_allclose(np.asarray(out2["carry"]), ref, rtol=1e-6)
+
+
+def test_supervisor_gives_up_after_max_restarts(tmp_path):
+    make_batch, step_fn = _toy_problem()
+    store = CheckpointStore(str(tmp_path))
+    sup = TrainSupervisor(store=store, make_step=lambda: step_fn,
+                          make_batch=make_batch, ckpt_every=100,
+                          max_restarts=2)
+    inj = FailureInjector(fail_at=(1,))
+
+    class AlwaysFail(FailureInjector):
+        def check(self, step):
+            if step == 1:
+                raise NodeFailure("always")
+
+    with pytest.raises(NodeFailure):
+        sup.run(jnp.ones((4,)), num_steps=5, injector=AlwaysFail())
+
+
+def test_watchdog_flags_outliers():
+    wd = StepWatchdog(min_steps=5, k_mad=4.0)
+    for _ in range(20):
+        assert not wd.record(0.1 + np.random.default_rng(0).uniform(0, .001))
+    assert wd.record(1.0)
+    assert wd.record(1.0)
+    assert not wd.persistent
+    assert wd.record(1.0)
+    assert wd.persistent
+
+
+def test_run_with_backup_prefers_fast_result():
+    calls = []
+
+    def slow_then_fast():
+        calls.append(time.time())
+        if len(calls) == 1:
+            time.sleep(1.0)
+            return "slow"
+        return "fast"
+
+    out = run_with_backup(slow_then_fast, timeout_s=0.1)
+    assert out == "fast"
+    assert len(calls) >= 2

@@ -1,0 +1,111 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU), with
+shape/dtype sweeps per the kernel-testing contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import grouped_subnet_op, lut_lookup_op
+from repro.kernels.ref import grouped_subnet_ref, lut_gather_ref
+
+
+def _subnet_args(B, O, F, N, L, S, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    widths = [F] + [N] * (L - 1) + [1]
+    xg = jnp.asarray(rng.normal(0, 1, (B, O, F)), dtype)
+    lw = [jnp.asarray(rng.normal(0, .5, (O, widths[i], widths[i + 1])), dtype)
+          for i in range(L)]
+    lb = [jnp.asarray(rng.normal(0, .1, (O, widths[i + 1])), dtype)
+          for i in range(L)]
+    if S:
+        sw = [jnp.asarray(
+            rng.normal(0, .5, (O, widths[c * S], widths[(c + 1) * S])), dtype)
+            for c in range(L // S)]
+        sb = [jnp.asarray(rng.normal(0, .1, (O, widths[(c + 1) * S])), dtype)
+              for c in range(L // S)]
+    else:
+        sw = sb = None
+    return xg, lw, lb, sw, sb
+
+
+@pytest.mark.parametrize("B,O,F,N,L,S", [
+    (128, 16, 6, 16, 4, 2),   # HDR-5L geometry
+    (128, 32, 3, 8, 4, 2),    # JSC-2L geometry
+    (256, 16, 3, 16, 4, 2),   # JSC-5L geometry
+    (128, 16, 4, 8, 2, 0),    # no skips
+    (128, 16, 5, 12, 3, 3),   # single chunk skip
+    (64, 8, 2, 4, 1, 0),      # linear degenerate
+])
+def test_grouped_subnet_shapes(B, O, F, N, L, S):
+    xg, lw, lb, sw, sb = _subnet_args(B, O, F, N, L, S, jnp.float32)
+    out = grouped_subnet_op(xg, lw, lb, sw, sb, skip=S,
+                            block_b=min(64, B), block_o=min(8, O))
+    ref = grouped_subnet_ref(xg, lw, lb, sw, sb, skip=S)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 5e-2)])
+def test_grouped_subnet_dtypes(dtype, tol):
+    xg, lw, lb, sw, sb = _subnet_args(128, 16, 6, 16, 4, 2, dtype)
+    out = grouped_subnet_op(xg, lw, lb, sw, sb, skip=2)
+    ref = grouped_subnet_ref(
+        *(jax.tree.map(lambda a: a.astype(jnp.float32),
+                       (xg, lw, lb, sw, sb))), skip=2)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("O,T,B,bb,bo", [
+    (32, 64, 16, 8, 32),
+    (64, 4096, 32, 8, 32),    # beta=2,F=6 / beta=4,F=3 table size
+    (128, 512, 8, 4, 16),
+    (10, 1024, 40, 8, 10),    # classes not power of two
+])
+def test_lut_lookup_shapes(O, T, B, bb, bo):
+    rng = np.random.default_rng(1)
+    tbl = jnp.asarray(rng.integers(0, 2 ** 7, (O, T)), jnp.int32)
+    addr = jnp.asarray(rng.integers(0, T, (B, O)), jnp.int32)
+    got = lut_lookup_op(tbl, addr, block_b=bb, block_o=bo)
+    ref = lut_gather_ref(tbl, addr)
+    assert (np.asarray(got) == np.asarray(ref)).all()
+
+
+def test_lut_lookup_edge_addresses():
+    O, T = 8, 256
+    tbl = jnp.asarray(np.arange(O * T).reshape(O, T) % 251, jnp.int32)
+    addr = jnp.asarray(np.stack([np.zeros(O), np.full(O, T - 1)]), jnp.int32)
+    got = lut_lookup_op(tbl, addr, block_b=2, block_o=8)
+    assert (np.asarray(got)[0] == np.asarray(tbl[:, 0])).all()
+    assert (np.asarray(got)[1] == np.asarray(tbl[:, -1])).all()
+
+
+def test_lut_lookup_rejects_non_pow2():
+    tbl = jnp.zeros((8, 100), jnp.int32)
+    addr = jnp.zeros((8, 8), jnp.int32)
+    with pytest.raises(ValueError):
+        lut_lookup_op(tbl, addr)
+
+
+def test_kernel_vs_core_truth_table_inference():
+    """The Pallas LUT kernel must agree with the whole converted network."""
+    from repro.core import lut_infer as LI, model as M, truth_table as TT
+    from repro.core.nl_config import NeuraLUTConfig
+    cfg = NeuraLUTConfig(name="k-e2e", in_features=8, layer_widths=(8, 4),
+                         num_classes=4, beta=2, fan_in=3, kind="subnet",
+                         depth=2, width=4, skip=2)
+    statics = M.model_static(cfg)
+    params, state = M.model_init(cfg, jax.random.PRNGKey(2))
+    tables = TT.convert(cfg, params, state, statics)
+    x = jnp.asarray(np.random.default_rng(3).normal(0, 1, (16, 8)),
+                    jnp.float32)
+    codes = LI.input_codes(cfg, params, x)
+    # layer 0 via kernel
+    conn = jnp.asarray(statics[0]["conn"])
+    addr = LI.pack_index(codes[:, conn], cfg.beta)
+    out_k = lut_lookup_op(jnp.asarray(tables[0].astype(np.int32)), addr,
+                          block_b=8, block_o=8)
+    ref = lut_gather_ref(jnp.asarray(tables[0].astype(np.int32)), addr)
+    assert (np.asarray(out_k) == np.asarray(ref)).all()

@@ -1,0 +1,134 @@
+"""SSM mixers: chunkwise-parallel forms vs recurrent oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SSMConfig
+from repro.models.layers import mamba as MB
+from repro.models.layers import xlstm as XL
+from repro.models.layers.common import init_from_spec
+
+
+def test_mlstm_chunkwise_vs_recurrent():
+    rng = np.random.default_rng(0)
+    b, s, h, dh = 2, 64, 2, 8
+    q = jnp.asarray(rng.normal(0, 1, (b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (b, s, h, dh)), jnp.float32) / np.sqrt(dh)
+    v = jnp.asarray(rng.normal(0, 1, (b, s, h, dh)), jnp.float32)
+    li = jnp.asarray(rng.normal(0, 1, (b, s, h)), jnp.float32)
+    lf = jnp.asarray(np.log(1 / (1 + np.exp(-rng.normal(2, 1, (b, s, h))))),
+                     jnp.float32)
+
+    out_c = XL.mlstm_chunkwise(q, k, v, li, lf, chunk=16)
+
+    c = jnp.zeros((b, h, dh, dh))
+    n = jnp.zeros((b, h, dh))
+    m = jnp.full((b, h), -jnp.inf)
+    outs = []
+    for t in range(s):
+        c, n, m, ht = XL.mlstm_recurrent_step(
+            c, n, m, q[:, t], k[:, t], v[:, t], li[:, t], lf[:, t])
+        outs.append(ht)
+    out_r = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_r),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_mlstm_chunk_invariance(chunk):
+    rng = np.random.default_rng(1)
+    b, s, h, dh = 1, 64, 2, 4
+    args = [jnp.asarray(rng.normal(0, 1, (b, s, h, dh)), jnp.float32)
+            for _ in range(3)]
+    li = jnp.asarray(rng.normal(0, 1, (b, s, h)), jnp.float32)
+    lf = jnp.asarray(-np.abs(rng.normal(0.1, 0.2, (b, s, h))), jnp.float32)
+    ref = XL.mlstm_chunkwise(*args, li, lf, chunk=s)
+    out = XL.mlstm_chunkwise(*args, li, lf, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_mamba_chunked_scan_matches_sequential():
+    rng = np.random.default_rng(2)
+    b, s, di, n = 2, 32, 8, 4
+    abar = jnp.asarray(np.exp(-np.abs(rng.normal(0.2, .2, (b, s, di, n)))),
+                       jnp.float32)
+    bx = jnp.asarray(rng.normal(0, 1, (b, s, di, n)), jnp.float32)
+    h0 = jnp.zeros((b, di, n))
+    ys, hf = MB._ssm_scan_chunked(abar, bx, h0, chunk=8)
+    # sequential reference
+    h = h0
+    outs = []
+    for t in range(s):
+        h = abar[:, t] * h + bx[:, t]
+        outs.append(h)
+    ref = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(ys), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(ref[:, -1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_mamba_decode_matches_prefill():
+    cfg = SSMConfig(d_state=4, d_conv=4, expand=2)
+    d_model = 8
+    p = init_from_spec(MB.mamba_spec(cfg, d_model, jnp.float32),
+                       jax.random.PRNGKey(1))
+    p["a_log"] = jnp.asarray(
+        np.log(np.random.default_rng(3).uniform(0.5, 1.5,
+                                                p["a_log"].shape)),
+        jnp.float32)
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(0, 1, (2, 12, d_model)), jnp.float32)
+    full = MB.apply_mamba(p, cfg, x, chunk=4)
+
+    state = {"h": jnp.zeros((2, 2 * d_model, 4)),
+             "conv": jnp.zeros((2, 3, 2 * d_model))}
+    outs = []
+    for t in range(12):
+        o, state = MB.decode_mamba(p, cfg, x[:, t:t + 1], state)
+        outs.append(o)
+    dec = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_slstm_decode_matches_scan():
+    cfg = SSMConfig(num_heads=2)
+    d_model = 8
+    p = init_from_spec(XL.slstm_spec(cfg, d_model, jnp.float32),
+                       jax.random.PRNGKey(2))
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(0, 1, (2, 10, d_model)), jnp.float32)
+    full = XL.apply_slstm(p, cfg, x)
+    state = {"c": jnp.zeros((2, 2, 4)), "n": jnp.zeros((2, 2, 4)),
+             "m": jnp.full((2, 2, 4), -jnp.inf), "h": jnp.zeros((2, 2, 4))}
+    outs = []
+    for t in range(10):
+        o, state = XL.decode_slstm(p, cfg, x[:, t:t + 1], state)
+        outs.append(o)
+    dec = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_decode_matches_prefill():
+    cfg = SSMConfig(num_heads=2, proj_factor=2.0, d_conv=4)
+    d_model = 8
+    p = init_from_spec(XL.mlstm_spec(cfg, d_model, jnp.float32),
+                       jax.random.PRNGKey(3))
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.normal(0, 1, (2, 12, d_model)), jnp.float32)
+    full = XL.apply_mlstm(p, cfg, x, chunk=4)
+    di = 16
+    state = {"c": jnp.zeros((2, 2, 8, 8)), "n": jnp.zeros((2, 2, 8)),
+             "m": jnp.full((2, 2), -jnp.inf),
+             "conv": jnp.zeros((2, 3, di))}
+    outs = []
+    for t in range(12):
+        o, state = XL.decode_mlstm(p, cfg, x[:, t:t + 1], state)
+        outs.append(o)
+    dec = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=3e-3, atol=3e-3)

@@ -1,0 +1,115 @@
+"""Per-architecture smoke tests (assignment requirement): reduced config of
+the same family, one forward + one train step + one decode step on CPU,
+asserting shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ShapeConfig, TrainConfig, get_config, list_archs
+from repro.models import api
+from repro.optim.adamw import adamw_init
+from repro.train.step import make_train_step
+
+LM_ARCHS = [
+    "llama3-8b", "yi-9b", "granite-34b", "gemma3-12b",
+    "deepseek-v2-lite-16b", "qwen2-moe-a2.7b", "qwen2-vl-72b",
+    "whisper-small", "xlstm-350m", "jamba-v0.1-52b",
+]
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_arch_smoke(arch):
+    cfg = get_config(arch, reduced=True)
+    key = jax.random.PRNGKey(0)
+    params = api.init_params(cfg, key)
+    shape = ShapeConfig("smoke", "train", 64, 2)
+    batch = api.make_batch(cfg, shape, key)
+    batch["tokens"] = batch["tokens"] % cfg.vocab_size
+    batch["labels"] = batch["labels"] % cfg.vocab_size
+
+    loss, metrics = jax.jit(
+        lambda p, b: api.loss_fn(cfg, p, b, q_chunk=32))(params, batch)
+    assert np.isfinite(float(loss)), arch
+
+    tcfg = TrainConfig()
+    step = make_train_step(cfg, tcfg, q_chunk=32)
+    opt = adamw_init(params)
+    p2, o2, m2 = jax.jit(step)(params, opt, batch)
+    assert np.isfinite(float(m2["loss"]))
+    # params actually changed
+    d0 = jax.tree.leaves(params)[0]
+    d1 = jax.tree.leaves(p2)[0]
+    assert not np.array_equal(np.asarray(d0, np.float32),
+                              np.asarray(d1, np.float32))
+
+    # one decode step
+    dshape = ShapeConfig("d", "decode", 64, 2)
+    dins = api.input_specs(cfg, dshape)
+    state = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), dins["state"],
+                         is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    state["pos"] = jnp.int32(5)
+    tok = jnp.ones((2, 1), jnp.int32)
+    logits, st2 = jax.jit(
+        lambda p, s, t: api.decode_step(cfg, p, s, t))(params, state, tok)
+    assert logits.shape == (2, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert int(st2["pos"]) == 6
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_full_config_matches_assignment(arch):
+    """Spot-check the exact published dims of the full-size configs."""
+    cfg = get_config(arch)
+    expect = {
+        "llama3-8b": (32, 4096, 14336, 128256, 32, 8),
+        "yi-9b": (48, 4096, 11008, 64000, 32, 4),
+        "granite-34b": (88, 6144, 24576, 49152, 48, 1),
+        "gemma3-12b": (48, 3840, 15360, 262144, 16, 8),
+        "deepseek-v2-lite-16b": (27, 2048, None, 102400, 16, 16),
+        "qwen2-moe-a2.7b": (24, 2048, 1408, 151936, 16, 16),
+        "qwen2-vl-72b": (80, 8192, 29568, 152064, 64, 8),
+        "whisper-small": (12, 768, 3072, 51865, 12, 12),
+        "xlstm-350m": (24, 1024, 0, 50304, 4, 4),
+        "jamba-v0.1-52b": (32, 4096, 14336, 65536, 32, 8),
+    }[arch]
+    L, d, ff, v, h, kv = expect
+    assert cfg.num_layers == L and cfg.d_model == d and cfg.vocab_size == v
+    assert cfg.attention.num_heads == h
+    assert cfg.attention.num_kv_heads == kv
+    if ff is not None:
+        assert cfg.d_ff == ff
+    # family-specific invariants
+    if arch == "deepseek-v2-lite-16b":
+        assert cfg.attention.kv_lora_rank == 512
+        assert cfg.moe.num_experts == 64 and cfg.moe.top_k == 6
+        assert cfg.moe.num_shared == 2 and cfg.moe.d_ff_expert == 1408
+        assert cfg.num_dense_prefix == 1
+    if arch == "qwen2-moe-a2.7b":
+        assert cfg.moe.num_experts == 60 and cfg.moe.top_k == 4
+        assert cfg.moe.num_shared == 4
+    if arch == "jamba-v0.1-52b":
+        mixers = [s.mixer for s in cfg.layer_specs()]
+        assert mixers.count("attn") == 4  # 1:7 attention:mamba
+        assert cfg.moe.num_experts == 16 and cfg.moe.top_k == 2
+        ffns = [s.ffn for s in cfg.layer_specs()]
+        assert ffns.count("moe") == 16  # every other layer
+    if arch == "gemma3-12b":
+        wins = [s.window for s in cfg.layer_specs()]
+        assert wins.count(0) == 8 and wins.count(1024) == 40  # 5:1
+    if arch == "xlstm-350m":
+        mixers = [s.mixer for s in cfg.layer_specs()]
+        assert "mlstm" in mixers and "slstm" in mixers
+    if arch == "qwen2-vl-72b":
+        assert cfg.attention.rope_kind == "mrope"
+        assert sum(cfg.attention.mrope_sections) == 64
+    if arch == "whisper-small":
+        assert cfg.encoder.num_layers == 12
+        assert cfg.encoder.seq_len == 1500
+
+
+def test_registry_lists_everything():
+    archs = list_archs()
+    for a in LM_ARCHS:
+        assert a in archs
+    assert "neuralut-hdr-5l" in archs
