@@ -21,8 +21,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig3_boundaries, fig5_ablation, fig6_7_pareto,
-                            kernel_bench, lm_step_bench, table1_params,
-                            table3_eval)
+                            kernel_bench, lm_step_bench, serve_bench,
+                            table1_params, table3_eval)
 
     suites = {
         "table1": lambda: table1_params.run(),
@@ -36,6 +36,7 @@ def main() -> None:
         "table3": lambda: table3_eval.run(fast=args.fast),
         "kernel": lambda: kernel_bench.run(),
         "lm_step": lambda: lm_step_bench.run(),
+        "serve": lambda: serve_bench.run(reduced=args.fast),
     }
     print("name,us_per_call,derived")
     failed = []

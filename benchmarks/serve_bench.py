@@ -1,0 +1,147 @@
+"""Closed-loop serving benchmark: offered load vs latency for the LUT engine.
+
+A pool of closed-loop clients (each submits a single-sample request, waits
+for the prediction, submits the next) drives ``repro.serve.LUTServeEngine``;
+sweeping the client count sweeps offered load.  For each concurrency level
+we report the engine's own metrics — p50/p95/p99 end-to-end latency,
+achieved throughput, mean queue depth and batch occupancy — which together
+form the repo's serving performance trajectory (EXPERIMENTS.md §Perf,
+serving section).
+
+The bundle is trained once, saved through the registry, and *loaded back*
+before serving, so the bench also exercises the deploy path end to end and
+verifies bit-exactness against the ``lut_infer.lut_forward`` oracle.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py --reduced
+
+Emits CSV lines ``name,us_per_call,derived`` (benchmarks/common.py); the
+us_per_call column carries the p50 request latency.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+import tempfile
+import threading
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.config import get_config
+from repro.core import lut_infer as LI
+from repro.core import model as M
+from repro.core import truth_table as TT
+from repro.core.train import train_neuralut
+from repro.data import jsc_synthetic
+from repro.serve import (LUTServeEngine, ServeMetrics, TableRegistry,
+                         bundle_from_training)
+
+
+def _train_bundle(arch: str, *, reduced: bool, epochs: int, registry_dir: str):
+    cfg = get_config(arch, reduced=reduced)
+    xtr, ytr = jsc_synthetic(8000 if reduced else 20000, seed=0)
+    xte, yte = jsc_synthetic(2000, seed=1)
+    params, state, hist = train_neuralut(
+        cfg, xtr, ytr, xte, yte, epochs=epochs, batch=256, lr=2e-3)
+    statics = M.model_static(cfg)
+    tables = TT.convert(cfg, params, state, statics)
+    bundle = bundle_from_training(
+        cfg, params, tables, statics,
+        meta={"train_acc_q": float(hist["test_acc_q"][-1])})
+    reg = TableRegistry(registry_dir)
+    reg.save(cfg.name, bundle)
+    # The serving path must consume the *saved artifact*, not training state.
+    loaded = reg.load(cfg.name)
+
+    # bit-exactness gate: engine predictions == lut_forward oracle
+    codes = LI.input_codes(cfg, params, jnp.asarray(xte))
+    out = LI.lut_forward(cfg, tables, statics, codes)
+    ref = np.asarray(jnp.argmax(LI.class_values(cfg, params, out), -1))
+    with LUTServeEngine(loaded, use_kernel=False) as eng:
+        eng.warmup()
+        got = eng.predict(xte)
+    exact = bool((got == ref).all())
+    emit("serve/registry_bit_exact", 0.0,
+         f"exact={exact};acc_q={loaded.meta.get('train_acc_q', 0):.4f}")
+    if not exact:
+        raise SystemExit("registry round-trip predictions diverge from "
+                         "lut_forward oracle")
+    return loaded, xte
+
+
+def _closed_loop(engine: LUTServeEngine, x: np.ndarray, *, clients: int,
+                 requests_per_client: int) -> None:
+    def client(cid: int) -> None:
+        rng = np.random.default_rng(cid)
+        for _ in range(requests_per_client):
+            engine.predict(x[rng.integers(0, len(x))])
+
+    threads = [threading.Thread(target=client, args=(c,))
+               for c in range(clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+
+def run(*, reduced: bool = True, epochs: int = 0,
+        arch: str = "neuralut-jsc-2l", registry_dir: str = "",
+        clients_sweep=(1, 4, 16, 64), requests_per_client: int = 0,
+        max_wait_ms: float = 2.0) -> None:
+    epochs = epochs or (3 if reduced else 20)
+    requests_per_client = requests_per_client or (50 if reduced else 200)
+    tmp = None
+    if not registry_dir:
+        tmp = tempfile.TemporaryDirectory()
+        registry_dir = tmp.name
+    try:
+        bundle, xte = _train_bundle(arch, reduced=reduced, epochs=epochs,
+                                    registry_dir=registry_dir)
+        for clients in clients_sweep:
+            metrics = ServeMetrics()
+            with LUTServeEngine(bundle, max_wait_ms=max_wait_ms,
+                                use_kernel=False, metrics=metrics) as eng:
+                eng.warmup()
+                _closed_loop(eng, xte, clients=clients,
+                             requests_per_client=requests_per_client)
+            r = metrics.report()
+            emit(f"serve/closed_loop_c{clients}", r["p50_ms"] * 1e3,
+                 f"p50_ms={r['p50_ms']:.2f};p95_ms={r['p95_ms']:.2f};"
+                 f"p99_ms={r['p99_ms']:.2f};"
+                 f"throughput_sps={r['throughput_sps']:.0f};"
+                 f"occupancy={r['batch_occupancy']:.2f};"
+                 f"queue_depth={r['mean_queue_depth']:.1f};"
+                 f"requests={int(r['requests'])}")
+    finally:
+        if tmp is not None:
+            tmp.cleanup()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny model + short sweep (CPU/CI mode)")
+    ap.add_argument("--arch", default="neuralut-jsc-2l")
+    ap.add_argument("--epochs", type=int, default=0)
+    ap.add_argument("--registry", default="",
+                    help="persist the bundle here (default: temp dir)")
+    ap.add_argument("--clients", type=int, nargs="+",
+                    default=[1, 4, 16, 64])
+    ap.add_argument("--requests-per-client", type=int, default=0)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(reduced=args.reduced, epochs=args.epochs, arch=args.arch,
+        registry_dir=args.registry, clients_sweep=tuple(args.clients),
+        requests_per_client=args.requests_per_client,
+        max_wait_ms=args.max_wait_ms)
+
+
+if __name__ == "__main__":
+    main()

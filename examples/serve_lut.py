@@ -1,11 +1,15 @@
-"""End-to-end serving driver (the paper's deployment scenario): train a
-NeuraLUT model, convert to LUTs, and serve batched classification requests
-through the bit-exact LUT path with latency percentiles.
+"""End-to-end serving driver (the paper's deployment scenario): serve
+batched classification requests through the production LUT engine
+(``repro.serve``) with latency percentiles, throughput, queue depth and
+batch-occupancy metrics.
 
     PYTHONPATH=src python examples/serve_lut.py --requests 200 --batch 64
 
-This is the software twin of the FPGA: every request goes through integer
-LUT lookups only (the Pallas lut_gather kernel on TPU; jnp gather here).
+First run trains once, converts to truth tables, and saves the bundle to
+``--registry`` (default results/registry); subsequent runs load the saved
+artifact and serve WITHOUT retraining — the software twin of shipping a
+bitstream to the FPGA.  Every request goes through integer LUT lookups only
+(the Pallas lut_gather kernel on TPU; jnp gather elsewhere).
 """
 import pathlib
 import sys

@@ -33,7 +33,7 @@ from repro.config import SHAPES, TrainConfig, get_config, list_archs
 from repro.launch.mesh import make_mesh_from_config, mesh_config
 from repro.models import api
 from repro.roofline.analysis import (
-    model_flops_estimate, param_count, roofline_report,
+    _peak_memory, model_flops_estimate, param_count, roofline_report,
 )
 from repro.sharding import (
     batch_partition, cache_partition, named, param_partition,
@@ -153,7 +153,7 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, *,
             param_count=param_count(cfg),
             roofline=rep.to_dict(),
             memory={
-                "peak_per_device": getattr(mem, "peak_memory_in_bytes", None),
+                "peak_per_device": _peak_memory(mem),
                 "arguments_per_device": getattr(mem, "argument_size_in_bytes", None),
                 "temp_per_device": getattr(mem, "temp_size_in_bytes", None),
                 "output_per_device": getattr(mem, "output_size_in_bytes", None),

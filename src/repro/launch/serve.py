@@ -2,10 +2,13 @@
 
 Two modes, matching the paper's kind (ultra-low-latency inference):
 
-  * ``--mode lut``: train (or load) a NeuraLUT model, convert to truth
-    tables, and serve batched classification requests over the bit-exact
-    LUT path — the software twin of the generated FPGA.  Reports
-    p50/p95/p99 request latency and throughput.
+  * ``--mode lut``: serve batched classification requests through the
+    production LUT engine (``repro.serve``).  Converted truth tables are a
+    deployable artifact: if ``--registry`` already holds a bundle for the
+    arch, it is loaded and served directly — *no retraining*.  Otherwise the
+    model is trained once, converted, saved to the registry, then served.
+    Reports p50/p95/p99 request latency, throughput, queue depth and batch
+    occupancy from the engine's metrics tracker.
 
   * ``--mode lm``: decode tokens from a reduced LM with a KV cache
     (greedy), demonstrating the serve_step path end-to-end.
@@ -16,58 +19,84 @@ import argparse
 import time
 
 
-def serve_lut(args) -> None:
-    import jax
-    import jax.numpy as jnp
-    import numpy as np
+def build_lut_bundle(args):
+    """Load the serving bundle from the registry, or train-convert-save it
+    once if absent (or ``--retrain``)."""
     from repro.config import get_config
-    from repro.core import lut_infer as LI
     from repro.core import model as M
     from repro.core import truth_table as TT
     from repro.core.train import train_neuralut
     from repro.data import jsc_synthetic
-    from repro.kernels.ops import lut_lookup_op
+    from repro.serve import TableRegistry, bundle_from_training
 
     cfg = get_config(args.arch, reduced=args.reduced)
+    if getattr(cfg, "in_features", None) != 16:
+        raise SystemExit(f"--mode lut expects a JSC NeuraLUT config, got "
+                         f"'{args.arch}' — try --mode lm for LM archs")
+    reg = TableRegistry(args.registry) if args.registry else None
+
+    if reg is not None and reg.has(cfg.name) and not args.retrain:
+        bundle = reg.load(cfg.name)
+        print(f"loaded bundle '{cfg.name}' from {args.registry} "
+              f"(tables: {bundle.num_table_bytes/1024:.1f} KiB, "
+              f"meta: {bundle.meta}) — no retraining", flush=True)
+        return bundle
+
     xtr, ytr = jsc_synthetic(20000, seed=0)
     xte, yte = jsc_synthetic(4000, seed=1)
-    if cfg.in_features != 16:
-        raise SystemExit("lut serving demo expects a JSC config")
     print(f"training {cfg.name} ...", flush=True)
     params, state, hist = train_neuralut(
         cfg, xtr, ytr, xte, yte, epochs=args.epochs, batch=256, lr=2e-3,
         log_every=max(1, args.epochs // 4))
     statics = M.model_static(cfg)
     tables = TT.convert(cfg, params, state, statics)
-    print(f"accuracy (quantized): {hist['test_acc_q'][-1]:.4f}", flush=True)
+    acc_q = hist["test_acc_q"][-1]
+    print(f"accuracy (quantized): {acc_q:.4f}", flush=True)
+    bundle = bundle_from_training(cfg, params, tables, statics,
+                                  meta={"train_acc_q": float(acc_q)})
+    if reg is not None:
+        path = reg.save(cfg.name, bundle)
+        print(f"saved bundle -> {path}", flush=True)
+    return bundle
 
-    @jax.jit
-    def serve_batch(x):
-        codes = LI.input_codes(cfg, params, x)
-        out = LI.lut_forward(cfg, tables, statics, codes)
-        return jnp.argmax(LI.class_values(cfg, params, out), axis=-1)
 
-    # warmup + request loop
-    rng = np.random.default_rng(0)
-    lat = []
-    bsz = args.batch
-    _ = serve_batch(jnp.asarray(xte[:bsz])).block_until_ready()
-    n_req = args.requests
-    t_start = time.time()
-    for _ in range(n_req):
-        idx = rng.integers(0, len(xte), bsz)
-        t0 = time.perf_counter()
-        pred = serve_batch(jnp.asarray(xte[idx]))
-        pred.block_until_ready()
-        lat.append((time.perf_counter() - t0) * 1e3)
-    wall = time.time() - t_start
-    lat = np.sort(np.array(lat))
-    acc = float((np.asarray(serve_batch(jnp.asarray(xte))) == yte).mean())
-    print(f"served {n_req} requests x batch {bsz}: "
-          f"p50={lat[int(.5*n_req)]:.2f}ms p95={lat[int(.95*n_req)]:.2f}ms "
-          f"p99={lat[int(.99*n_req)-1]:.2f}ms "
-          f"throughput={n_req*bsz/wall:.0f} samples/s acc={acc:.4f}",
-          flush=True)
+def serve_lut(args) -> None:
+    from collections import deque
+
+    import numpy as np
+    from repro.data import jsc_synthetic
+    from repro.serve import LUTServeEngine
+
+    bundle = build_lut_bundle(args)
+    xte, yte = jsc_synthetic(4000, seed=1)
+
+    with LUTServeEngine(bundle, max_wait_ms=args.max_wait_ms,
+                        use_kernel=args.kernel or None) as eng:
+        eng.warmup()
+        rng = np.random.default_rng(0)
+        # Bounded in-flight window: enough concurrency to exercise the
+        # batcher, without the unbounded client burst that would make the
+        # latency percentiles measure our own backlog.
+        correct = total = 0
+        pending: "deque" = deque()
+
+        def drain_one():
+            nonlocal correct, total
+            idx, fut = pending.popleft()
+            pred = fut.result()
+            correct += int((pred == yte[idx]).sum())
+            total += len(idx)
+
+        for _ in range(args.requests):
+            idx = rng.integers(0, len(xte), args.batch)
+            pending.append((idx, eng.submit(xte[idx])))
+            if len(pending) >= args.inflight:
+                drain_one()
+        while pending:
+            drain_one()
+        print(f"served {args.requests} requests x batch {args.batch} "
+              f"(inflight {args.inflight}): "
+              f"{eng.metrics.render()} acc={correct/total:.4f}", flush=True)
 
 
 def serve_lm(args) -> None:
@@ -106,6 +135,16 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--requests", type=int, default=200)
     ap.add_argument("--epochs", type=int, default=20)
+    ap.add_argument("--registry", default="results/registry",
+                    help="bundle store dir; '' disables persistence")
+    ap.add_argument("--retrain", action="store_true",
+                    help="retrain even if a registry bundle exists")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="dynamic batcher admission window")
+    ap.add_argument("--inflight", type=int, default=4,
+                    help="max outstanding requests in the client loop")
+    ap.add_argument("--kernel", action="store_true",
+                    help="force the Pallas lookup kernel (default: TPU only)")
     args = ap.parse_args()
     if args.mode == "lut":
         serve_lut(args)

@@ -39,7 +39,9 @@ def spec_like(tree):
 def init_from_spec(spec, key, scale_overrides=None):
     """Materialize a spec pytree: truncated-normal fan-in init for matrices,
     ones for vectors named like scales, zeros for biases."""
-    leaves, treedef = jax.tree.flatten_with_path(spec)
+    # jax.tree.flatten_with_path only exists on jax >= 0.4.38; the
+    # tree_util spelling works on every version this repo supports.
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(spec)
     keys = jax.random.split(key, len(leaves))
     out = []
     for (path, leaf), k in zip(leaves, keys):

@@ -98,14 +98,28 @@ def roofline_report(*, arch: str, shape: str, mesh: str, num_devices: int,
         hbm_bytes=ana.hbm_bytes,
         collective_bytes=ana.collective_bytes,
         collective_breakdown=dict(ana.collective_breakdown),
-        peak_memory_bytes=(float(memstats.peak_memory_in_bytes)
-                           if memstats is not None else None),
+        peak_memory_bytes=_peak_memory(memstats),
         argument_bytes=(float(memstats.argument_size_in_bytes)
                         if memstats is not None else None),
         model_flops=model_flops,
         unknown_trip_loops=ana.unknown_trip_loops,
     )
     return rep.finish(hw)
+
+
+def _peak_memory(memstats) -> Optional[float]:
+    """Per-device peak live bytes.  jaxlib >= 0.4.36 dropped
+    ``peak_memory_in_bytes`` from CompiledMemoryStats; reconstruct it as
+    arguments + outputs + temporaries (the XLA buffer-assignment peak upper
+    bound) when the direct field is gone."""
+    if memstats is None:
+        return None
+    peak = getattr(memstats, "peak_memory_in_bytes", None)
+    if peak is not None:
+        return float(peak)
+    return float(memstats.argument_size_in_bytes
+                 + memstats.output_size_in_bytes
+                 + memstats.temp_size_in_bytes)
 
 
 def model_flops_estimate(cfg, shape) -> float:

@@ -1,0 +1,28 @@
+"""Production LUT serving: registry of converted-table bundles, a batched
+serving engine over the bit-exact lookup path, and serving metrics.
+
+    bundle = bundle_from_training(cfg, params, tables, statics)
+    TableRegistry(root).save(cfg.name, bundle)        # deploy artifact
+    ...
+    bundle = TableRegistry(root).load(name)           # no retraining
+    with LUTServeEngine(bundle) as eng:
+        eng.warmup()
+        pred = eng.predict(x)                         # or submit() -> Future
+    print(eng.metrics.render())
+"""
+from .engine import DEFAULT_BUCKETS, LUTServeEngine, make_forward_fn, \
+    pick_bucket
+from .metrics import ServeMetrics, percentile
+from .registry import ServeBundle, TableRegistry, bundle_from_training
+
+__all__ = [
+    "DEFAULT_BUCKETS",
+    "LUTServeEngine",
+    "ServeBundle",
+    "ServeMetrics",
+    "TableRegistry",
+    "bundle_from_training",
+    "make_forward_fn",
+    "percentile",
+    "pick_bucket",
+]

@@ -1,0 +1,292 @@
+"""Batched LUT serving engine: request queue + dynamic bucketed batcher.
+
+The serving hot path of a converted NeuraLUT model is a cascade of table
+lookups (one per neuron per layer).  This engine turns that into a
+production-shaped service:
+
+  * Clients ``submit()`` requests of any size; a dispatcher thread coalesces
+    whatever is queued into one batch (up to the largest bucket), bounded by
+    a ``max_wait_ms`` admission window so a lone request is never stuck
+    behind an empty queue.
+
+  * Batches are padded up to a fixed *bucket* size (default 1/8/64/256), so
+    ``jax.jit`` sees a bounded set of shapes: at most ``len(buckets)``
+    retraces ever, all performed eagerly by ``warmup()``.  Oversized
+    requests are served in max-bucket chunks — still no new shapes.
+
+  * The per-layer lookup dispatches to the Pallas ``lut_gather`` kernel on
+    TPU (``repro.kernels.ops.lut_lookup_op``) and to the jnp gather oracle
+    (``repro.core.lut_infer``) elsewhere; both are bit-exact by
+    construction (tests/test_kernels.py), so the engine's predictions are
+    identical to ``lut_infer.lut_forward`` wherever it runs.
+
+  * :class:`repro.serve.metrics.ServeMetrics` records per-request latency,
+    throughput, queue depth and batch occupancy (EXPERIMENTS.md §Perf).
+
+The engine serves a :class:`repro.serve.registry.ServeBundle` — a saved
+artifact — so serving never retrains (see registry.py).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lut_infer as LI
+from repro.serve.metrics import ServeMetrics
+from repro.serve.registry import ServeBundle
+
+DEFAULT_BUCKETS: Tuple[int, ...] = (1, 8, 64, 256)
+
+
+def pick_bucket(n: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket >= n; callers chunk anything larger than the max."""
+    if n <= 0:
+        raise ValueError(f"batch size {n} must be positive")
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+def _divisor_block(n: int, cap: int) -> int:
+    """Largest divisor of n that is <= cap (Pallas grid tiles must divide)."""
+    for d in range(min(cap, n), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def make_forward_fn(bundle: ServeBundle, *, use_kernel: bool,
+                    block_b: int = 8, block_o: int = 32
+                    ) -> Callable[[jax.Array], jax.Array]:
+    """Jitted (B, in_features) float32 -> (B,) int32 class predictions.
+
+    Tables and connectivity are closed-over constants; retraces are per
+    batch shape only (bounded by the engine's buckets).
+    """
+    cfg = bundle.cfg
+    params = bundle.serve_params()
+    tables = [jnp.asarray(np.asarray(t).astype(np.int32))
+              for t in bundle.tables]
+    conns = [jnp.asarray(s["conn"]) for s in bundle.statics]
+
+    if use_kernel:
+        from repro.kernels.ops import lut_lookup_op
+
+    def forward(x: jax.Array) -> jax.Array:
+        codes = LI.input_codes(cfg, params, x)
+        c = codes.astype(jnp.int32)
+        for i in range(cfg.num_layers):
+            gathered = c[:, conns[i]]                          # (B, O, F)
+            addr = LI.pack_index(gathered, cfg.layer_in_bits(i))
+            tbl = tables[i]
+            if use_kernel:
+                bb = _divisor_block(addr.shape[0], block_b)
+                bo = _divisor_block(tbl.shape[0], block_o)
+                c = lut_lookup_op(tbl, addr, block_b=bb, block_o=bo)
+            else:
+                c = tbl[jnp.arange(tbl.shape[0])[None, :], addr]
+            c = c.astype(jnp.int32)
+        vals = LI.class_values(cfg, params, c)
+        return jnp.argmax(vals, axis=-1).astype(jnp.int32)
+
+    return jax.jit(forward)
+
+
+class _Request:
+    __slots__ = ("x", "n", "future", "t_submit")
+
+    def __init__(self, x: np.ndarray):
+        self.x = x
+        self.n = x.shape[0]
+        self.future: "Future[np.ndarray]" = Future()
+        self.t_submit = time.perf_counter()
+
+
+_STOP = object()
+
+
+def _complete(future: Future, result=None, exc=None) -> bool:
+    """Resolve a future, tolerating client-side cancel(): a cancelled
+    future makes set_result/set_exception raise InvalidStateError, which
+    must never kill the dispatcher thread."""
+    try:
+        if exc is not None:
+            future.set_exception(exc)
+        else:
+            future.set_result(result)
+        return True
+    except Exception:
+        return False
+
+
+class LUTServeEngine:
+    """Serve a ServeBundle behind a dynamic batcher (see module docstring)."""
+
+    def __init__(self, bundle: ServeBundle, *,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 max_wait_ms: float = 2.0,
+                 use_kernel: Optional[bool] = None,
+                 metrics: Optional[ServeMetrics] = None):
+        if list(buckets) != sorted(set(buckets)):
+            raise ValueError(f"buckets must be strictly increasing: {buckets}")
+        self.bundle = bundle
+        self.buckets = tuple(int(b) for b in buckets)
+        self.max_wait_s = max_wait_ms / 1e3
+        kern = (jax.default_backend() == "tpu") if use_kernel is None \
+            else use_kernel
+        self.use_kernel = kern
+        self.metrics = metrics or ServeMetrics()
+        self._forward = make_forward_fn(bundle, use_kernel=kern)
+        self._queue: "queue.Queue" = queue.Queue()
+        self._thread: Optional[threading.Thread] = None
+        self._closed = False
+        # Serializes the closed-check + enqueue in submit() against close(),
+        # so a request can never land behind the _STOP sentinel and hang.
+        self._submit_lock = threading.Lock()
+
+    # -- lifecycle --------------------------------------------------------
+
+    def start(self) -> "LUTServeEngine":
+        if self._thread is None:
+            self._thread = threading.Thread(target=self._dispatch_loop,
+                                            daemon=True,
+                                            name="lut-serve-dispatch")
+            self._thread.start()
+        return self
+
+    def warmup(self) -> None:
+        """Trace/compile every bucket shape up front so no client request
+        ever pays a compile."""
+        f = self.bundle.cfg.in_features
+        for b in self.buckets:
+            self._forward(jnp.zeros((b, f), jnp.float32)).block_until_ready()
+
+    def close(self) -> None:
+        with self._submit_lock:
+            if self._closed:
+                return
+            self._closed = True
+            self._queue.put(_STOP)
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def __enter__(self) -> "LUTServeEngine":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- client API -------------------------------------------------------
+
+    def submit(self, x: np.ndarray) -> "Future[np.ndarray]":
+        """Enqueue a request of shape (n, in_features) or (in_features,).
+        The future resolves to the (n,) int32 class predictions ((1,) for a
+        single flat sample)."""
+        x = np.asarray(x, np.float32)
+        if x.ndim == 1:
+            x = x[None, :]
+        if x.ndim != 2 or x.shape[1] != self.bundle.cfg.in_features:
+            raise ValueError(
+                f"request shape {x.shape} != (n, "
+                f"{self.bundle.cfg.in_features})")
+        req = _Request(x)
+        with self._submit_lock:
+            if self._closed:
+                raise RuntimeError("engine is closed")
+            if self._thread is None:
+                self.start()
+            self._queue.put(req)
+        return req.future
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        """Synchronous convenience wrapper over submit()."""
+        return self.submit(x).result()
+
+    # -- dispatcher -------------------------------------------------------
+
+    def _dispatch_loop(self) -> None:
+        max_bucket = self.buckets[-1]
+        stop = False
+        while not stop:
+            try:
+                first = self._queue.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            if first is _STOP:
+                break
+            batch: List[_Request] = [first]
+            total = first.n
+            deadline = time.perf_counter() + self.max_wait_s
+            # Coalesce until the largest bucket is full or the admission
+            # window closes — whichever is first.
+            while total < max_bucket:
+                wait = deadline - time.perf_counter()
+                if wait <= 0:
+                    break
+                try:
+                    nxt = self._queue.get(timeout=wait)
+                except queue.Empty:
+                    break
+                if nxt is _STOP:
+                    stop = True
+                    break
+                batch.append(nxt)
+                total += nxt.n
+            self._serve(batch, total)
+        # fail any requests left behind on shutdown
+        while True:
+            try:
+                r = self._queue.get_nowait()
+            except queue.Empty:
+                break
+            if r is not _STOP:
+                _complete(r.future, exc=RuntimeError("engine closed"))
+
+    def _serve(self, batch: List[_Request], total: int) -> None:
+        depth = self._queue.qsize()
+        x = (batch[0].x if len(batch) == 1
+             else np.concatenate([r.x for r in batch], axis=0))
+        try:
+            preds, padded = self._run(x)
+        except Exception as e:  # surface engine errors to every waiter
+            for r in batch:
+                _complete(r.future, exc=e)
+            return
+        t_done = time.perf_counter()
+        off = 0
+        for r in batch:
+            delivered = _complete(r.future, preds[off:off + r.n])
+            off += r.n
+            if delivered:
+                self.metrics.record_request(t_done - r.t_submit, r.n)
+        self.metrics.record_batch(total, padded, depth)
+
+    def _run(self, x: np.ndarray) -> Tuple[np.ndarray, int]:
+        """Serve (n, F) through bucket-padded jitted calls; returns the
+        (n,) predictions and the number of dispatched (padded) slots."""
+        n = x.shape[0]
+        max_bucket = self.buckets[-1]
+        outs: List[np.ndarray] = []
+        padded = 0
+        for s in range(0, n, max_bucket):
+            chunk = x[s:s + max_bucket]
+            b = pick_bucket(chunk.shape[0], self.buckets)
+            if chunk.shape[0] < b:
+                pad = np.zeros((b - chunk.shape[0], x.shape[1]), x.dtype)
+                xc = np.concatenate([chunk, pad], axis=0)
+            else:
+                xc = chunk
+            out = np.asarray(self._forward(jnp.asarray(xc)))
+            outs.append(out[:chunk.shape[0]])
+            padded += b
+        return np.concatenate(outs, axis=0), padded

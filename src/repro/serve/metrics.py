@@ -1,0 +1,108 @@
+"""Serving metrics: request latency percentiles, throughput, queue depth,
+batch occupancy.
+
+The tracker is deliberately dependency-free and lock-guarded so the engine's
+dispatcher thread can record while a client thread reads a report.  Latency
+percentiles use the nearest-rank method (exact on the recorded sample set,
+no interpolation) — the same convention the EXPERIMENTS.md §Perf serving
+tables use, and trivially unit-testable (tests/test_serve_engine.py).
+"""
+from __future__ import annotations
+
+import json
+import math
+import threading
+import time
+from typing import Dict, List, Optional, Sequence
+
+
+def percentile(sorted_values: Sequence[float], p: float) -> float:
+    """Nearest-rank percentile of an ascending-sorted sequence.
+
+    p in (0, 100]; rank = ceil(p/100 * n), so percentile(v, 100) is the max
+    and small samples resolve to real observations (no interpolation).
+    """
+    n = len(sorted_values)
+    if n == 0:
+        raise ValueError("percentile of empty sequence")
+    if not 0 < p <= 100:
+        raise ValueError(f"p={p} out of (0, 100]")
+    rank = max(1, math.ceil(p * n / 100 - 1e-9))
+    return float(sorted_values[min(rank, n) - 1])
+
+
+class ServeMetrics:
+    """Accumulates per-request and per-batch serving statistics."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._lat_s: List[float] = []       # per-request end-to-end latency
+        self._samples = 0                   # total samples served
+        self._batches = 0
+        self._real = 0                      # real samples across batches
+        self._padded = 0                    # padded (dispatched) batch slots
+        self._queue_depths: List[int] = []
+        self._t_first: Optional[float] = None
+        self._t_last: Optional[float] = None
+
+    # -- recording (dispatcher thread) ------------------------------------
+
+    def record_request(self, latency_s: float, n_samples: int = 1) -> None:
+        now = time.perf_counter()
+        with self._lock:
+            self._lat_s.append(latency_s)
+            self._samples += n_samples
+            if self._t_first is None:
+                self._t_first = now - latency_s
+            self._t_last = now
+
+    def record_batch(self, n_real: int, n_padded: int,
+                     queue_depth: int) -> None:
+        with self._lock:
+            self._batches += 1
+            self._real += n_real
+            self._padded += n_padded
+            self._queue_depths.append(queue_depth)
+
+    # -- reading ----------------------------------------------------------
+
+    def latency_ms(self, p: float) -> float:
+        with self._lock:
+            lat = sorted(self._lat_s)
+        return percentile(lat, p) * 1e3 if lat else float("nan")
+
+    def report(self) -> Dict[str, float]:
+        with self._lock:
+            lat = sorted(self._lat_s)
+            samples, batches = self._samples, self._batches
+            real, padded = self._real, self._padded
+            depths = list(self._queue_depths)
+            elapsed = ((self._t_last - self._t_first)
+                       if self._t_first is not None and self._t_last is not None
+                       and self._t_last > self._t_first else 0.0)
+        rep: Dict[str, float] = {
+            "requests": float(len(lat)),
+            "samples": float(samples),
+            "batches": float(batches),
+            "elapsed_s": elapsed,
+            "throughput_sps": samples / elapsed if elapsed > 0 else float("nan"),
+            "batch_occupancy": real / padded if padded else float("nan"),
+            "mean_queue_depth": (sum(depths) / len(depths)) if depths
+            else float("nan"),
+        }
+        for p in (50, 95, 99):
+            rep[f"p{p}_ms"] = percentile(lat, p) * 1e3 if lat else float("nan")
+        return rep
+
+    def render(self) -> str:
+        r = self.report()
+        return (f"requests={int(r['requests'])} samples={int(r['samples'])} "
+                f"batches={int(r['batches'])} "
+                f"p50={r['p50_ms']:.2f}ms p95={r['p95_ms']:.2f}ms "
+                f"p99={r['p99_ms']:.2f}ms "
+                f"throughput={r['throughput_sps']:.0f} samples/s "
+                f"occupancy={r['batch_occupancy']:.2f} "
+                f"queue_depth={r['mean_queue_depth']:.1f}")
+
+    def to_json(self) -> str:
+        return json.dumps(self.report(), sort_keys=True)

@@ -1,0 +1,174 @@
+"""Registry of converted LUT models: the deployable serving artifact.
+
+A *bundle* is everything the bit-exact LUT path needs and nothing it does
+not: the per-layer truth tables, the connectivity (which is NOT re-derivable
+across processes — ``core.layers.layer_static`` seeds it with Python's
+per-process salted ``hash``), and the learned quantizer scales for the input
+encoder and the output decoder.  Trained float weights stay behind in the
+training checkpoint; serving never retrains and never touches them.
+
+Storage rides on :class:`repro.checkpoint.CheckpointStore` (atomic rename,
+committed manifest, keep-last-k), one store per model name:
+
+    <root>/<name>/step_<version>/{manifest.json, shard_0.npz}
+
+The manifest ``meta`` records the full :class:`NeuraLUTConfig` (as a dict)
+plus its fingerprint, so ``load`` reconstructs the config and rebuilds the
+template pytree without any pickled code.  Poly-kind monomial exponents are
+deterministic given the config and are recomputed on load.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointStore
+from repro.config import config_fingerprint
+from repro.core.nl_config import NeuraLUTConfig
+
+BUNDLE_FORMAT = 1
+
+
+@dataclass
+class ServeBundle:
+    """In-memory form of a registry entry (see module docstring)."""
+
+    cfg: NeuraLUTConfig
+    tables: List[np.ndarray]                 # [(O_i, T_i) uint16]
+    statics: List[Dict[str, np.ndarray]]     # [{"conn": (O_i, F_i), ...}]
+    in_log_s: np.ndarray                     # (in_features,) f32
+    layer_log_s: List[np.ndarray]            # [(O_i,) f32]
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    def serve_params(self) -> Dict[str, Any]:
+        """Minimal params pytree compatible with ``repro.core.lut_infer``
+        (input_codes / class_values); hidden-function weights are absent —
+        they were absorbed into the tables."""
+        return {
+            "in_quant": {"log_s": jnp.asarray(self.in_log_s)},
+            "layers": [{"quant": {"log_s": jnp.asarray(s)}}
+                       for s in self.layer_log_s],
+        }
+
+    @property
+    def num_table_bytes(self) -> int:
+        return sum(t.nbytes for t in self.tables)
+
+
+def bundle_from_training(cfg: NeuraLUTConfig, params: Dict, tables: List,
+                         statics: List[Dict], *,
+                         meta: Optional[Dict] = None) -> ServeBundle:
+    """Extract the deployable subset from a training (params, tables,
+    statics) triple."""
+    return ServeBundle(
+        cfg=cfg,
+        tables=[np.asarray(t) for t in tables],
+        statics=[{k: np.asarray(v) for k, v in s.items()} for s in statics],
+        in_log_s=np.asarray(params["in_quant"]["log_s"], np.float32),
+        layer_log_s=[np.asarray(lp["quant"]["log_s"], np.float32)
+                     for lp in params["layers"]],
+        meta=dict(meta or {}),
+    )
+
+
+def _cfg_to_meta(cfg: NeuraLUTConfig) -> Dict[str, Any]:
+    d = dataclasses.asdict(cfg)
+    d["layer_widths"] = list(d["layer_widths"])
+    return d
+
+
+def _cfg_from_meta(d: Dict[str, Any]) -> NeuraLUTConfig:
+    d = dict(d)
+    d["layer_widths"] = tuple(d["layer_widths"])
+    return NeuraLUTConfig(**d)
+
+
+class TableRegistry:
+    """Save/load named ServeBundles under a root directory."""
+
+    def __init__(self, root: str, *, keep: int = 3):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+
+    def _store(self, name: str) -> CheckpointStore:
+        return CheckpointStore(str(self.root / name), keep=self.keep)
+
+    # -- write ------------------------------------------------------------
+
+    def save(self, name: str, bundle: ServeBundle, *,
+             version: int = 0) -> Path:
+        tree = {
+            "tables": [np.ascontiguousarray(t) for t in bundle.tables],
+            "conn": [np.ascontiguousarray(s["conn"])
+                     for s in bundle.statics],
+            "in_log_s": bundle.in_log_s,
+            "layer_log_s": list(bundle.layer_log_s),
+        }
+        meta = {
+            "format": BUNDLE_FORMAT,
+            "config": _cfg_to_meta(bundle.cfg),
+            "fingerprint": config_fingerprint(bundle.cfg),
+            **bundle.meta,
+        }
+        return self._store(name).save(version, tree, meta=meta)
+
+    # -- read -------------------------------------------------------------
+
+    def list_models(self) -> List[str]:
+        return sorted(p.name for p in self.root.iterdir()
+                      if p.is_dir() and CheckpointStore(
+                          str(p), keep=0).latest_step() is not None)
+
+    def has(self, name: str) -> bool:
+        d = self.root / name
+        return d.is_dir() and self._store(name).latest_step() is not None
+
+    def load(self, name: str, *, version: Optional[int] = None
+             ) -> ServeBundle:
+        store = self._store(name)
+        step = store.latest_step() if version is None else version
+        if step is None:
+            raise FileNotFoundError(f"no committed bundle '{name}' under "
+                                    f"{self.root}")
+        manifest = json.loads(
+            (self.root / name / f"step_{step:010d}" / "manifest.json")
+            .read_text())
+        meta = manifest["meta"]
+        if meta.get("format") != BUNDLE_FORMAT:
+            raise ValueError(f"bundle '{name}' has format "
+                             f"{meta.get('format')}, expected "
+                             f"{BUNDLE_FORMAT}")
+        cfg = _cfg_from_meta(meta["config"])
+        nl = cfg.num_layers
+        template = {
+            "tables": [0] * nl,
+            "conn": [0] * nl,
+            "in_log_s": 0,
+            "layer_log_s": [0] * nl,
+        }
+        _, tree = store.restore(template, step=step)
+        statics: List[Dict[str, np.ndarray]] = [
+            {"conn": np.asarray(c)} for c in tree["conn"]]
+        if cfg.kind == "poly":
+            from repro.core.subnet import monomial_exponents
+            for i, s in enumerate(statics):
+                s["exps"] = monomial_exponents(cfg.layer_fan_in(i),
+                                               cfg.degree)
+        extra = {k: v for k, v in meta.items()
+                 if k not in ("format", "config", "fingerprint")}
+        return ServeBundle(
+            cfg=cfg,
+            tables=[np.asarray(t) for t in tree["tables"]],
+            statics=statics,
+            in_log_s=np.asarray(tree["in_log_s"], np.float32),
+            layer_log_s=[np.asarray(s, np.float32)
+                         for s in tree["layer_log_s"]],
+            meta=extra,
+        )

@@ -2,9 +2,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import quant
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import quant  # noqa: E402
 
 
 @pytest.mark.parametrize("beta", [2, 3, 4, 7])

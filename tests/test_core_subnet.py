@@ -4,10 +4,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import subnet
-from repro.models.layers.common import init_from_spec
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import subnet  # noqa: E402
+from repro.models.layers.common import init_from_spec  # noqa: E402
 
 
 @settings(max_examples=40, deadline=None)

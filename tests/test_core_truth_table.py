@@ -3,9 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import lut_infer as LI
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import lut_infer as LI  # noqa: E402
 from repro.core import model as M
 from repro.core import truth_table as TT
 from repro.core.nl_config import NeuraLUTConfig
