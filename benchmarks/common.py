@@ -1,9 +1,16 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing + CSV emission.
+
+Every ``emit`` also lands in ``RECORDS`` so harnesses (benchmarks/run.py)
+can dump machine-readable summaries (e.g. BENCH_kernels.json) next to
+the CSV stream.
+"""
 from __future__ import annotations
 
 import sys
 import time
-from typing import Callable
+from typing import Callable, Dict, List
+
+RECORDS: List[Dict] = []
 
 
 def time_call(fn: Callable, *, warmup: int = 2, iters: int = 10) -> float:
@@ -20,4 +27,24 @@ def time_call(fn: Callable, *, warmup: int = 2, iters: int = 10) -> float:
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    RECORDS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                    "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def write_kernel_summary(cascade_summary: Dict) -> None:
+    """BENCH_kernels.json at the repo root: the kernel perf trajectory
+    (fused-cascade vs per-layer lookups/s, packed table footprint, plus
+    every kernel/* record of this run).  Shared by benchmarks/run.py and
+    ``python -m benchmarks.kernel_bench`` so both entry points write the
+    same schema; the summary's ``fast_mode`` flag marks reduced (CI
+    smoke) sweeps."""
+    import json
+    from pathlib import Path
+    out = Path(__file__).resolve().parent.parent / "BENCH_kernels.json"
+    payload = {
+        "cascade": cascade_summary,
+        "records": [r for r in RECORDS if r["name"].startswith("kernel/")],
+    }
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {out}", flush=True)

@@ -1,11 +1,21 @@
-"""Kernel-level benchmark: fused grouped-subnet + LUT-lookup paths.
+"""Kernel-level benchmark: fused grouped-subnet + LUT-lookup + cascade paths.
 
 Wall-clock on this CPU measures the XLA (jnp) paths; the Pallas kernels run
 in interpret mode (semantics only), so their *structural* win is reported
 from the HLO analyzer instead: op counts and HBM-traffic estimate of the
 fused kernel vs the layer-by-layer einsum chain.
+
+The cascade sweep compares the serving fast path (whole LUT network in ONE
+dispatch, ``kernels/ref.lut_cascade_ref`` jitted end-to-end — the jnp twin
+of the Pallas ``lut_cascade`` kernel) against the per-layer path (one
+jitted dispatch per layer, (B, O) codes round-tripping device memory
+between layers) on the JSC-5L geometry, plus the bit-packed vs unpacked
+table footprint.  ``run()`` returns the cascade summary dict that
+benchmarks/run.py writes to BENCH_kernels.json.
 """
 from __future__ import annotations
+
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +26,106 @@ from repro.kernels.ref import grouped_subnet_ref, lut_gather_ref
 from repro.roofline.hlo import analyze_hlo
 
 
-def run() -> None:
+def _cascade_sweep(fast: bool) -> Dict:
+    """Cascade-vs-per-layer on the JSC-5L shape with random tables
+    (lookup cost does not depend on table contents)."""
+    from repro.configs.neuralut_jsc_5l import full
+    from repro.core.lut_infer import pack_index
+    from repro.kernels.lut_cascade import (build_shift_mats, cascade_meta,
+                                           cascade_tables)
+    from repro.kernels.ops import lut_cascade_op
+    from repro.kernels.ref import lut_cascade_packed_ref
+
+    cfg = full()
+    rng = np.random.default_rng(0)
+    statics, tables = [], []
+    w_prev = cfg.in_features
+    for i, o in enumerate(cfg.layer_widths):
+        f = cfg.layer_fan_in(i)
+        statics.append({"conn": rng.integers(0, w_prev, (o, f))})
+        tables.append(rng.integers(0, 2 ** cfg.beta,
+                                   (o, cfg.table_size(i))).astype(np.uint16))
+        w_prev = o
+    conns = [jnp.asarray(s["conn"]) for s in statics]
+    tbls = [jnp.asarray(t.astype(np.int32)) for t in tables]
+    in_bits = tuple(cfg.layer_in_bits(i) for i in range(cfg.num_layers))
+    lookups = sum(cfg.layer_widths)  # per sample
+
+    # per-layer serving path: one dispatch per layer; the (B, O) code
+    # tensor leaves the device computation between every pair of layers.
+    layer_fns = [
+        jax.jit(lambda c, i=i: lut_gather_ref(
+            tbls[i], pack_index(c[:, conns[i]], in_bits[i])))
+        for i in range(cfg.num_layers)]
+
+    def per_layer(codes):
+        c = codes
+        for fn in layer_fns:
+            c = fn(c)
+        return c
+
+    # fused fast path: whole cascade in ONE jitted dispatch — shift-matmul
+    # addresses + bit-packed table gathers (the serving engine's non-TPU
+    # fused path, same algorithm as the Pallas kernel)
+    packed = cascade_tables(cfg, tables)
+    unpacked_bytes = sum(t.astype(np.int32).nbytes for t in tables)
+    packed_bytes = sum(p.nbytes for p in packed)
+    pts = [jnp.asarray(p) for p in packed]
+    sms = [jnp.asarray(m) for m in build_shift_mats(cfg, statics)]
+    fused = jax.jit(lambda c: lut_cascade_packed_ref(c, sms, pts, cfg.beta))
+
+    sweep = []
+    batches = (256,) if fast else (256, 1024, 4096)
+    for b in batches:
+        codes = jnp.asarray(
+            rng.integers(0, 2 ** cfg.layer_in_bits(0),
+                         (b, cfg.in_features)), jnp.int32)
+        ref_out = np.asarray(per_layer(codes))
+        assert (np.asarray(fused(codes)) == ref_out).all()
+        us_pl = time_call(
+            lambda: jax.block_until_ready(per_layer(codes)))
+        us_f = time_call(lambda: fused(codes).block_until_ready())
+        row = {
+            "batch": b,
+            "per_layer_us": round(us_pl, 1),
+            "fused_us": round(us_f, 1),
+            "per_layer_lookups_per_s": b * lookups / us_pl * 1e6,
+            "fused_lookups_per_s": b * lookups / us_f * 1e6,
+            "speedup": us_pl / us_f,
+        }
+        sweep.append(row)
+        emit(f"kernel/cascade_b{b}", us_f,
+             f"per_layer_us={us_pl:.1f};speedup={row['speedup']:.2f}x;"
+             f"fused_lookups_per_s={row['fused_lookups_per_s']:.2e}")
+
+    # Pallas cascade kernel: interpret-mode bit-exactness on a small tile
+    bsm = 16
+    codes = jnp.asarray(
+        rng.integers(0, 2 ** cfg.layer_in_bits(0), (bsm, cfg.in_features)),
+        jnp.int32)
+    got = np.asarray(lut_cascade_op(codes, sms, pts,
+                                    meta=cascade_meta(cfg), block_b=8))
+    agree = bool((got == np.asarray(per_layer(codes))).all())
+    emit("kernel/cascade_pallas_agreement", 0.0,
+         f"bit_exact={agree};packed_bytes={packed_bytes};"
+         f"unpacked_int32_bytes={unpacked_bytes};"
+         f"ratio={packed_bytes/unpacked_bytes:.4f}")
+
+    return {
+        "config": cfg.name,
+        "fast_mode": fast,
+        "per_layer_dispatches": 3 * cfg.num_layers,
+        "fused_dispatches": 1,
+        "lookups_per_sample": lookups,
+        "table_bytes_unpacked_int32": unpacked_bytes,
+        "table_bytes_packed": packed_bytes,
+        "packed_ratio": packed_bytes / unpacked_bytes,
+        "pallas_cascade_bit_exact": agree,
+        "sweep": sweep,
+    }
+
+
+def run(fast: bool = False) -> Optional[Dict]:
     rng = np.random.default_rng(0)
     B, O, F, N, L, S = 1024, 256, 6, 16, 4, 2
     widths = [F] + [N] * (L - 1) + [1]
@@ -73,6 +182,11 @@ def run() -> None:
     emit("kernel/pallas_interpret_agreement", 0.0,
          f"grouped_subnet={ok1};lut_lookup={ok2}")
 
+    # Fused LUT-cascade serving fast path (the summary feeds
+    # BENCH_kernels.json — the repo's kernel perf trajectory)
+    return _cascade_sweep(fast)
+
 
 if __name__ == "__main__":
-    run()
+    from benchmarks.common import write_kernel_summary
+    write_kernel_summary(run())

@@ -34,7 +34,7 @@ def main() -> None:
             epochs=4 if args.fast else 10,
             n_train=3000 if args.fast else 6000),
         "table3": lambda: table3_eval.run(fast=args.fast),
-        "kernel": lambda: kernel_bench.run(),
+        "kernel": lambda: kernel_bench.run(fast=args.fast),
         "lm_step": lambda: lm_step_bench.run(),
         "serve": lambda: serve_bench.run(reduced=args.fast),
     }
@@ -45,7 +45,10 @@ def main() -> None:
             continue
         t0 = time.time()
         try:
-            fn()
+            result = fn()
+            if name == "kernel" and result:
+                from benchmarks.common import write_kernel_summary
+                write_kernel_summary(result)
             print(f"# suite {name} done in {time.time()-t0:.0f}s",
                   flush=True)
         except Exception:

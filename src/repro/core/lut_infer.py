@@ -8,7 +8,7 @@ version of ``lut_forward``; this module is the jnp oracle.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,13 +20,75 @@ from repro.core.nl_config import NeuraLUTConfig
 Params = Dict
 
 
+def shift_weights(beta: int, fan_in: int) -> np.ndarray:
+    """(F,) int32 place values of each fan-in slot; slot 0 = MSB.
+
+    ``pack_index`` is a dot against this vector, which is also what the
+    fused cascade kernel (kernels/lut_cascade.py) scatters into its
+    per-layer shift matrices.
+    """
+    return np.asarray([1 << (beta * (fan_in - 1 - j))
+                       for j in range(fan_in)], np.int32)
+
+
 def pack_index(codes: jax.Array, beta: int) -> jax.Array:
-    """codes: (..., F) -> LUT addresses; slot 0 = MSB."""
+    """codes: (..., F) -> LUT addresses; slot 0 = MSB.
+
+    Vectorized as a single dot against the precomputed ``beta``-shift
+    vector (no per-slot Python loop): addresses are a linear function of
+    the codes, ``addr = sum_j codes[..., j] << (beta * (F-1-j))``.
+    """
     f = codes.shape[-1]
-    idx = jnp.zeros(codes.shape[:-1], jnp.int32)
-    for j in range(f):
-        idx = (idx << beta) | codes[..., j].astype(jnp.int32)
-    return idx
+    w = jnp.asarray(shift_weights(beta, f))
+    return codes.astype(jnp.int32) @ w
+
+
+def packed_slots(beta: int) -> int:
+    """Codes per int32 word when bit-packing ``beta``-bit codes.
+
+    The largest power of two <= 32 // beta: a power of two so the mux
+    tree's word select consumes whole address bits (the low ``log2(P)``
+    address bits index inside the word)."""
+    if not 1 <= beta <= 16:
+        raise ValueError(f"beta={beta} not packable into int32 words")
+    return 1 << ((32 // beta).bit_length() - 1)
+
+
+def pack_tables(table: np.ndarray, beta: int) -> np.ndarray:
+    """(O, T) beta-bit codes -> (O, T // P) int32 bit-packed words.
+
+    Word ``w`` holds table entries ``w*P + p`` for p in [0, P); entry p
+    occupies bits [beta*p, beta*(p+1)).  P = ``packed_slots(beta)``, so
+    the footprint shrinks by P (8x for beta=4, 16x for beta=2)."""
+    p = packed_slots(beta)
+    t = np.asarray(table)
+    if t.ndim != 2:
+        raise ValueError(f"table must be (O, T), got {t.shape}")
+    o, n = t.shape
+    if n % p:
+        raise ValueError(f"table size {n} not a multiple of P={p} "
+                         f"(beta={beta})")
+    if t.size and (t.min() < 0 or t.max() >= (1 << beta)):
+        raise ValueError(f"table values outside [0, 2^{beta})")
+    grouped = t.astype(np.uint32).reshape(o, n // p, p)
+    words = np.zeros((o, n // p), np.uint32)
+    for j in range(p):
+        words |= grouped[:, :, j] << np.uint32(beta * j)
+    return words.view(np.int32)
+
+
+def unpack_tables(packed: np.ndarray, beta: int, *,
+                  table_size: Optional[int] = None) -> np.ndarray:
+    """Inverse of ``pack_tables``: (O, Tw) int32 -> (O, Tw * P) uint16."""
+    p = packed_slots(beta)
+    w = np.asarray(packed).view(np.uint32)
+    o, nw = w.shape
+    mask = np.uint32((1 << beta) - 1)
+    cols = [(w >> np.uint32(beta * j)) & mask for j in range(p)]
+    out = np.stack(cols, axis=-1).reshape(o, nw * p).astype(np.uint16)
+    if table_size is not None:
+        out = out[:, :table_size]
+    return out
 
 
 def input_codes(cfg: NeuraLUTConfig, params: Params, x: jax.Array) -> jax.Array:

@@ -48,6 +48,12 @@ def layer_truth_table(cfg: NeuraLUTConfig, params: Params, state: Params,
     """uint16 (out_width, 2^{beta_in*F}) output codes for one layer."""
     beta_in = cfg.layer_in_bits(layer_idx)
     F = cfg.layer_fan_in(layer_idx)
+    if beta_in * F > 20:
+        raise ValueError(
+            f"layer {layer_idx}: truth table would have "
+            f"2^{beta_in * F} entries (beta_in={beta_in} x fan_in={F} "
+            f"> 20 address bits); reduce beta/fan-in instead of "
+            f"enumerating it")
     conn = statics[layer_idx]["conn"]  # (O, F)
     out_width = conn.shape[0]
     codes = enumerate_codes(beta_in, F)  # (T, F)
@@ -77,9 +83,17 @@ def layer_truth_table(cfg: NeuraLUTConfig, params: Params, state: Params,
                                 momentum=cfg.bn_momentum)
         return quant.quant_codes(lp["quant"], pre, cfg.beta)
 
+    # Pad the ragged final chunk up to ``batch`` and slice the result, so
+    # eval_chunk only ever sees one shape and jits exactly once per layer.
+    batch = min(batch, t)
     outs = []
     for s in range(0, t, batch):
-        outs.append(np.asarray(eval_chunk(jnp.asarray(codes[s:s + batch]))))
+        chunk = codes[s:s + batch]
+        n = chunk.shape[0]
+        if n < batch:
+            chunk = np.concatenate(
+                [chunk, np.zeros((batch - n, F), chunk.dtype)], axis=0)
+        outs.append(np.asarray(eval_chunk(jnp.asarray(chunk)))[:n])
     table = np.concatenate(outs, axis=0).T  # (O, T)
     return table.astype(np.uint16)
 

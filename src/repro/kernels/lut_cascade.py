@@ -1,0 +1,173 @@
+"""Pallas TPU kernel: fused multi-layer LUT-cascade inference.
+
+A converted NeuraLUT model is *nothing but* a cascade of table lookups
+(one per neuron per layer).  The per-layer serving path dispatches a
+gather + address pack + lookup per layer and round-trips the (B, O) code
+tensor through HBM between layers; this kernel runs the **entire
+multi-layer network per batch tile without leaving VMEM**:
+
+  * every layer's connectivity gather + address pack is fused into one
+    f32 *shift-matmul*: ``addr = codes @ S_i`` where ``S_i`` is the
+    (W_{i-1}, O_i) matrix scattering ``2^{beta*(F-1-j)}`` at
+    ``(conn[o, j], o)`` (see :func:`build_shift_mats`).  Addresses are
+    < 2^20 (guarded at conversion time), so the f32 accumulate is exact;
+
+  * tables live in VMEM **bit-packed**: ``beta``-bit output codes packed
+    ``P = packed_slots(beta)`` per int32 word (~8x smaller for beta=4),
+    so the whole table stack of every paper model fits on-chip;
+
+  * the lookup is the same vectorized binary mux tree as lut_gather.py,
+    but over packed *words*: the high ``log2(T/P)`` address bits drive
+    the tree, the low ``log2(P)`` bits select inside the word with a
+    per-lane logical shift;
+
+  * intermediate codes are carried in registers/VMEM across all layers —
+    one kernel launch for the whole network instead of ``3*num_layers``
+    dispatches, and zero inter-layer HBM traffic.
+
+Grid tiles the batch only; all per-layer shift matrices and packed
+tables are whole-array VMEM operands (constant across the batch loop).
+Non-divisible B is handled by internal padding.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.lut_infer import pack_tables, packed_slots, shift_weights
+
+# Static per-layer geometry: (word_bits, slot_bits, beta_out) where
+# word_bits = log2(T/P) drives the mux tree, slot_bits = log2(P) selects
+# inside the packed word, beta_out is the stored code width.
+LayerMeta = Tuple[int, int, int]
+
+
+def build_shift_mats(cfg, statics: Sequence[dict]) -> List[np.ndarray]:
+    """Per-layer (W_{i-1}, O_i) f32 matrices fusing gather + pack_index.
+
+    ``S[conn[o, j], o] += 2^{beta_in*(F-1-j)}`` — duplicates in ``conn``
+    accumulate, matching ``pack_index`` applied to the gathered codes.
+    """
+    mats = []
+    w_prev = cfg.in_features
+    for i in range(cfg.num_layers):
+        conn = np.asarray(statics[i]["conn"])  # (O, F)
+        o, f = conn.shape
+        w = shift_weights(cfg.layer_in_bits(i), f).astype(np.float32)
+        sm = np.zeros((w_prev, o), np.float32)
+        np.add.at(sm, (conn, np.broadcast_to(np.arange(o)[:, None],
+                                             conn.shape)), w[None, :])
+        mats.append(sm)
+        w_prev = o
+    return mats
+
+
+def cascade_tables(cfg, tables: Sequence[np.ndarray]) -> List[np.ndarray]:
+    """Bit-pack every layer's table with its output code width."""
+    return [pack_tables(np.asarray(t), cfg.beta) for t in tables]
+
+
+def cascade_meta(cfg) -> Tuple[LayerMeta, ...]:
+    """Static kernel geometry per layer, derived from the config."""
+    meta = []
+    for i in range(cfg.num_layers):
+        t = cfg.table_size(i)
+        p = packed_slots(cfg.beta)
+        if t % p:
+            raise ValueError(f"layer {i}: table size {t} not a multiple "
+                             f"of packed word capacity {p}")
+        word_bits = (t // p).bit_length() - 1
+        slot_bits = p.bit_length() - 1
+        meta.append((word_bits, slot_bits, cfg.beta))
+    return tuple(meta)
+
+
+def _mux_word(packed: jax.Array, wsel: jax.Array, word_bits: int
+              ) -> jax.Array:
+    """Binary mux tree over packed words.
+
+    packed: (O, Tw) int32; wsel: (Bt, O) word index -> (Bt, O) int32.
+    MSB-first halving; the first ``where`` broadcasts the (1, O, Tw)
+    table against the per-(token, neuron) bit, so the working set is
+    bounded by Bt*O*Tw/2 from level one on.
+    """
+    live = packed[None]  # (1, O, Tw)
+    for k in range(word_bits):
+        half = live.shape[-1] // 2
+        bit = (wsel >> (word_bits - 1 - k)) & 1  # (Bt, O)
+        live = jnp.where(bit[..., None] == 1, live[..., half:],
+                         live[..., :half])
+    bt, o = wsel.shape
+    return jnp.broadcast_to(live[..., 0], (bt, o))
+
+
+def _cascade_kernel(meta: Tuple[LayerMeta, ...], *refs):
+    """refs: codes, (shift_mat_i, packed_tbl_i) per layer, out."""
+    codes_ref = refs[0]
+    out_ref = refs[-1]
+    # Codes ride between layers as exact small f32 integers: the next
+    # layer's shift-matmul feeds the MXU directly, no casts in the loop.
+    c = codes_ref[...].astype(jnp.float32)  # (Bt, W_0)
+    for i, (word_bits, slot_bits, beta) in enumerate(meta):
+        sm = refs[1 + 2 * i][...]           # (W_{i-1}, O_i) f32
+        packed = refs[2 + 2 * i][...]       # (O_i, Tw_i) int32
+        addr = jnp.dot(c, sm, preferred_element_type=jnp.float32)
+        addr = addr.astype(jnp.int32)       # exact: addr < 2^20 << 2^24
+        wsel = jax.lax.shift_right_logical(addr, slot_bits)
+        slot = addr & ((1 << slot_bits) - 1)
+        word = _mux_word(packed, wsel, word_bits)
+        code = jax.lax.shift_right_logical(word, beta * slot) \
+            & ((1 << beta) - 1)
+        c = code.astype(jnp.float32)
+    out_ref[...] = c.astype(out_ref.dtype)
+
+
+def lut_cascade(
+    codes: jax.Array,                      # (B, W_0) int32 input codes
+    shift_mats: Sequence[jax.Array],       # [(W_{i-1}, O_i) f32]
+    packed_tables: Sequence[jax.Array],    # [(O_i, Tw_i) int32]
+    meta: Tuple[LayerMeta, ...],           # cascade_meta(cfg)
+    *,
+    block_b: int = 8,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Returns (B, O_last) int32 output codes of the whole LUT network.
+
+    Bit-exact vs ``repro.core.lut_infer.lut_forward`` (the oracle) for
+    any valid (tables, statics) pair.  ``interpret=None`` auto-selects:
+    compiled on TPU, interpreter elsewhere.
+    """
+    if len(shift_mats) != len(meta) or len(packed_tables) != len(meta):
+        raise ValueError("shift_mats / packed_tables / meta length mismatch")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b = codes.shape[0]
+    block_b = min(block_b, b)
+    pad_b = (-b) % block_b
+    if pad_b:
+        codes = jnp.pad(codes, ((0, pad_b), (0, 0)))
+    bp = b + pad_b
+    o_last = packed_tables[-1].shape[0]
+
+    in_specs = [pl.BlockSpec((block_b, codes.shape[1]), lambda i: (i, 0))]
+    operands = [codes.astype(jnp.int32)]
+    for sm, tw in zip(shift_mats, packed_tables):
+        in_specs.append(pl.BlockSpec(sm.shape, lambda i: (0, 0)))
+        in_specs.append(pl.BlockSpec(tw.shape, lambda i: (0, 0)))
+        operands.append(sm.astype(jnp.float32))
+        operands.append(tw.astype(jnp.int32))
+
+    out = pl.pallas_call(
+        functools.partial(_cascade_kernel, meta),
+        grid=(bp // block_b,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_b, o_last), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, o_last), jnp.int32),
+        interpret=interpret,
+    )(*operands)
+    return out[:b] if pad_b else out

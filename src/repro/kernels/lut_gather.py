@@ -20,6 +20,7 @@ lookup per neuron per token, entirely memory-resident.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -46,9 +47,16 @@ def lut_lookup(
     *,
     block_b: int = 8,
     block_o: int = 32,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Returns (B, O) int32 == tables[o, addr[b, o]]."""
+    """Returns (B, O) int32 == tables[o, addr[b, o]].
+
+    ``interpret=None`` auto-selects the backend: compiled on TPU,
+    interpreter elsewhere.  Non-divisible B/O are padded internally and
+    sliced back out (padded lanes read address 0 of a zero table row).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     o, t = tables.shape
     b = addr.shape[0]
     nbits = int(t).bit_length() - 1
@@ -56,18 +64,22 @@ def lut_lookup(
         raise ValueError(f"table size {t} not a power of two")
     block_b = min(block_b, b)
     block_o = min(block_o, o)
-    if b % block_b or o % block_o:
-        raise ValueError(f"(B={b}, O={o}) % ({block_b}, {block_o}) != 0")
+    pad_b = (-b) % block_b
+    pad_o = (-o) % block_o
+    if pad_b or pad_o:
+        addr = jnp.pad(addr, ((0, pad_b), (0, pad_o)))
+        tables = jnp.pad(tables, ((0, pad_o), (0, 0)))
+    bp, op = b + pad_b, o + pad_o
 
     out = pl.pallas_call(
         functools.partial(_kernel, nbits),
-        grid=(b // block_b, o // block_o),
+        grid=(bp // block_b, op // block_o),
         in_specs=[
             pl.BlockSpec((block_o, t), lambda i, j: (j, 0)),
             pl.BlockSpec((block_b, block_o), lambda i, j: (i, j)),
         ],
         out_specs=pl.BlockSpec((block_b, block_o), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((b, o), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((bp, op), jnp.int32),
         interpret=interpret,
     )(tables.astype(jnp.int32), addr.astype(jnp.int32))
-    return out
+    return out[:b, :o] if (pad_b or pad_o) else out

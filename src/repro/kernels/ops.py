@@ -12,6 +12,7 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
+from .lut_cascade import lut_cascade
 from .lut_gather import lut_lookup
 from .neuralut_mlp import grouped_subnet
 
@@ -40,6 +41,19 @@ def lut_lookup_op(tables, addr, *, block_b: int = 8, block_o: int = 32,
     interp = (not _on_tpu()) if interpret is None else interpret
     return lut_lookup(tables, addr, block_b=block_b, block_o=block_o,
                       interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("meta", "block_b", "interpret"))
+def lut_cascade_op(codes, shift_mats, packed_tables, *, meta,
+                   block_b: int = 8, interpret: Optional[bool] = None):
+    """Fused whole-network LUT cascade (see kernels/lut_cascade.py).
+
+    ``meta`` is ``lut_cascade.cascade_meta(cfg)``; backend auto-selects
+    (compiled on TPU, interpreter elsewhere) when ``interpret`` is None.
+    """
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return lut_cascade(codes, list(shift_mats), list(packed_tables), meta,
+                       block_b=block_b, interpret=interp)
 
 
 def subnet_params_to_kernel(fn_params: Dict) -> Dict:

@@ -49,3 +49,58 @@ def lut_gather_ref(tables: jax.Array, addr: jax.Array) -> jax.Array:
     """tables: (O, T) int32; addr: (B, O) int32 -> (B, O) int32."""
     o = tables.shape[0]
     return tables[jnp.arange(o)[None, :], addr].astype(jnp.int32)
+
+
+def lut_cascade_ref(codes: jax.Array,
+                    conns: List[jax.Array],
+                    tables: List[jax.Array],
+                    betas: Tuple[int, ...]) -> jax.Array:
+    """Reference for the fused LUT-cascade kernel: per layer, gather the
+    connected codes, pack the address with the vectorized
+    ``lut_infer.pack_index`` dot, and look the output code up.
+
+    codes: (B, W_0) int32; conns[i]: (O_i, F_i); tables[i]: (O_i, T_i);
+    betas[i] = bit-width of the inputs layer i consumes.  Bit-identical
+    to ``lut_infer.lut_forward`` (and to ``lut_cascade``).
+    """
+    from repro.core.lut_infer import pack_index
+    c = codes.astype(jnp.int32)
+    for conn, tbl, beta_in in zip(conns, tables, betas):
+        addr = pack_index(c[:, conn], beta_in)     # (B, O_i)
+        c = lut_gather_ref(tbl.astype(jnp.int32), addr)
+    return c
+
+
+def lut_cascade_packed_ref(codes: jax.Array,
+                           shift_mats: List[jax.Array],
+                           packed_tables: List[jax.Array],
+                           beta_out: int) -> jax.Array:
+    """jnp twin of the Pallas cascade kernel: the serving fast path on
+    non-TPU backends, using the kernel's exact algorithm.
+
+    Per layer: addresses come from one dense f32 *shift-matmul*
+    (``lut_cascade.build_shift_mats`` — fuses the connectivity gather
+    and ``pack_index`` into a GEMM, never materializing the (B, O, F)
+    gathered codes; exact since addresses are < 2^20), then int32
+    *words* are gathered from the bit-packed tables (``P =
+    lut_infer.packed_slots(beta_out)`` codes per word) and the code is
+    extracted with a per-lane logical shift.  The packed gather working
+    set is ~P x smaller than the int32 tables, so lookups stay
+    cache-resident — this beats the unpacked per-layer gather path
+    ~3x wall-clock even on XLA:CPU (see BENCH_kernels.json).
+    Bit-identical to ``lut_cascade_ref``.
+    """
+    from repro.core.lut_infer import packed_slots
+    p = packed_slots(beta_out)
+    slot_bits = p.bit_length() - 1
+    mask = (1 << beta_out) - 1
+    c = codes.astype(jnp.float32)
+    for sm, packed in zip(shift_mats, packed_tables):
+        addr = jnp.dot(c, sm.astype(jnp.float32)).astype(jnp.int32)
+        wsel = jax.lax.shift_right_logical(addr, slot_bits)
+        slot = addr & (p - 1)
+        o = packed.shape[0]
+        word = packed[jnp.arange(o)[None, :], wsel]
+        code = jax.lax.shift_right_logical(word, beta_out * slot) & mask
+        c = code.astype(jnp.float32)
+    return c.astype(jnp.int32)

@@ -14,11 +14,17 @@ production-shaped service:
     retraces ever, all performed eagerly by ``warmup()``.  Oversized
     requests are served in max-bucket chunks — still no new shapes.
 
-  * The per-layer lookup dispatches to the Pallas ``lut_gather`` kernel on
-    TPU (``repro.kernels.ops.lut_lookup_op``) and to the jnp gather oracle
-    (``repro.core.lut_infer``) elsewhere; both are bit-exact by
-    construction (tests/test_kernels.py), so the engine's predictions are
-    identical to ``lut_infer.lut_forward`` wherever it runs.
+  * The default forward is the *fused cascade*: the whole multi-layer LUT
+    network in one dispatch — the Pallas ``lut_cascade`` kernel on TPU
+    (bit-packed tables resident in VMEM, zero inter-layer HBM traffic)
+    and the single-jit bit-packed jnp cascade
+    (``kernels.ref.lut_cascade_packed_ref``, cache-resident packed
+    tables) elsewhere.  ``fused=False``
+    falls back to the per-layer loop (Pallas ``lut_gather`` on TPU, jnp
+    gather oracle elsewhere).  All paths are bit-exact vs
+    ``lut_infer.lut_forward`` (tests/test_kernels.py,
+    tests/test_lut_cascade.py), so predictions are identical wherever the
+    engine runs.
 
   * :class:`repro.serve.metrics.ServeMetrics` records per-request latency,
     throughput, queue depth and batch occupancy (EXPERIMENTS.md §Perf).
@@ -56,44 +62,78 @@ def pick_bucket(n: int, buckets: Sequence[int]) -> int:
 
 
 def _divisor_block(n: int, cap: int) -> int:
-    """Largest divisor of n that is <= cap (Pallas grid tiles must divide)."""
-    for d in range(min(cap, n), 0, -1):
-        if n % d == 0:
-            return d
-    return 1
+    """Largest power-of-two divisor of n that is <= cap, closed form
+    (``n & -n`` isolates n's lowest set bit, the cap rounds down to a
+    power of two).  Used for the *batch* dimension, where n is a bucket
+    size — a power of two — so this returns the full bucket or the cap.
+    The neuron dimension no longer needs a divisor at all: the kernels
+    pad non-divisible O internally."""
+    if n <= 0 or cap <= 0:
+        return 1
+    return min(n & -n, 1 << (cap.bit_length() - 1))
 
 
 def make_forward_fn(bundle: ServeBundle, *, use_kernel: bool,
-                    block_b: int = 8, block_o: int = 32
+                    fused: bool = True, block_b: int = 8, block_o: int = 32
                     ) -> Callable[[jax.Array], jax.Array]:
     """Jitted (B, in_features) float32 -> (B,) int32 class predictions.
 
     Tables and connectivity are closed-over constants; retraces are per
     batch shape only (bounded by the engine's buckets).
+
+    ``fused=True`` (the default) replaces the per-layer gather loop with
+    the whole-network cascade: the Pallas ``lut_cascade`` kernel when
+    ``use_kernel`` (one launch, bit-packed tables resident in VMEM,
+    zero inter-layer HBM traffic), else the single-jit bit-packed jnp
+    cascade (packed gather working set ~8x smaller, cache-resident).
+    All four paths are bit-exact vs ``lut_infer.lut_forward``
+    (tests/test_lut_cascade.py).
     """
     cfg = bundle.cfg
     params = bundle.serve_params()
-    tables = [jnp.asarray(np.asarray(t).astype(np.int32))
-              for t in bundle.tables]
-    conns = [jnp.asarray(s["conn"]) for s in bundle.statics]
 
-    if use_kernel:
-        from repro.kernels.ops import lut_lookup_op
+    if fused:
+        # Fused paths only touch the packed tables + shift matrices —
+        # the unpacked int32 tables must NOT be uploaded (they are ~8x
+        # the packed footprint).
+        bundle.prepack()
+        packed = [jnp.asarray(t) for t in bundle.packed_tables]
+        shift_mats = [jnp.asarray(m) for m in bundle.shift_mats]
+        geom = bundle.cascade_geom
+        if use_kernel:
+            from repro.kernels.ops import lut_cascade_op
+        else:
+            from repro.kernels.ref import lut_cascade_packed_ref
+    else:
+        tables = [jnp.asarray(np.asarray(t).astype(np.int32))
+                  for t in bundle.tables]
+        conns = [jnp.asarray(s["conn"]) for s in bundle.statics]
+        in_bits = tuple(cfg.layer_in_bits(i)
+                        for i in range(cfg.num_layers))
+        if use_kernel:
+            from repro.kernels.ops import lut_lookup_op
 
     def forward(x: jax.Array) -> jax.Array:
         codes = LI.input_codes(cfg, params, x)
         c = codes.astype(jnp.int32)
-        for i in range(cfg.num_layers):
-            gathered = c[:, conns[i]]                          # (B, O, F)
-            addr = LI.pack_index(gathered, cfg.layer_in_bits(i))
-            tbl = tables[i]
-            if use_kernel:
-                bb = _divisor_block(addr.shape[0], block_b)
-                bo = _divisor_block(tbl.shape[0], block_o)
-                c = lut_lookup_op(tbl, addr, block_b=bb, block_o=bo)
-            else:
-                c = tbl[jnp.arange(tbl.shape[0])[None, :], addr]
-            c = c.astype(jnp.int32)
+        if fused and use_kernel:
+            c = lut_cascade_op(c, shift_mats, packed, meta=geom,
+                               block_b=_divisor_block(c.shape[0], block_b))
+        elif fused:
+            c = lut_cascade_packed_ref(c, shift_mats, packed, cfg.beta)
+        else:
+            for i in range(cfg.num_layers):
+                gathered = c[:, conns[i]]                      # (B, O, F)
+                addr = LI.pack_index(gathered, in_bits[i])
+                tbl = tables[i]
+                if use_kernel:
+                    bb = _divisor_block(addr.shape[0], block_b)
+                    # O needs no divisor: lut_lookup pads internally
+                    c = lut_lookup_op(tbl, addr, block_b=bb,
+                                      block_o=block_o)
+                else:
+                    c = tbl[jnp.arange(tbl.shape[0])[None, :], addr]
+                c = c.astype(jnp.int32)
         vals = LI.class_values(cfg, params, c)
         return jnp.argmax(vals, axis=-1).astype(jnp.int32)
 
@@ -134,6 +174,7 @@ class LUTServeEngine:
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
                  max_wait_ms: float = 2.0,
                  use_kernel: Optional[bool] = None,
+                 fused: bool = True,
                  metrics: Optional[ServeMetrics] = None):
         if list(buckets) != sorted(set(buckets)):
             raise ValueError(f"buckets must be strictly increasing: {buckets}")
@@ -143,8 +184,9 @@ class LUTServeEngine:
         kern = (jax.default_backend() == "tpu") if use_kernel is None \
             else use_kernel
         self.use_kernel = kern
+        self.fused = fused
         self.metrics = metrics or ServeMetrics()
-        self._forward = make_forward_fn(bundle, use_kernel=kern)
+        self._forward = make_forward_fn(bundle, use_kernel=kern, fused=fused)
         self._queue: "queue.Queue" = queue.Queue()
         self._thread: Optional[threading.Thread] = None
         self._closed = False

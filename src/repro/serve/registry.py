@@ -45,6 +45,24 @@ class ServeBundle:
     in_log_s: np.ndarray                     # (in_features,) f32
     layer_log_s: List[np.ndarray]            # [(O_i,) f32]
     meta: Dict[str, Any] = field(default_factory=dict)
+    # Fused-cascade operands, precomputed once by prepack() (registry
+    # load does this eagerly so serving never packs on the hot path).
+    packed_tables: Optional[List[np.ndarray]] = None  # [(O_i, T_i/P) i32]
+    shift_mats: Optional[List[np.ndarray]] = None     # [(W_{i-1}, O_i) f32]
+    cascade_geom: Optional[tuple] = None              # lut_cascade meta
+
+    def prepack(self) -> "ServeBundle":
+        """Bit-pack every layer's table and build the shift matrices the
+        fused cascade kernel consumes (see kernels/lut_cascade.py);
+        idempotent, returns self."""
+        if self.packed_tables is None:
+            from repro.kernels.lut_cascade import (build_shift_mats,
+                                                   cascade_meta,
+                                                   cascade_tables)
+            self.packed_tables = cascade_tables(self.cfg, self.tables)
+            self.shift_mats = build_shift_mats(self.cfg, self.statics)
+            self.cascade_geom = cascade_meta(self.cfg)
+        return self
 
     def serve_params(self) -> Dict[str, Any]:
         """Minimal params pytree compatible with ``repro.core.lut_infer``
@@ -59,6 +77,11 @@ class ServeBundle:
     @property
     def num_table_bytes(self) -> int:
         return sum(t.nbytes for t in self.tables)
+
+    @property
+    def num_packed_table_bytes(self) -> int:
+        self.prepack()
+        return sum(t.nbytes for t in self.packed_tables)
 
 
 def bundle_from_training(cfg: NeuraLUTConfig, params: Dict, tables: List,
@@ -171,4 +194,4 @@ class TableRegistry:
             layer_log_s=[np.asarray(s, np.float32)
                          for s in tree["layer_log_s"]],
             meta=extra,
-        )
+        ).prepack()

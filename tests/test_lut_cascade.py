@@ -1,0 +1,282 @@
+"""Fused LUT-cascade kernel: bit-exactness vs the lut_forward oracle,
+bit-packed table round-trips, and the serve engine's fused path.
+
+The oracle (repro.core.lut_infer.lut_forward) is the repo's ground truth
+for converted-network inference; every cascade path must match it bit
+for bit — with trained tables (kinds test) and with random tables over
+every paper config geometry (acceptance gate).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lut_infer as LI
+from repro.core.nl_config import NeuraLUTConfig
+from repro.kernels.lut_cascade import (build_shift_mats, cascade_meta,
+                                       cascade_tables)
+from repro.kernels.ops import lut_cascade_op, lut_lookup_op
+from repro.kernels.ref import (lut_cascade_packed_ref, lut_cascade_ref,
+                               lut_gather_ref)
+
+
+def _random_net(cfg, seed=0):
+    """Random (tables, statics) with cfg's geometry — lookup semantics
+    do not depend on how the tables were produced."""
+    rng = np.random.default_rng(seed)
+    statics, tables = [], []
+    w_prev = cfg.in_features
+    for i, o in enumerate(cfg.layer_widths):
+        f = cfg.layer_fan_in(i)
+        statics.append({"conn": rng.integers(0, w_prev, (o, f))})
+        tables.append(rng.integers(0, 2 ** cfg.beta,
+                                   (o, cfg.table_size(i))).astype(np.uint16))
+        w_prev = o
+    return tables, statics
+
+
+def _cascade_vs_oracle(cfg, tables, statics, codes, block_b=8):
+    oracle = np.asarray(LI.lut_forward(cfg, tables, statics, codes))
+    sms = [jnp.asarray(m) for m in build_shift_mats(cfg, statics)]
+    pts = [jnp.asarray(t) for t in cascade_tables(cfg, tables)]
+    got = np.asarray(lut_cascade_op(codes, sms, pts,
+                                    meta=cascade_meta(cfg),
+                                    block_b=block_b))
+    return got, oracle
+
+
+# ---------------------------------------------------------------------------
+# pack_tables / unpack_tables
+
+
+@pytest.mark.parametrize("beta,T,P", [(2, 64, 16), (3, 512, 8),
+                                      (4, 4096, 8), (7, 256, 4)])
+def test_pack_tables_roundtrip(beta, T, P):
+    rng = np.random.default_rng(beta)
+    t = rng.integers(0, 2 ** beta, (6, T)).astype(np.uint16)
+    assert LI.packed_slots(beta) == P
+    packed = LI.pack_tables(t, beta)
+    assert packed.shape == (6, T // P) and packed.dtype == np.int32
+    assert (LI.unpack_tables(packed, beta) == t).all()
+    # the footprint claim: P codes per int32 word vs one code per int32
+    assert packed.nbytes * P == t.astype(np.int32).nbytes
+
+
+def test_pack_tables_rejects_bad_values():
+    with pytest.raises(ValueError):
+        LI.pack_tables(np.full((2, 16), 4, np.uint16), beta=2)  # 4 >= 2^2
+    with pytest.raises(ValueError):
+        LI.pack_tables(np.zeros((2, 12), np.uint16), beta=2)  # 12 % 16 != 0
+
+
+def test_pack_index_vectorized_matches_enumeration():
+    # pack_index must stay the exact inverse of truth_table.enumerate_codes
+    from repro.core.truth_table import enumerate_codes
+    codes = enumerate_codes(3, 3)
+    idx = LI.pack_index(jnp.asarray(codes), 3)
+    assert (np.asarray(idx) == np.arange(512)).all()
+
+
+# ---------------------------------------------------------------------------
+# cascade vs oracle: trained tables per hidden-function kind
+
+
+@pytest.mark.parametrize("kind", ["subnet", "linear", "poly"])
+def test_cascade_bit_exact_trained_kinds(kind):
+    from repro.core import model as M
+    from repro.core import truth_table as TT
+    cfg = NeuraLUTConfig(
+        name=f"casc-{kind}", in_features=8, layer_widths=(8, 6, 4),
+        num_classes=4, beta=3, fan_in=3, kind=kind, depth=2, width=4,
+        skip=2 if kind == "subnet" else 0, beta_in=4, fan_in_0=2)
+    statics = M.model_static(cfg)
+    params, state = M.model_init(cfg, jax.random.PRNGKey(1))
+    tables = TT.convert(cfg, params, state, statics)
+    x = jnp.asarray(np.random.default_rng(2).normal(0, 1, (19, 8)),
+                    jnp.float32)
+    codes = LI.input_codes(cfg, params, x)  # B=19: exercises B padding
+    got, oracle = _cascade_vs_oracle(cfg, tables, statics, codes)
+    assert (got == oracle).all()
+    # and both jnp cascade references (unpacked + bit-packed) agree too
+    conns = [jnp.asarray(s["conn"]) for s in statics]
+    in_bits = tuple(cfg.layer_in_bits(i) for i in range(cfg.num_layers))
+    ref = lut_cascade_ref(
+        codes, conns, [jnp.asarray(t.astype(np.int32)) for t in tables],
+        in_bits)
+    assert (np.asarray(ref) == oracle).all()
+    pref = lut_cascade_packed_ref(
+        codes, [jnp.asarray(m) for m in build_shift_mats(cfg, statics)],
+        [jnp.asarray(p) for p in cascade_tables(cfg, tables)], cfg.beta)
+    assert (np.asarray(pref) == oracle).all()
+
+
+# ---------------------------------------------------------------------------
+# cascade vs oracle: every paper config geometry (acceptance gate)
+
+
+@pytest.mark.parametrize("config_mod,variant", [
+    ("neuralut_hdr_5l", "full"), ("neuralut_hdr_5l", "reduced"),
+    ("neuralut_jsc_2l", "full"), ("neuralut_jsc_2l", "reduced"),
+    ("neuralut_jsc_5l", "full"), ("neuralut_jsc_5l", "reduced"),
+])
+def test_cascade_bit_exact_all_configs(config_mod, variant):
+    import importlib
+    mod = importlib.import_module(f"repro.configs.{config_mod}")
+    cfg = getattr(mod, variant)()
+    tables, statics = _random_net(cfg, seed=len(cfg.name))
+    rng = np.random.default_rng(5)
+    codes = jnp.asarray(
+        rng.integers(0, 2 ** cfg.layer_in_bits(0),
+                     (33, cfg.in_features)), jnp.int32)
+    got, oracle = _cascade_vs_oracle(cfg, tables, statics, codes)
+    assert (got == oracle).all()
+    # packed footprint <= 1/4 of the unpacked int32 tables (acceptance)
+    packed = cascade_tables(cfg, tables)
+    unpacked = sum(t.astype(np.int32).nbytes for t in tables)
+    assert sum(p.nbytes for p in packed) * 4 <= unpacked
+
+
+# ---------------------------------------------------------------------------
+# property test: random geometry draws
+
+
+try:  # guard ONLY the property test — the rest of this module must run
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=12, deadline=None)
+    @given(beta=st.integers(2, 4), fan_in=st.integers(2, 3),
+           depth=st.integers(1, 3), beta_in=st.integers(2, 5),
+           seed=st.integers(0, 7))
+    def test_cascade_bit_exact_property(beta, fan_in, depth, beta_in, seed):
+        rng = np.random.default_rng(seed)
+        widths = tuple(int(w) for w in rng.integers(3, 9, depth))
+        cfg = NeuraLUTConfig(
+            name="casc-prop", in_features=7, layer_widths=widths,
+            num_classes=widths[-1], beta=beta, fan_in=fan_in,
+            kind="subnet", beta_in=beta_in, fan_in_0=2)
+        tables, statics = _random_net(cfg, seed=seed + 100)
+        codes = jnp.asarray(rng.integers(0, 2 ** beta_in, (9, 7)),
+                            jnp.int32)
+        got, oracle = _cascade_vs_oracle(cfg, tables, statics, codes,
+                                         block_b=4)
+        assert (got == oracle).all()
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_cascade_bit_exact_property():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# truth-table conversion satellites (here so they run without hypothesis —
+# test_core_truth_table.py skips wholesale when it is absent)
+
+
+def test_truth_table_ragged_chunk_padding_is_exact():
+    """A batch that does not divide 2^{beta*F} pads the final chunk and
+    slices — the table must equal the single-chunk result (and eval_chunk
+    only ever sees one shape, so conversion jits once per layer)."""
+    from repro.core import model as M
+    from repro.core import truth_table as TT
+    cfg = NeuraLUTConfig(name="tt-ragged", in_features=6,
+                         layer_widths=(6, 3), num_classes=3, beta=3,
+                         fan_in=2, kind="subnet", depth=2, width=4, skip=0)
+    statics = M.model_static(cfg)
+    params, state = M.model_init(cfg, jax.random.PRNGKey(0))
+    # T = 2^6 = 64; batch=24 leaves a ragged 16-row final chunk
+    ragged = TT.layer_truth_table(cfg, params, state, statics, 0, batch=24)
+    whole = TT.layer_truth_table(cfg, params, state, statics, 0, batch=64)
+    assert (ragged == whole).all()
+
+
+def test_truth_table_oversized_guard():
+    """beta_in * F > 20 would allocate > 2^20 entries per L-LUT; the
+    conversion must refuse clearly instead of silently enumerating."""
+    from repro.core import model as M
+    from repro.core import truth_table as TT
+    cfg = NeuraLUTConfig(name="tt-guard", in_features=8,
+                         layer_widths=(4, 2), num_classes=2, beta=6,
+                         fan_in=4, kind="linear")  # 24 address bits
+    statics = M.model_static(cfg)
+    params, state = M.model_init(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="> 20 address bits"):
+        TT.layer_truth_table(cfg, params, state, statics, 0)
+
+
+# ---------------------------------------------------------------------------
+# lut_lookup: non-divisible shapes now pad instead of raising
+
+
+@pytest.mark.parametrize("B,O", [(5, 32), (16, 10), (7, 13)])
+def test_lut_lookup_pads_non_divisible(B, O):
+    rng = np.random.default_rng(9)
+    tbl = jnp.asarray(rng.integers(0, 128, (O, 64)), jnp.int32)
+    addr = jnp.asarray(rng.integers(0, 64, (B, O)), jnp.int32)
+    got = lut_lookup_op(tbl, addr, block_b=8, block_o=8)
+    assert (np.asarray(got) == np.asarray(lut_gather_ref(tbl, addr))).all()
+
+
+def test_cascade_pads_non_divisible_batch():
+    cfg = NeuraLUTConfig(name="casc-pad", in_features=6,
+                         layer_widths=(6, 3), num_classes=3, beta=2,
+                         fan_in=2)
+    tables, statics = _random_net(cfg, seed=3)
+    codes = jnp.asarray(
+        np.random.default_rng(4).integers(0, 4, (13, 6)), jnp.int32)
+    got, oracle = _cascade_vs_oracle(cfg, tables, statics, codes,
+                                     block_b=8)
+    assert (got == oracle).all()
+
+
+# ---------------------------------------------------------------------------
+# serve engine: fused and per-layer paths are interchangeable
+
+
+def test_serve_fused_and_per_layer_paths_identical():
+    from repro.core import model as M
+    from repro.core import truth_table as TT
+    from repro.serve import bundle_from_training, make_forward_fn
+    cfg = NeuraLUTConfig(name="casc-serve", in_features=6,
+                         layer_widths=(8, 3), num_classes=3, beta=2,
+                         fan_in=2, kind="subnet", depth=2, width=4, skip=0)
+    statics = M.model_static(cfg)
+    params, state = M.model_init(cfg, jax.random.PRNGKey(0))
+    xw = jnp.asarray(np.random.default_rng(0).normal(0, 1, (64, 6)),
+                     jnp.float32)
+    _, _, state = M.model_apply(cfg, params, state, statics, xw, train=True)
+    tables = TT.convert(cfg, params, state, statics)
+    bundle = bundle_from_training(cfg, params, tables, statics)
+
+    fns = {(uk, fu): make_forward_fn(bundle, use_kernel=uk, fused=fu)
+           for uk in (False, True) for fu in (False, True)}
+    for b in (1, 8, 64):  # every default bucket shape that fits CI time
+        x = jnp.asarray(np.random.default_rng(b).normal(0, 1, (b, 6)),
+                        jnp.float32)
+        outs = {k: np.asarray(f(x)) for k, f in fns.items()}
+        base = outs[(False, False)]
+        for k, v in outs.items():
+            assert (v == base).all(), f"path {k} diverges at bucket {b}"
+
+
+def test_bundle_prepack_idempotent_and_packed_bytes():
+    from repro.core import model as M
+    from repro.core import truth_table as TT
+    from repro.serve import bundle_from_training
+    cfg = NeuraLUTConfig(name="casc-pp", in_features=6, layer_widths=(6, 3),
+                         num_classes=3, beta=2, fan_in=2, kind="linear")
+    statics = M.model_static(cfg)
+    params, state = M.model_init(cfg, jax.random.PRNGKey(0))
+    tables = TT.convert(cfg, params, state, statics)
+    bundle = bundle_from_training(cfg, params, tables, statics)
+    assert bundle.packed_tables is None
+    bundle.prepack()
+    first = bundle.packed_tables
+    bundle.prepack()
+    assert bundle.packed_tables is first  # idempotent, no re-pack
+    assert bundle.num_packed_table_bytes * 4 <= \
+        sum(t.astype(np.int32).nbytes for t in bundle.tables)
+    for t, p in zip(bundle.tables, bundle.packed_tables):
+        assert (LI.unpack_tables(p, cfg.beta) == t).all()
