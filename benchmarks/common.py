@@ -6,7 +6,6 @@ the CSV stream.
 """
 from __future__ import annotations
 
-import sys
 import time
 from typing import Callable, Dict, List
 

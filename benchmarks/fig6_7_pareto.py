@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from benchmarks.common import emit
 from repro.core import cost_model as CM

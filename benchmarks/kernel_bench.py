@@ -127,16 +127,16 @@ def _cascade_sweep(fast: bool) -> Dict:
 
 def run(fast: bool = False) -> Optional[Dict]:
     rng = np.random.default_rng(0)
-    B, O, F, N, L, S = 1024, 256, 6, 16, 4, 2
+    B, NO, F, N, L, S = 1024, 256, 6, 16, 4, 2
     widths = [F] + [N] * (L - 1) + [1]
-    xg = jnp.asarray(rng.normal(0, 1, (B, O, F)), jnp.float32)
-    lw = [jnp.asarray(rng.normal(0, .5, (O, widths[i], widths[i + 1])),
+    xg = jnp.asarray(rng.normal(0, 1, (B, NO, F)), jnp.float32)
+    lw = [jnp.asarray(rng.normal(0, .5, (NO, widths[i], widths[i + 1])),
                       jnp.float32) for i in range(L)]
-    lb = [jnp.asarray(rng.normal(0, .1, (O, widths[i + 1])), jnp.float32)
+    lb = [jnp.asarray(rng.normal(0, .1, (NO, widths[i + 1])), jnp.float32)
           for i in range(L)]
-    sw = [jnp.asarray(rng.normal(0, .5, (O, widths[c * S], widths[(c + 1) * S])),
+    sw = [jnp.asarray(rng.normal(0, .5, (NO, widths[c * S], widths[(c + 1) * S])),
                       jnp.float32) for c in range(L // S)]
-    sb = [jnp.asarray(rng.normal(0, .1, (O, widths[(c + 1) * S])),
+    sb = [jnp.asarray(rng.normal(0, .1, (NO, widths[(c + 1) * S])),
                       jnp.float32) for c in range(L // S)]
 
     jf = jax.jit(lambda *a: grouped_subnet_ref(a[0], list(a[1:5]),
@@ -145,15 +145,15 @@ def run(fast: bool = False) -> Optional[Dict]:
     args = [xg] + lw + lb + sw + sb
     out = jf(*args)
     us = time_call(lambda: jf(*args).block_until_ready())
-    flops = 2 * B * O * sum(widths[i] * widths[i + 1] for i in range(L))
+    flops = 2 * B * NO * sum(widths[i] * widths[i + 1] for i in range(L))
     emit("kernel/grouped_subnet_xla", us,
-         f"gflops={flops/us/1e3:.2f};B={B};O={O}")
+         f"gflops={flops/us/1e3:.2f};B={B};NO={NO}")
 
     # HLO traffic: XLA einsum chain vs what the fused kernel admits
     hlo = jf.lower(*args).compile().as_text()
     ana = analyze_hlo(hlo, num_partitions=1)
-    ideal = (B * O * F + sum(O * widths[i] * widths[i + 1]
-                             for i in range(L)) + B * O) * 4
+    ideal = (B * NO * F + sum(NO * widths[i] * widths[i + 1]
+                              for i in range(L)) + B * NO) * 4
     emit("kernel/grouped_subnet_traffic", 0.0,
          f"xla_hbm_bytes={ana.hbm_bytes:.2e};"
          f"fused_kernel_bytes={ideal:.2e};"

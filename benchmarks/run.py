@@ -1,16 +1,64 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Benchmark harness: one module per paper table/figure + kernel/LM benches.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME] [--check]
 
 Emits CSV lines ``name,us_per_call,derived`` (see benchmarks/common.py).
+
+``--check`` is the CI perf-regression gate: after the kernel suite runs
+(use ``--fast --only kernel`` in CI), the fresh fused-cascade throughput
+is compared against the *committed* BENCH_kernels.json baseline — read
+before the run overwrites it — and the process exits non-zero if any
+common batch size regressed by more than ``--check-threshold`` (default
+25%).  A selected suite that raises also exits non-zero, so a red bench
+can never slip through as a green step with a partial JSON.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
+from pathlib import Path
+from typing import Dict, List
+
+BASELINE = Path(__file__).resolve().parent.parent / "BENCH_kernels.json"
+
+
+def check_regression(baseline: Dict, fresh: Dict, threshold: float,
+                     metric: str = "throughput") -> List[str]:
+    """Compare the fresh cascade summary against the committed baseline.
+
+    Gates the fused cascade (the serving fast path) per batch size
+    present in both sweeps — smoke runs sweep a subset of the full
+    baseline's batches, so only the intersection is comparable.
+    ``metric="throughput"`` gates absolute ``fused_lookups_per_s``
+    (meaningful when baseline and CI run on comparable machines);
+    ``metric="speedup"`` gates the fused-vs-per-layer ratio, which is
+    machine-relative and robust to runner hardware differences.
+    Returns human-readable problem strings (empty = pass).
+    """
+    key = {"throughput": "fused_lookups_per_s",
+           "speedup": "speedup"}[metric]
+    problems: List[str] = []
+    base_rows = {r["batch"]: r
+                 for r in baseline.get("cascade", {}).get("sweep", [])}
+    fresh_rows = {r["batch"]: r for r in fresh.get("sweep", [])}
+    common = sorted(set(base_rows) & set(fresh_rows))
+    if not common:
+        return [f"no common batch sizes between baseline "
+                f"{sorted(base_rows)} and fresh run {sorted(fresh_rows)}"]
+    for b in common:
+        base = float(base_rows[b][key])
+        new = float(fresh_rows[b][key])
+        floor = (1.0 - threshold) * base
+        if new < floor:
+            problems.append(
+                f"batch {b}: fused cascade {metric} {new:.3e} is "
+                f"{(1 - new / base) * 100:.1f}% below baseline "
+                f"{base:.3e} (allowed {threshold * 100:.0f}%)")
+    return problems
 
 
 def main() -> None:
@@ -18,6 +66,19 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="fewer epochs/seeds (CI mode)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--check", action="store_true",
+                    help="gate the fresh kernel numbers against the "
+                         "committed BENCH_kernels.json baseline")
+    ap.add_argument("--baseline", default=str(BASELINE),
+                    help="baseline JSON for --check")
+    ap.add_argument("--check-threshold", type=float, default=0.25,
+                    help="max allowed fractional regression")
+    ap.add_argument("--check-metric", default="throughput",
+                    choices=["throughput", "speedup"],
+                    help="gate absolute fused throughput, or the "
+                         "fused-vs-per-layer speedup ratio (neither is "
+                         "fully machine-independent: refresh the "
+                         "baseline when CI hardware changes)")
     args = ap.parse_args()
 
     from benchmarks import (fig3_boundaries, fig5_ablation, fig6_7_pareto,
@@ -38,8 +99,24 @@ def main() -> None:
         "lm_step": lambda: lm_step_bench.run(),
         "serve": lambda: serve_bench.run(reduced=args.fast),
     }
+    if args.only is not None and args.only not in suites:
+        sys.exit(f"unknown suite {args.only!r}; choose from "
+                 f"{sorted(suites)}")
+    if args.check and args.only not in (None, "kernel"):
+        sys.exit("--check gates the kernel suite; drop --only or use "
+                 "--only kernel")
+
+    # Read the committed baseline BEFORE the run overwrites it.
+    baseline = None
+    if args.check:
+        base_path = Path(args.baseline)
+        if not base_path.is_file():
+            sys.exit(f"--check: baseline {base_path} does not exist")
+        baseline = json.loads(base_path.read_text())
+
     print("name,us_per_call,derived")
     failed = []
+    cascade_summary = None
     for name, fn in suites.items():
         if args.only and name != args.only:
             continue
@@ -47,6 +124,7 @@ def main() -> None:
         try:
             result = fn()
             if name == "kernel" and result:
+                cascade_summary = result
                 from benchmarks.common import write_kernel_summary
                 write_kernel_summary(result)
             print(f"# suite {name} done in {time.time()-t0:.0f}s",
@@ -56,7 +134,21 @@ def main() -> None:
             print(f"# suite {name} FAILED:", flush=True)
             traceback.print_exc()
     if failed:
-        sys.exit(f"failed suites: {failed}")
+        print(f"# failed suites: {failed}", file=sys.stderr, flush=True)
+        sys.exit(1)
+    if args.check:
+        if cascade_summary is None:
+            sys.exit("--check: kernel suite did not run or produced no "
+                     "cascade summary")
+        problems = check_regression(baseline, cascade_summary,
+                                    args.check_threshold,
+                                    metric=args.check_metric)
+        if problems:
+            for p in problems:
+                print(f"# PERF REGRESSION: {p}", file=sys.stderr,
+                      flush=True)
+            sys.exit(1)
+        print("# perf check passed vs baseline", flush=True)
 
 
 if __name__ == "__main__":

@@ -28,7 +28,6 @@ import threading
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -76,11 +75,15 @@ def _train_bundle(arch: str, *, reduced: bool, epochs: int, registry_dir: str):
 
 
 def _closed_loop(engine: LUTServeEngine, x: np.ndarray, *, clients: int,
-                 requests_per_client: int) -> None:
+                 requests_per_client: int, request_size: int = 1) -> None:
     def client(cid: int) -> None:
         rng = np.random.default_rng(cid)
         for _ in range(requests_per_client):
-            engine.predict(x[rng.integers(0, len(x))])
+            if request_size == 1:
+                engine.predict(x[rng.integers(0, len(x))])
+            else:
+                idx = rng.integers(0, len(x), request_size)
+                engine.predict(x[idx])
 
     threads = [threading.Thread(target=client, args=(c,))
                for c in range(clients)]
@@ -88,6 +91,57 @@ def _closed_loop(engine: LUTServeEngine, x: np.ndarray, *, clients: int,
         t.start()
     for t in threads:
         t.join()
+
+
+def run_replica_sweep(*, reduced: bool = True, epochs: int = 0,
+                      arch: str = "neuralut-jsc-2l", registry_dir: str = "",
+                      replicas_sweep=(1, 2, 4, 8), clients: int = 64,
+                      requests_per_client: int = 0, request_size: int = 64,
+                      max_wait_ms: float = 2.0) -> None:
+    """Aggregate-throughput scaling across replica executors.
+
+    Fixed high offered load (``clients`` closed-loop clients, each
+    submitting ``request_size``-sample requests so every dispatch
+    carries real work) against a growing replica pool, so service
+    capacity — not the client count — is the bottleneck: aggregate
+    throughput should rise monotonically with the replica count
+    whenever replicas land on distinct devices (EXPERIMENTS.md
+    §Scale-out; the CI multi-device job runs this on a forced 8-device
+    host).  Per-replica batch counts come from the engine's per-replica
+    metrics and show the router spreading load.
+    """
+    import jax
+
+    epochs = epochs or (3 if reduced else 20)
+    requests_per_client = requests_per_client or (25 if reduced else 100)
+    ndev = jax.device_count()
+    tmp = None
+    if not registry_dir:
+        tmp = tempfile.TemporaryDirectory()
+        registry_dir = tmp.name
+    try:
+        bundle, xte = _train_bundle(arch, reduced=reduced, epochs=epochs,
+                                    registry_dir=registry_dir)
+        for r in replicas_sweep:
+            metrics = ServeMetrics()
+            with LUTServeEngine(bundle, max_wait_ms=max_wait_ms,
+                                use_kernel=False, replicas=r,
+                                metrics=metrics) as eng:
+                eng.warmup()
+                _closed_loop(eng, xte, clients=clients,
+                             requests_per_client=requests_per_client,
+                             request_size=request_size)
+                per_replica = [int(m.report()["batches"])
+                               for m in eng.replica_metrics]
+            rep = metrics.report()
+            emit(f"serve/replicas_r{r}", rep["p50_ms"] * 1e3,
+                 f"p50_ms={rep['p50_ms']:.2f};p99_ms={rep['p99_ms']:.2f};"
+                 f"throughput_sps={rep['throughput_sps']:.0f};"
+                 f"devices={ndev};clients={clients};"
+                 f"replica_batches={'/'.join(map(str, per_replica))}")
+    finally:
+        if tmp is not None:
+            tmp.cleanup()
 
 
 def run(*, reduced: bool = True, epochs: int = 0,
@@ -135,12 +189,25 @@ def main() -> None:
                     default=[1, 4, 16, 64])
     ap.add_argument("--requests-per-client", type=int, default=0)
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--replicas", type=int, nargs="+", default=None,
+                    help="sweep replica counts at fixed offered load "
+                         "(aggregate-throughput scaling) instead of the "
+                         "client sweep; e.g. --replicas 1 2 4 8")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(reduced=args.reduced, epochs=args.epochs, arch=args.arch,
-        registry_dir=args.registry, clients_sweep=tuple(args.clients),
-        requests_per_client=args.requests_per_client,
-        max_wait_ms=args.max_wait_ms)
+    if args.replicas:
+        run_replica_sweep(
+            reduced=args.reduced, epochs=args.epochs, arch=args.arch,
+            registry_dir=args.registry,
+            replicas_sweep=tuple(args.replicas),
+            clients=max(args.clients),
+            requests_per_client=args.requests_per_client,
+            max_wait_ms=args.max_wait_ms)
+    else:
+        run(reduced=args.reduced, epochs=args.epochs, arch=args.arch,
+            registry_dir=args.registry, clients_sweep=tuple(args.clients),
+            requests_per_client=args.requests_per_client,
+            max_wait_ms=args.max_wait_ms)
 
 
 if __name__ == "__main__":

@@ -18,7 +18,7 @@ import jax
 
 from repro.checkpoint import CheckpointStore
 from repro.config import TrainConfig, get_config
-from repro.data.pipeline import ShardedLoader, lm_batch_fn
+from repro.data.pipeline import lm_batch_fn
 from repro.models import api
 from repro.optim.adamw import adamw_init
 from repro.runtime.fault import TrainSupervisor

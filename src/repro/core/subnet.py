@@ -21,7 +21,7 @@ against the actual pytree in tests (property-based over F, L, N, S).
 from __future__ import annotations
 
 import itertools
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,7 @@ full training runs in seconds-to-minutes here.  Returns the trained
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

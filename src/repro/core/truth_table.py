@@ -15,7 +15,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import layers as L
 from repro.core import quant
 from repro.core.nl_config import NeuraLUTConfig
 

@@ -23,7 +23,7 @@ c: r (O, n_{cS}, n_{(c+1)S}).  The last layer has n_out == 1; output is
 from __future__ import annotations
 
 import functools
-from typing import List, Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp

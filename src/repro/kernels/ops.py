@@ -7,10 +7,9 @@ set ``interpret=False`` (the default flips on TPU backends).
 from __future__ import annotations
 
 import functools
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from .lut_cascade import lut_cascade
 from .lut_gather import lut_lookup
@@ -54,6 +53,28 @@ def lut_cascade_op(codes, shift_mats, packed_tables, *, meta,
     interp = (not _on_tpu()) if interpret is None else interpret
     return lut_cascade(codes, list(shift_mats), list(packed_tables), meta,
                        block_b=block_b, interpret=interp)
+
+
+def cascade_apply(codes, shift_mats, packed_tables, *, meta, beta: int,
+                  use_kernel: bool, block_b: int = 8):
+    """Un-jitted fused-cascade dispatch: the Pallas ``lut_cascade`` kernel
+    or its bit-packed jnp twin (``ref.lut_cascade_packed_ref``), both
+    bit-exact vs ``lut_infer.lut_forward``.
+
+    The serve engine wraps this in its own jit, and the shard_map'd
+    multi-device paths (serve/sharded.py) call it per device shard — in
+    both cases an extra nested jit boundary would only block fusion, so
+    this stays a plain function (``lut_cascade_op`` above is the jitted
+    standalone entry).  Kernel backend selection (compiled on TPU,
+    interpreter elsewhere) lives in ``lut_cascade`` itself, triggered by
+    ``interpret=None``.
+    """
+    if use_kernel:
+        return lut_cascade(codes, list(shift_mats), list(packed_tables),
+                           meta, block_b=block_b, interpret=None)
+    from .ref import lut_cascade_packed_ref
+    return lut_cascade_packed_ref(codes, list(shift_mats),
+                                  list(packed_tables), beta)
 
 
 def subnet_params_to_kernel(fn_params: Dict) -> Dict:

@@ -20,7 +20,9 @@ def grouped_subnet_ref(xg: jax.Array,
     Mirrors repro.core.subnet.subnet_apply (phi = ReLU between layers /
     chunks, skips every ``skip`` layers).
     """
-    mm = lambda h, w, b: jnp.einsum("boi,oij->boj", h, w) + b[None]
+    def mm(h, w, b):
+        return jnp.einsum("boi,oij->boj", h, w) + b[None]
+
     L = len(layer_ws)
     if skip == 0:
         h = xg

@@ -29,7 +29,7 @@ from pathlib import Path
 
 import jax
 
-from repro.config import SHAPES, TrainConfig, get_config, list_archs
+from repro.config import SHAPES, TrainConfig, get_config
 from repro.launch.mesh import make_mesh_from_config, mesh_config
 from repro.models import api
 from repro.roofline.analysis import (

@@ -71,7 +71,9 @@ def serve_lut(args) -> None:
     xte, yte = jsc_synthetic(4000, seed=1)
 
     with LUTServeEngine(bundle, max_wait_ms=args.max_wait_ms,
-                        use_kernel=args.kernel or None) as eng:
+                        use_kernel=args.kernel or None,
+                        replicas=args.replicas,
+                        sharded=args.sharded) as eng:
         eng.warmup()
         rng = np.random.default_rng(0)
         # Bounded in-flight window: enough concurrency to exercise the
@@ -97,13 +99,16 @@ def serve_lut(args) -> None:
         print(f"served {args.requests} requests x batch {args.batch} "
               f"(inflight {args.inflight}): "
               f"{eng.metrics.render()} acc={correct/total:.4f}", flush=True)
+        if eng.replicas > 1:
+            for i, m in enumerate(eng.replica_metrics):
+                print(f"  replica {i}: {m.render()}", flush=True)
 
 
 def serve_lm(args) -> None:
     import jax
     import jax.numpy as jnp
     import numpy as np
-    from repro.config import ShapeConfig, get_config
+    from repro.config import get_config
     from repro.models import api
     from repro.train.step import make_serve_step
 
@@ -145,6 +150,13 @@ def main() -> None:
                     help="max outstanding requests in the client loop")
     ap.add_argument("--kernel", action="store_true",
                     help="force the Pallas lookup kernel (default: TPU only)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="replica executors to route batches across "
+                         "(one per local device, round-robin)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="serve through the shard_map'd multi-device "
+                         "cascade (repro.serve.sharded) instead of "
+                         "replica routing")
     args = ap.parse_args()
     if args.mode == "lut":
         serve_lut(args)

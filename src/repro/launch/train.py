@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import argparse
 import os
-import sys
 import time
 
 TPU_XLA_FLAGS = " ".join([
@@ -54,7 +53,6 @@ def main() -> None:
                                    + TPU_XLA_FLAGS)
 
     import jax
-    import numpy as np
     from repro.config import MeshConfig, TrainConfig, get_config
     from repro.checkpoint import CheckpointStore
     from repro.data.pipeline import lm_batch_fn

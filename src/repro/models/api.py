@@ -6,7 +6,7 @@ shardable, no device allocation — consumed by the dry-run and the trainer.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

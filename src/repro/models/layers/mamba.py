@@ -69,9 +69,9 @@ def _ssm_scan_chunked(abar, bx, h0, chunk: int):
     abar = abar.reshape(b, nchunks, chunk, di, n).transpose(1, 0, 2, 3, 4)
     bx = bx.reshape(b, nchunks, chunk, di, n).transpose(1, 0, 2, 3, 4)
 
-    def comb(l, r):
-        al, bl = l
-        ar, br = r
+    def comb(left, right):
+        al, bl = left
+        ar, br = right
         return al * ar, bl * ar + br
 
     def body(h, args):

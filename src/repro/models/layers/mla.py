@@ -8,14 +8,14 @@ cache compression (512+64 vs 4096 for this config, ~7x).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import AttentionConfig
 from repro.sharding.ctx import constrain
-from .attention import _sdpa, chunked_attention
+from .attention import chunked_attention
 from .rope import apply_rope
 
 Params = Dict[str, jax.Array]

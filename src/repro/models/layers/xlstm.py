@@ -90,7 +90,9 @@ def mlstm_chunkwise(q, k, v, li, lf, *, chunk: int = 128):
     assert s % chunk == 0
     nc = s // chunk
     # reshape to (B, nc, W, H, ...)
-    rs = lambda x: x.reshape((b, nc, chunk) + x.shape[2:])
+    def rs(x):
+        return x.reshape((b, nc, chunk) + x.shape[2:])
+
     q, k, v, li, lf = map(rs, (q, k, v, li, lf))
 
     # cumulative log-forget within chunk: bcum[j] = sum_{u<=j} lf_u

@@ -19,7 +19,9 @@ OptState = Dict[str, Any]
 
 
 def adamw_init(params) -> OptState:
-    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros32(p):
+        return jnp.zeros(p.shape, jnp.float32)
+
     state = {
         "m": jax.tree.map(zeros32, params),
         "v": jax.tree.map(zeros32, params),
@@ -34,7 +36,9 @@ def adamw_init(params) -> OptState:
 
 def adamw_init_spec(param_spec) -> OptState:
     """ShapeDtypeStruct mirror of adamw_init for dry-run lowering."""
-    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    def f32(p):
+        return jax.ShapeDtypeStruct(p.shape, jnp.float32)
+
     return {
         "m": jax.tree.map(f32, param_spec),
         "v": jax.tree.map(f32, param_spec),

@@ -18,7 +18,7 @@ Two entry points:
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

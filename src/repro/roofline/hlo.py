@@ -24,7 +24,6 @@ Everything here is per-device: the input is the SPMD-partitioned module.
 """
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple

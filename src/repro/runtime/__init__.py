@@ -1,5 +1,5 @@
-from .fault import FailureInjector, TrainSupervisor
+from .fault import FailureInjector, ReplicaHealthTracker, TrainSupervisor
 from .straggler import run_with_backup, StepWatchdog
 
-__all__ = ["FailureInjector", "TrainSupervisor", "run_with_backup",
-           "StepWatchdog"]
+__all__ = ["FailureInjector", "ReplicaHealthTracker", "TrainSupervisor",
+           "run_with_backup", "StepWatchdog"]

@@ -19,8 +19,7 @@ from __future__ import annotations
 
 import statistics
 import threading
-import time
-from typing import Callable, List, Optional, TypeVar
+from typing import Callable, List, TypeVar
 
 T = TypeVar("T")
 

@@ -14,15 +14,24 @@ from .engine import DEFAULT_BUCKETS, LUTServeEngine, make_forward_fn, \
     pick_bucket
 from .metrics import ServeMetrics, percentile
 from .registry import ServeBundle, TableRegistry, bundle_from_training
+from .sharded import (DEFAULT_VMEM_BUDGET, ShardPlan,
+                      make_sharded_forward_fn, o_sharded_cascade_fn,
+                      plan_shards, replicated_cascade_fn)
 
 __all__ = [
     "DEFAULT_BUCKETS",
+    "DEFAULT_VMEM_BUDGET",
     "LUTServeEngine",
     "ServeBundle",
     "ServeMetrics",
+    "ShardPlan",
     "TableRegistry",
     "bundle_from_training",
     "make_forward_fn",
+    "make_sharded_forward_fn",
+    "o_sharded_cascade_fn",
     "percentile",
     "pick_bucket",
+    "plan_shards",
+    "replicated_cascade_fn",
 ]

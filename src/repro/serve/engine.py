@@ -1,4 +1,5 @@
-"""Batched LUT serving engine: request queue + dynamic bucketed batcher.
+"""Batched LUT serving engine: request queue + dynamic bucketed batcher
++ replica routing.
 
 The serving hot path of a converted NeuraLUT model is a cascade of table
 lookups (one per neuron per layer).  This engine turns that into a
@@ -14,20 +15,34 @@ production-shaped service:
     retraces ever, all performed eagerly by ``warmup()``.  Oversized
     requests are served in max-bucket chunks — still no new shapes.
 
+  * Coalesced batches are routed to one of ``replicas`` *executors* — each
+    a worker thread owning a jitted forward pinned to its own device (the
+    whole bundle is tables, so replicas are cheap: every device holds the
+    full bit-packed stack).  Routing is queue-depth-aware round-robin over
+    the replicas the :class:`repro.runtime.fault.ReplicaHealthTracker`
+    reports healthy: least-loaded wins, ties break in round-robin order.
+    A replica whose dispatches keep failing is evicted from rotation and
+    the survivors absorb the load; ``replicas=1`` (the default) collapses
+    to the single-device engine with identical behavior.
+
   * The default forward is the *fused cascade*: the whole multi-layer LUT
     network in one dispatch — the Pallas ``lut_cascade`` kernel on TPU
     (bit-packed tables resident in VMEM, zero inter-layer HBM traffic)
     and the single-jit bit-packed jnp cascade
     (``kernels.ref.lut_cascade_packed_ref``, cache-resident packed
-    tables) elsewhere.  ``fused=False``
-    falls back to the per-layer loop (Pallas ``lut_gather`` on TPU, jnp
-    gather oracle elsewhere).  All paths are bit-exact vs
-    ``lut_infer.lut_forward`` (tests/test_kernels.py,
-    tests/test_lut_cascade.py), so predictions are identical wherever the
-    engine runs.
+    tables) elsewhere.  ``fused=False`` falls back to the per-layer loop
+    (Pallas ``lut_gather`` on TPU, jnp gather oracle elsewhere).
+    ``sharded=True`` instead serves every batch through the
+    ``shard_map``'d multi-device cascade (serve/sharded.py) — one
+    executor whose dispatches span the whole replica mesh.  All paths
+    are bit-exact vs ``lut_infer.lut_forward`` (tests/test_kernels.py,
+    tests/test_lut_cascade.py, tests/test_serve_sharded.py), so
+    predictions are identical wherever the engine runs.
 
   * :class:`repro.serve.metrics.ServeMetrics` records per-request latency,
-    throughput, queue depth and batch occupancy (EXPERIMENTS.md §Perf).
+    throughput, queue depth and batch occupancy, both in aggregate
+    (``engine.metrics``) and per replica (``engine.replica_metrics``)
+    (EXPERIMENTS.md §Perf and §Scale-out).
 
 The engine serves a :class:`repro.serve.registry.ServeBundle` — a saved
 artifact — so serving never retrains (see registry.py).
@@ -45,6 +60,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import lut_infer as LI
+from repro.runtime.fault import ReplicaHealthTracker
 from repro.serve.metrics import ServeMetrics
 from repro.serve.registry import ServeBundle
 
@@ -74,12 +90,15 @@ def _divisor_block(n: int, cap: int) -> int:
 
 
 def make_forward_fn(bundle: ServeBundle, *, use_kernel: bool,
-                    fused: bool = True, block_b: int = 8, block_o: int = 32
-                    ) -> Callable[[jax.Array], jax.Array]:
+                    fused: bool = True, block_b: int = 8, block_o: int = 32,
+                    device=None) -> Callable[[jax.Array], jax.Array]:
     """Jitted (B, in_features) float32 -> (B,) int32 class predictions.
 
     Tables and connectivity are closed-over constants; retraces are per
-    batch shape only (bounded by the engine's buckets).
+    batch shape only (bounded by the engine's buckets).  ``device`` pins
+    every closed-over operand (tables, shift matrices, quantizer scales)
+    to that device — how each replica executor gets its own resident
+    copy of the bundle; None keeps jax's default placement.
 
     ``fused=True`` (the default) replaces the per-layer gather loop with
     the whole-network cascade: the Pallas ``lut_cascade`` kernel when
@@ -90,24 +109,26 @@ def make_forward_fn(bundle: ServeBundle, *, use_kernel: bool,
     (tests/test_lut_cascade.py).
     """
     cfg = bundle.cfg
-    params = bundle.serve_params()
+
+    def put(a):
+        a = jnp.asarray(a)
+        return a if device is None else jax.device_put(a, device)
+
+    params = jax.tree.map(put, bundle.serve_params())
 
     if fused:
         # Fused paths only touch the packed tables + shift matrices —
         # the unpacked int32 tables must NOT be uploaded (they are ~8x
         # the packed footprint).
         bundle.prepack()
-        packed = [jnp.asarray(t) for t in bundle.packed_tables]
-        shift_mats = [jnp.asarray(m) for m in bundle.shift_mats]
+        packed = [put(t) for t in bundle.packed_tables]
+        shift_mats = [put(m) for m in bundle.shift_mats]
         geom = bundle.cascade_geom
-        if use_kernel:
-            from repro.kernels.ops import lut_cascade_op
-        else:
-            from repro.kernels.ref import lut_cascade_packed_ref
+        from repro.kernels.ops import cascade_apply
     else:
-        tables = [jnp.asarray(np.asarray(t).astype(np.int32))
+        tables = [put(np.asarray(t).astype(np.int32))
                   for t in bundle.tables]
-        conns = [jnp.asarray(s["conn"]) for s in bundle.statics]
+        conns = [put(s["conn"]) for s in bundle.statics]
         in_bits = tuple(cfg.layer_in_bits(i)
                         for i in range(cfg.num_layers))
         if use_kernel:
@@ -116,11 +137,10 @@ def make_forward_fn(bundle: ServeBundle, *, use_kernel: bool,
     def forward(x: jax.Array) -> jax.Array:
         codes = LI.input_codes(cfg, params, x)
         c = codes.astype(jnp.int32)
-        if fused and use_kernel:
-            c = lut_cascade_op(c, shift_mats, packed, meta=geom,
-                               block_b=_divisor_block(c.shape[0], block_b))
-        elif fused:
-            c = lut_cascade_packed_ref(c, shift_mats, packed, cfg.beta)
+        if fused:
+            c = cascade_apply(c, shift_mats, packed, meta=geom,
+                              beta=cfg.beta, use_kernel=use_kernel,
+                              block_b=_divisor_block(c.shape[0], block_b))
         else:
             for i in range(cfg.num_layers):
                 gathered = c[:, conns[i]]                      # (B, O, F)
@@ -156,7 +176,7 @@ _STOP = object()
 def _complete(future: Future, result=None, exc=None) -> bool:
     """Resolve a future, tolerating client-side cancel(): a cancelled
     future makes set_result/set_exception raise InvalidStateError, which
-    must never kill the dispatcher thread."""
+    must never kill a serving thread."""
     try:
         if exc is not None:
             future.set_exception(exc)
@@ -167,17 +187,159 @@ def _complete(future: Future, result=None, exc=None) -> bool:
         return False
 
 
+class _ReplicaExecutor:
+    """One serving replica: a worker thread draining its own batch queue
+    through a jitted forward pinned to one device.
+
+    The dispatcher routes *coalesced* batches here (see
+    ``LUTServeEngine._route``); the executor serves them FIFO, records
+    into both its per-replica metrics and the engine aggregate, and
+    reports every dispatch outcome to the health tracker.  On shutdown
+    it drains batches queued before the stop sentinel — an accepted
+    batch is never dropped.
+    """
+
+    def __init__(self, rid: int, forward: Callable, *,
+                 buckets: Sequence[int], device=None,
+                 engine_metrics: ServeMetrics,
+                 health: ReplicaHealthTracker):
+        self.rid = rid
+        self.device = device
+        self.metrics = ServeMetrics()
+        self._forward = forward
+        self._buckets = tuple(buckets)
+        self._engine_metrics = engine_metrics
+        self._health = health
+        self._queue: "queue.Queue" = queue.Queue()
+        self._thread: Optional[threading.Thread] = None
+
+    # -- lifecycle --------------------------------------------------------
+
+    def start(self) -> None:
+        if self._thread is None:
+            self._thread = threading.Thread(
+                target=self._loop, daemon=True,
+                name=f"lut-serve-replica-{self.rid}")
+            self._thread.start()
+
+    def stop(self) -> None:
+        """Request shutdown and join; queued batches are served first."""
+        if self._thread is not None:
+            self._queue.put(_STOP)
+            self._thread.join()
+            self._thread = None
+
+    def warmup(self, in_features: int) -> None:
+        for b in self._buckets:
+            x = np.zeros((b, in_features), np.float32)
+            self._forward(self._put(x)).block_until_ready()
+
+    def _put(self, x: np.ndarray) -> jax.Array:
+        """One host->device transfer, straight to the pinned device (a
+        jnp.asarray first would commit to the default device and pay a
+        second device-to-device copy per batch)."""
+        return (jnp.asarray(x) if self.device is None
+                else jax.device_put(x, self.device))
+
+    # -- dispatcher-facing ------------------------------------------------
+
+    def depth(self) -> int:
+        """Batches in flight on this replica — queued AND currently
+        being served (``unfinished_tasks`` pairs every put() with the
+        task_done() below).  The routing load signal: a replica mid-
+        dispatch must not look idle, or sticky routing would pile onto
+        it while true idle replicas sit empty."""
+        return self._queue.unfinished_tasks
+
+    def dispatch(self, batch: List[_Request], total: int,
+                 queue_depth: int) -> None:
+        self._queue.put((batch, total, queue_depth))
+
+    # -- worker -----------------------------------------------------------
+
+    def _loop(self) -> None:
+        while True:
+            item = self._queue.get()
+            if item is _STOP:
+                self._queue.task_done()
+                break
+            batch, total, depth = item
+            try:
+                self._serve(batch, total, depth)
+            finally:
+                self._queue.task_done()
+
+    def _serve(self, batch: List[_Request], total: int, depth: int) -> None:
+        x = (batch[0].x if len(batch) == 1
+             else np.concatenate([r.x for r in batch], axis=0))
+        try:
+            preds, padded = self._run(x)
+        except Exception as e:  # surface engine errors to every waiter
+            # Futures resolve BEFORE the health report: record_failure may
+            # invoke a user on_evict hook, and no hook outcome may ever
+            # strand a client (tracker also guards the hook itself).
+            for r in batch:
+                _complete(r.future, exc=e)
+            self._health.record_failure(self.rid, e)
+            return
+        self._health.record_success(self.rid)
+        t_done = time.perf_counter()
+        off = 0
+        for r in batch:
+            delivered = _complete(r.future, preds[off:off + r.n])
+            off += r.n
+            if delivered:
+                lat = t_done - r.t_submit
+                self.metrics.record_request(lat, r.n)
+                self._engine_metrics.record_request(lat, r.n)
+        self.metrics.record_batch(total, padded, depth)
+        self._engine_metrics.record_batch(total, padded, depth)
+
+    def _run(self, x: np.ndarray) -> Tuple[np.ndarray, int]:
+        """Serve (n, F) through bucket-padded jitted calls; returns the
+        (n,) predictions and the number of dispatched (padded) slots."""
+        n = x.shape[0]
+        max_bucket = self._buckets[-1]
+        outs: List[np.ndarray] = []
+        padded = 0
+        for s in range(0, n, max_bucket):
+            chunk = x[s:s + max_bucket]
+            b = pick_bucket(chunk.shape[0], self._buckets)
+            if chunk.shape[0] < b:
+                pad = np.zeros((b - chunk.shape[0], x.shape[1]), x.dtype)
+                xc = np.concatenate([chunk, pad], axis=0)
+            else:
+                xc = chunk
+            out = np.asarray(self._forward(self._put(xc)))
+            outs.append(out[:chunk.shape[0]])
+            padded += b
+        return np.concatenate(outs, axis=0), padded
+
+
 class LUTServeEngine:
-    """Serve a ServeBundle behind a dynamic batcher (see module docstring)."""
+    """Serve a ServeBundle behind a dynamic batcher with replica routing
+    (see module docstring)."""
 
     def __init__(self, bundle: ServeBundle, *,
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
                  max_wait_ms: float = 2.0,
                  use_kernel: Optional[bool] = None,
                  fused: bool = True,
-                 metrics: Optional[ServeMetrics] = None):
+                 metrics: Optional[ServeMetrics] = None,
+                 replicas: int = 1,
+                 devices: Optional[Sequence] = None,
+                 health: Optional[ReplicaHealthTracker] = None,
+                 sharded: bool = False,
+                 shard_mode: str = "auto"):
         if list(buckets) != sorted(set(buckets)):
             raise ValueError(f"buckets must be strictly increasing: {buckets}")
+        if replicas < 1:
+            raise ValueError(f"replicas={replicas} must be >= 1")
+        if sharded and replicas != 1:
+            raise ValueError(
+                "sharded=True serves through ONE shard_map'd executor "
+                "spanning the replica mesh; combine it with replicas=1 "
+                "(use plain replicas=N for independent-executor routing)")
         self.bundle = bundle
         self.buckets = tuple(int(b) for b in buckets)
         self.max_wait_s = max_wait_ms / 1e3
@@ -185,8 +347,40 @@ class LUTServeEngine:
             else use_kernel
         self.use_kernel = kern
         self.fused = fused
+        self.sharded = sharded
         self.metrics = metrics or ServeMetrics()
-        self._forward = make_forward_fn(bundle, use_kernel=kern, fused=fused)
+        self.health = health or ReplicaHealthTracker(replicas)
+        if self.health.num_replicas != replicas:
+            raise ValueError(
+                f"health tracker covers {self.health.num_replicas} "
+                f"replicas, engine has {replicas}")
+        if sharded:
+            from repro.serve.sharded import make_sharded_forward_fn
+            # Pass use_kernel through unresolved: None must stay "auto"
+            # so an o_sharded plan can legally fall to the jnp path
+            # (an *explicit* True is refused there — see sharded.py).
+            forwards = [make_sharded_forward_fn(
+                bundle, use_kernel=use_kernel, mode=shard_mode)]
+            devs: List = [None]
+        elif replicas == 1 and devices is None:
+            # Single replica, unpinned: identical to the classic engine
+            # (no cross-device transfers on single-device hosts).
+            forwards = [make_forward_fn(bundle, use_kernel=kern,
+                                        fused=fused)]
+            devs = [None]
+        else:
+            pool = list(devices) if devices is not None \
+                else jax.local_devices()
+            devs = [pool[i % len(pool)] for i in range(replicas)]
+            forwards = [make_forward_fn(bundle, use_kernel=kern,
+                                        fused=fused, device=d)
+                        for d in devs]
+        self._executors = [
+            _ReplicaExecutor(i, f, buckets=self.buckets, device=d,
+                             engine_metrics=self.metrics,
+                             health=self.health)
+            for i, (f, d) in enumerate(zip(forwards, devs))]
+        self._rr = 0  # round-robin cursor for routing tie-breaks
         self._queue: "queue.Queue" = queue.Queue()
         self._thread: Optional[threading.Thread] = None
         self._closed = False
@@ -194,10 +388,20 @@ class LUTServeEngine:
         # so a request can never land behind the _STOP sentinel and hang.
         self._submit_lock = threading.Lock()
 
+    @property
+    def replicas(self) -> int:
+        return len(self._executors)
+
+    @property
+    def replica_metrics(self) -> List[ServeMetrics]:
+        return [ex.metrics for ex in self._executors]
+
     # -- lifecycle --------------------------------------------------------
 
     def start(self) -> "LUTServeEngine":
         if self._thread is None:
+            for ex in self._executors:
+                ex.start()
             self._thread = threading.Thread(target=self._dispatch_loop,
                                             daemon=True,
                                             name="lut-serve-dispatch")
@@ -205,11 +409,11 @@ class LUTServeEngine:
         return self
 
     def warmup(self) -> None:
-        """Trace/compile every bucket shape up front so no client request
-        ever pays a compile."""
+        """Trace/compile every bucket shape on every replica up front so
+        no client request ever pays a compile."""
         f = self.bundle.cfg.in_features
-        for b in self.buckets:
-            self._forward(jnp.zeros((b, f), jnp.float32)).block_until_ready()
+        for ex in self._executors:
+            ex.warmup(f)
 
     def close(self) -> None:
         with self._submit_lock:
@@ -220,6 +424,9 @@ class LUTServeEngine:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        # Executors drain already-routed batches, then exit.
+        for ex in self._executors:
+            ex.stop()
 
     def __enter__(self) -> "LUTServeEngine":
         self.start()
@@ -284,7 +491,7 @@ class LUTServeEngine:
                     break
                 batch.append(nxt)
                 total += nxt.n
-            self._serve(batch, total)
+            self._route(batch, total)
         # fail any requests left behind on shutdown
         while True:
             try:
@@ -294,41 +501,27 @@ class LUTServeEngine:
             if r is not _STOP:
                 _complete(r.future, exc=RuntimeError("engine closed"))
 
-    def _serve(self, batch: List[_Request], total: int) -> None:
+    def _route(self, batch: List[_Request], total: int) -> None:
+        """Queue-depth-aware sticky round-robin over healthy replicas:
+        the least-loaded healthy executor wins, with depth ties broken
+        in round-robin order *from the last-used replica inclusive* —
+        so light load sticks to one warm replica (no cross-device
+        scatter for traffic one device can absorb) and spills to the
+        next replica exactly when the current one has queued work.
+        Under saturation every replica ends up busy and the policy
+        degenerates to least-loaded."""
         depth = self._queue.qsize()
-        x = (batch[0].x if len(batch) == 1
-             else np.concatenate([r.x for r in batch], axis=0))
-        try:
-            preds, padded = self._run(x)
-        except Exception as e:  # surface engine errors to every waiter
+        healthy = [ex for ex in self._executors
+                   if self.health.is_healthy(ex.rid)]
+        if not healthy:
+            err = RuntimeError(
+                f"no healthy replicas (of {len(self._executors)}) — "
+                f"failure counts {self.health.failure_counts()}")
             for r in batch:
-                _complete(r.future, exc=e)
+                _complete(r.future, exc=err)
             return
-        t_done = time.perf_counter()
-        off = 0
-        for r in batch:
-            delivered = _complete(r.future, preds[off:off + r.n])
-            off += r.n
-            if delivered:
-                self.metrics.record_request(t_done - r.t_submit, r.n)
-        self.metrics.record_batch(total, padded, depth)
-
-    def _run(self, x: np.ndarray) -> Tuple[np.ndarray, int]:
-        """Serve (n, F) through bucket-padded jitted calls; returns the
-        (n,) predictions and the number of dispatched (padded) slots."""
-        n = x.shape[0]
-        max_bucket = self.buckets[-1]
-        outs: List[np.ndarray] = []
-        padded = 0
-        for s in range(0, n, max_bucket):
-            chunk = x[s:s + max_bucket]
-            b = pick_bucket(chunk.shape[0], self.buckets)
-            if chunk.shape[0] < b:
-                pad = np.zeros((b - chunk.shape[0], x.shape[1]), x.dtype)
-                xc = np.concatenate([chunk, pad], axis=0)
-            else:
-                xc = chunk
-            out = np.asarray(self._forward(jnp.asarray(xc)))
-            outs.append(out[:chunk.shape[0]])
-            padded += b
-        return np.concatenate(outs, axis=0), padded
+        n = len(self._executors)
+        chosen = min(healthy,
+                     key=lambda ex: (ex.depth(), (ex.rid - self._rr) % n))
+        self._rr = chosen.rid
+        chosen.dispatch(batch, total, depth)

@@ -50,6 +50,25 @@ class ServeBundle:
     packed_tables: Optional[List[np.ndarray]] = None  # [(O_i, T_i/P) i32]
     shift_mats: Optional[List[np.ndarray]] = None     # [(W_{i-1}, O_i) f32]
     cascade_geom: Optional[tuple] = None              # lut_cascade meta
+    # Multi-device layout (serve/sharded.py), cached by plan_shards().
+    shard_plan: Optional[Any] = None
+
+    def plan_shards(self, num_replicas: int, *, mode: str = "auto",
+                    vmem_budget_bytes: Optional[int] = None):
+        """Compute (and cache) the multi-device layout for this bundle —
+        replicated tables vs O-sharded — including the padded per-device
+        operands, so sharded serving never pads/packs on the hot path.
+        Re-plans only when the requested geometry actually changes."""
+        from repro.serve.sharded import plan_shards
+        plan = self.shard_plan
+        if (plan is None or plan.num_replicas != num_replicas
+                or (mode != "auto" and plan.mode != mode)
+                or (vmem_budget_bytes is not None
+                    and plan.vmem_budget_bytes != vmem_budget_bytes)):
+            self.shard_plan = plan_shards(
+                self, num_replicas, mode=mode,
+                vmem_budget_bytes=vmem_budget_bytes)
+        return self.shard_plan
 
     def prepack(self) -> "ServeBundle":
         """Bit-pack every layer's table and build the shift matrices the
@@ -153,8 +172,10 @@ class TableRegistry:
         d = self.root / name
         return d.is_dir() and self._store(name).latest_step() is not None
 
-    def load(self, name: str, *, version: Optional[int] = None
-             ) -> ServeBundle:
+    def load(self, name: str, *, version: Optional[int] = None,
+             shard_replicas: Optional[int] = None,
+             shard_mode: str = "auto",
+             vmem_budget_bytes: Optional[int] = None) -> ServeBundle:
         store = self._store(name)
         step = store.latest_step() if version is None else version
         if step is None:
@@ -186,7 +207,7 @@ class TableRegistry:
                                                cfg.degree)
         extra = {k: v for k, v in meta.items()
                  if k not in ("format", "config", "fingerprint")}
-        return ServeBundle(
+        bundle = ServeBundle(
             cfg=cfg,
             tables=[np.asarray(t) for t in tree["tables"]],
             statics=statics,
@@ -195,3 +216,8 @@ class TableRegistry:
                          for s in tree["layer_log_s"]],
             meta=extra,
         ).prepack()
+        if shard_replicas is not None:
+            # Multi-device deployments plan (pad + shard) once at load.
+            bundle.plan_shards(shard_replicas, mode=shard_mode,
+                               vmem_budget_bytes=vmem_budget_bytes)
+        return bundle

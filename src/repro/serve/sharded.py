@@ -1,0 +1,284 @@
+"""Multi-device sharded serving for the fused LUT cascade.
+
+A converted NeuraLUT model is pure table lookups, so scale-out is
+embarrassingly parallel (NeuraLUT-Assemble, arXiv:2504.00592): the only
+decisions are where the tables live and how the batch is split.  This
+module provides both layouts as ``shard_map``'d wrappers over the fused
+cascade, on a 1-D ``(replica,)`` mesh (``sharding.replica_mesh``):
+
+  * **replicated** — every device holds the full bit-packed table stack
+    and shift matrices; the batch is split along the replica axis and
+    each device runs the whole cascade (the Pallas ``lut_cascade``
+    kernel on TPU, the packed jnp twin elsewhere) on its shard with
+    zero inter-device communication.  The right layout whenever the
+    packed stack fits the per-device VMEM budget.
+
+  * **o_sharded** — for bundles whose packed tables exceed the budget:
+    every layer's output-neuron dimension ``O_i`` is split across the
+    replica axis (each device stores ``O_i/R`` table rows and shift-mat
+    columns) while the batch stays replicated.  Because layer ``i+1``'s
+    connectivity may read *any* layer-``i`` neuron, each layer ends with
+    an ``all_gather`` of the (B, O_i/R) code shard along the neuron
+    axis — the device-side form of "concatenate the per-shard results"
+    (doing it on-device instead of on the host keeps the cascade a
+    single dispatch; the host only ever sees the assembled output).
+    Neuron dims are zero-padded to a multiple of R once at plan time:
+    padded columns produce address 0 into a zeroed table row, and the
+    next layer's shift matrix has zero rows there, so padding never
+    perturbs real lanes — the path stays bit-exact vs ``lut_forward``.
+
+Which layout to use is a :class:`ShardPlan`, computed once per bundle by
+``ServeBundle.plan_shards`` (``TableRegistry.load(..., shard_replicas=R)``
+does it at load time, so serving never pads/packs on the hot path).
+
+Everything here is testable on CPU with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI
+multi-device job); tests/test_serve_sharded.py holds the oracle
+bit-exactness gates for every ``configs/neuralut_*`` geometry.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import lut_infer as LI
+from repro.kernels.ops import cascade_apply
+from repro.sharding.ctx import replica_mesh
+
+#: Default per-device budget for resident cascade operands (packed tables
+#: + shift matrices).  TPU cores have ~16 MiB VMEM; half is left for the
+#: batch tile, mux-tree intermediates and double buffering.
+DEFAULT_VMEM_BUDGET = 8 * 2 ** 20
+
+
+@dataclass
+class ShardPlan:
+    """How one bundle is laid out across a ``(replica,)`` mesh.
+
+    For ``mode == "o_sharded"`` the plan carries the padded *global*
+    operands (numpy, built once): ``shift_mats[i]`` is
+    (W^pad_{i-1}, O^pad_i) and ``packed_tables[i]`` is (O^pad_i, Tw_i),
+    with every padded dim a multiple of ``num_replicas`` so shard_map
+    can split them evenly.  For ``mode == "replicated"`` the bundle's
+    own prepacked operands are used as-is and these fields stay None.
+    """
+
+    num_replicas: int
+    mode: str                                   # "replicated" | "o_sharded"
+    vmem_budget_bytes: int
+    operand_bytes_total: int                    # packed tables + shift mats
+    operand_bytes_per_device: int
+    pad_widths: Tuple[int, ...] = ()            # O^pad per layer (o_sharded)
+    shift_mats: Optional[List[np.ndarray]] = None
+    packed_tables: Optional[List[np.ndarray]] = None
+    meta: tuple = ()                            # lut_cascade.cascade_meta
+
+    def describe(self) -> str:
+        per = self.operand_bytes_per_device / 2 ** 10
+        return (f"ShardPlan(replicas={self.num_replicas}, mode={self.mode}, "
+                f"operands={per:.1f} KiB/device, "
+                f"budget={self.vmem_budget_bytes / 2 ** 10:.0f} KiB)")
+
+
+def _pad_operands(cfg, shift_mats: Sequence[np.ndarray],
+                  packed_tables: Sequence[np.ndarray], num_replicas: int
+                  ) -> Tuple[Tuple[int, ...], List[np.ndarray],
+                             List[np.ndarray]]:
+    """Zero-pad every layer's neuron dim to a multiple of ``num_replicas``.
+
+    Padded shift-mat columns are all-zero, so a padded neuron's address
+    is 0 and it reads slot 0 of a zeroed table row (code 0); the next
+    layer's shift matrix is zero on the rows feeding from padded
+    neurons, so the garbage-free invariant propagates through the whole
+    cascade and real output lanes are untouched.
+    """
+    r = num_replicas
+    pad_widths = tuple(-(-o // r) * r for o in cfg.layer_widths)
+    out_sms: List[np.ndarray] = []
+    out_pts: List[np.ndarray] = []
+    w_prev, w_prev_pad = cfg.in_features, cfg.in_features
+    for i, (sm, pt) in enumerate(zip(shift_mats, packed_tables)):
+        o, o_pad = cfg.layer_widths[i], pad_widths[i]
+        psm = np.zeros((w_prev_pad, o_pad), np.float32)
+        psm[:w_prev, :o] = np.asarray(sm, np.float32)
+        ppt = np.zeros((o_pad, pt.shape[1]), np.int32)
+        ppt[:o] = np.asarray(pt, np.int32)
+        out_sms.append(psm)
+        out_pts.append(ppt)
+        w_prev, w_prev_pad = o, o_pad
+    return pad_widths, out_sms, out_pts
+
+
+def plan_shards(bundle, num_replicas: int, *, mode: str = "auto",
+                vmem_budget_bytes: Optional[int] = None) -> ShardPlan:
+    """Choose (or force) a layout for ``bundle`` on ``num_replicas``
+    devices and precompute its operands.  ``mode="auto"`` replicates
+    when the resident operands fit the per-device budget, else shards
+    the neuron dim."""
+    if mode not in ("auto", "replicated", "o_sharded"):
+        raise ValueError(f"unknown shard mode {mode!r}")
+    if num_replicas < 1:
+        raise ValueError(f"num_replicas={num_replicas} must be >= 1")
+    bundle.prepack()
+    budget = DEFAULT_VMEM_BUDGET if vmem_budget_bytes is None \
+        else int(vmem_budget_bytes)
+    total = sum(int(t.nbytes) for t in bundle.packed_tables) + \
+        sum(int(m.nbytes) for m in bundle.shift_mats)
+    if mode == "auto":
+        mode = "replicated" if total <= budget else "o_sharded"
+    plan = ShardPlan(
+        num_replicas=num_replicas,
+        mode=mode,
+        vmem_budget_bytes=budget,
+        operand_bytes_total=total,
+        operand_bytes_per_device=(total if mode == "replicated"
+                                  else -(-total // num_replicas)),
+        meta=bundle.cascade_geom,
+    )
+    if mode == "o_sharded":
+        plan.pad_widths, plan.shift_mats, plan.packed_tables = \
+            _pad_operands(bundle.cfg, bundle.shift_mats,
+                          bundle.packed_tables, num_replicas)
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# shard_map'd cascade wrappers (codes -> codes; padding handled by callers)
+
+
+def replicated_cascade_fn(mesh: Mesh, meta: tuple, beta: int, *,
+                          use_kernel: bool = False, block_b: int = 8
+                          ) -> Callable:
+    """Data-parallel cascade: ``fn(codes, shift_mats, packed_tables)``.
+
+    ``codes`` is (B, W_0) with B divisible by the mesh size; tables and
+    shift matrices are replicated per device and each device runs the
+    whole fused cascade on its batch shard — no collectives at all.
+    """
+    axis = mesh.axis_names[0]
+
+    def body(codes, sms, pts):
+        return cascade_apply(codes, sms, pts, meta=meta, beta=beta,
+                             use_kernel=use_kernel, block_b=block_b)
+
+    # check_rep=False: pallas_call has no shard_map replication rule
+    # (harmless here — the body is purely per-shard, no collectives).
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(axis, None), P(), P()),
+                     out_specs=P(axis, None), check_rep=False)
+
+
+def o_sharded_cascade_fn(mesh: Mesh, plan: ShardPlan, beta: int) -> Callable:
+    """Table-sharded cascade: ``fn(codes, shift_mats, packed_tables)``.
+
+    Operands are the plan's *padded* globals; shard_map splits each
+    layer's table rows / shift-mat columns along the replica axis, so
+    each device stores only 1/R of every table.  The batch stays
+    replicated — layer ``i+1`` may read *any* layer-``i`` neuron, so a
+    device must know every neuron's code for the full batch; sharding
+    the batch on the same 1-D axis would leave each device a diagonal
+    (batch-block, neuron-block) tile and the neuron-axis gather would
+    mix different batch rows.  Per layer each device computes its
+    (B, O^pad_i/R) code shard, then the shards are reassembled with a
+    tiled ``all_gather`` along the neuron axis (the device-side
+    "concatenate the per-shard results") so the next shift-matmul sees
+    every neuron.  Output is the replicated padded (B, O^pad_last)
+    codes — callers slice off the padding.
+    """
+    axis = mesh.axis_names[0]
+    p = LI.packed_slots(beta)
+    slot_bits = p.bit_length() - 1
+    mask = (1 << beta) - 1
+
+    def body(codes, sms_local, pts_local):
+        c = codes.astype(jnp.float32)
+        for sm, pt in zip(sms_local, pts_local):
+            addr = jnp.dot(c, sm).astype(jnp.int32)        # (B, Ol)
+            wsel = jax.lax.shift_right_logical(addr, slot_bits)
+            slot = addr & (p - 1)
+            o_local = pt.shape[0]
+            word = pt[jnp.arange(o_local)[None, :], wsel]
+            code = jax.lax.shift_right_logical(word, beta * slot) & mask
+            full = jax.lax.all_gather(code, axis, axis=1, tiled=True)
+            c = full.astype(jnp.float32)                   # (B, O^pad)
+        return c.astype(jnp.int32)
+
+    # check_rep=False: the checker cannot statically infer that a tiled
+    # all_gather over the full axis yields a replicated result; the
+    # bit-exactness tests gate the actual semantics.
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(None, None), P(None, axis), P(axis, None)),
+                     out_specs=P(None, None), check_rep=False)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end sharded forward (floats in, class predictions out)
+
+
+def make_sharded_forward_fn(bundle, *, mesh: Optional[Mesh] = None,
+                            num_replicas: Optional[int] = None,
+                            mode: str = "auto",
+                            use_kernel: Optional[bool] = None,
+                            vmem_budget_bytes: Optional[int] = None,
+                            block_b: int = 8) -> Callable:
+    """Jitted (B, in_features) float32 -> (B,) int32 predictions, running
+    the cascade ``shard_map``'d over ``mesh`` (default: a replica mesh
+    over every local device).
+
+    Bit-exact vs the single-device engine paths and the ``lut_forward``
+    oracle for any batch size: B is zero-padded up to a multiple of the
+    mesh size before the shard_map and sliced after (padded rows compute
+    garbage predictions that are dropped).
+    """
+    if mesh is None:
+        mesh = replica_mesh(num_replicas)
+    elif num_replicas is not None and mesh.devices.size != num_replicas:
+        raise ValueError(f"mesh has {mesh.devices.size} devices, "
+                         f"num_replicas={num_replicas}")
+    r = int(mesh.devices.size)
+    plan = bundle.plan_shards(r, mode=mode,
+                              vmem_budget_bytes=vmem_budget_bytes)
+    if use_kernel and plan.mode == "o_sharded":
+        # The Pallas cascade runs the whole network in one launch and
+        # cannot expose the per-layer boundary the neuron-axis
+        # all_gather needs — an explicit kernel request cannot be
+        # honored here, so refuse loudly instead of silently degrading.
+        raise ValueError(
+            "use_kernel=True is incompatible with the o_sharded layout "
+            "(per-layer all_gather; the fused Pallas kernel has no "
+            "inter-layer boundary) — use mode='replicated' or let "
+            "use_kernel default")
+    kern = (jax.default_backend() == "tpu") if use_kernel is None \
+        else use_kernel
+    cfg = bundle.cfg
+    params = bundle.serve_params()
+    o_last = cfg.layer_widths[-1]
+    if plan.mode == "replicated":
+        sms = [jnp.asarray(m) for m in bundle.shift_mats]
+        pts = [jnp.asarray(t) for t in bundle.packed_tables]
+        cascade = replicated_cascade_fn(mesh, plan.meta, cfg.beta,
+                                        use_kernel=kern, block_b=block_b)
+    else:
+        sms = [jnp.asarray(m) for m in plan.shift_mats]
+        pts = [jnp.asarray(t) for t in plan.packed_tables]
+        cascade = o_sharded_cascade_fn(mesh, plan, cfg.beta)
+
+    def forward(x: jax.Array) -> jax.Array:
+        codes = LI.input_codes(cfg, params, x).astype(jnp.int32)
+        b = codes.shape[0]
+        # Only the data-parallel layout splits the batch (o_sharded
+        # replicates it), so only it needs B divisible by the mesh.
+        pad_b = (-b) % r if plan.mode == "replicated" else 0
+        if pad_b:
+            codes = jnp.pad(codes, ((0, pad_b), (0, 0)))
+        out = cascade(codes, sms, pts)[:b, :o_last]
+        vals = LI.class_values(cfg, params, out)
+        return jnp.argmax(vals, axis=-1).astype(jnp.int32)
+
+    return jax.jit(forward)

@@ -1,3 +1,4 @@
+from .ctx import REPLICA_AXIS, replica_mesh
 from .partition import (
     batch_partition,
     cache_partition,
@@ -5,4 +6,11 @@ from .partition import (
     param_partition,
 )
 
-__all__ = ["batch_partition", "cache_partition", "named", "param_partition"]
+__all__ = [
+    "REPLICA_AXIS",
+    "batch_partition",
+    "cache_partition",
+    "named",
+    "param_partition",
+    "replica_mesh",
+]

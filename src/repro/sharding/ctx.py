@@ -17,12 +17,38 @@ from __future__ import annotations
 
 import threading
 from contextlib import contextmanager
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
-from jax.sharding import NamedSharding, PartitionSpec as P
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _state = threading.local()
+
+#: Mesh axis name used by the serving layer (repro.serve.sharded): a 1-D
+#: data/table-parallel axis over whichever devices serve the model.
+REPLICA_AXIS = "replica"
+
+
+def replica_mesh(num_replicas: Optional[int] = None, *,
+                 devices: Optional[Sequence] = None,
+                 axis: str = REPLICA_AXIS) -> Mesh:
+    """1-D ``(replica,)`` mesh over the first ``num_replicas`` devices.
+
+    The serving counterpart of ``launch.mesh``: training meshes are 2/3-D
+    (data, model[, pod]); a converted LUT model has no model-parallel
+    dimension worth naming, so serving scales out along one replica axis
+    (data-parallel batches, or table shards — see serve/sharded.py).
+    Defaults to every local device, which is how the forced-host-device
+    CI job (``XLA_FLAGS=--xla_force_host_platform_device_count=8``)
+    materializes an 8-way mesh on CPU.
+    """
+    devs = list(devices) if devices is not None else jax.devices()
+    n = len(devs) if num_replicas is None else int(num_replicas)
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"num_replicas={n} not in [1, {len(devs)}] "
+                         f"available devices")
+    return Mesh(np.asarray(devs[:n]), (axis,))
 
 
 def set_active_mesh(mesh, data_axes: Tuple[str, ...] = ("data",),

@@ -18,8 +18,7 @@ architecture compiles on any mesh.
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Tuple
+from typing import Tuple
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P

@@ -12,8 +12,7 @@ therefore includes gradients, fp32 master weights, and both Adam moments.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

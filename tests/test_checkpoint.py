@@ -1,11 +1,8 @@
 import json
-import os
-import shutil
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import CheckpointStore
 

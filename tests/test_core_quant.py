@@ -4,7 +4,6 @@ import numpy as np
 import pytest
 
 hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import quant  # noqa: E402
 

@@ -1,13 +1,11 @@
 """Multi-device tests: run in subprocesses with 8 fake host devices (the
 main pytest process must keep the real single-device view)."""
-import json
 import os
 import subprocess
 import sys
 import textwrap
 from pathlib import Path
 
-import pytest
 
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 

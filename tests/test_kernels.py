@@ -9,26 +9,26 @@ from repro.kernels.ops import grouped_subnet_op, lut_lookup_op
 from repro.kernels.ref import grouped_subnet_ref, lut_gather_ref
 
 
-def _subnet_args(B, O, F, N, L, S, dtype, seed=0):
+def _subnet_args(B, NO, F, N, L, S, dtype, seed=0):
     rng = np.random.default_rng(seed)
     widths = [F] + [N] * (L - 1) + [1]
-    xg = jnp.asarray(rng.normal(0, 1, (B, O, F)), dtype)
-    lw = [jnp.asarray(rng.normal(0, .5, (O, widths[i], widths[i + 1])), dtype)
+    xg = jnp.asarray(rng.normal(0, 1, (B, NO, F)), dtype)
+    lw = [jnp.asarray(rng.normal(0, .5, (NO, widths[i], widths[i + 1])), dtype)
           for i in range(L)]
-    lb = [jnp.asarray(rng.normal(0, .1, (O, widths[i + 1])), dtype)
+    lb = [jnp.asarray(rng.normal(0, .1, (NO, widths[i + 1])), dtype)
           for i in range(L)]
     if S:
         sw = [jnp.asarray(
-            rng.normal(0, .5, (O, widths[c * S], widths[(c + 1) * S])), dtype)
+            rng.normal(0, .5, (NO, widths[c * S], widths[(c + 1) * S])), dtype)
             for c in range(L // S)]
-        sb = [jnp.asarray(rng.normal(0, .1, (O, widths[(c + 1) * S])), dtype)
+        sb = [jnp.asarray(rng.normal(0, .1, (NO, widths[(c + 1) * S])), dtype)
               for c in range(L // S)]
     else:
         sw = sb = None
     return xg, lw, lb, sw, sb
 
 
-@pytest.mark.parametrize("B,O,F,N,L,S", [
+@pytest.mark.parametrize("B,NO,F,N,L,S", [
     (128, 16, 6, 16, 4, 2),   # HDR-5L geometry
     (128, 32, 3, 8, 4, 2),    # JSC-2L geometry
     (256, 16, 3, 16, 4, 2),   # JSC-5L geometry
@@ -36,10 +36,10 @@ def _subnet_args(B, O, F, N, L, S, dtype, seed=0):
     (128, 16, 5, 12, 3, 3),   # single chunk skip
     (64, 8, 2, 4, 1, 0),      # linear degenerate
 ])
-def test_grouped_subnet_shapes(B, O, F, N, L, S):
-    xg, lw, lb, sw, sb = _subnet_args(B, O, F, N, L, S, jnp.float32)
+def test_grouped_subnet_shapes(B, NO, F, N, L, S):
+    xg, lw, lb, sw, sb = _subnet_args(B, NO, F, N, L, S, jnp.float32)
     out = grouped_subnet_op(xg, lw, lb, sw, sb, skip=S,
-                            block_b=min(64, B), block_o=min(8, O))
+                            block_b=min(64, B), block_o=min(8, NO))
     ref = grouped_subnet_ref(xg, lw, lb, sw, sb, skip=S)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=2e-5, atol=2e-5)
@@ -58,25 +58,25 @@ def test_grouped_subnet_dtypes(dtype, tol):
                                rtol=tol, atol=tol)
 
 
-@pytest.mark.parametrize("O,T,B,bb,bo", [
+@pytest.mark.parametrize("NO,T,B,bb,bo", [
     (32, 64, 16, 8, 32),
     (64, 4096, 32, 8, 32),    # beta=2,F=6 / beta=4,F=3 table size
     (128, 512, 8, 4, 16),
     (10, 1024, 40, 8, 10),    # classes not power of two
 ])
-def test_lut_lookup_shapes(O, T, B, bb, bo):
+def test_lut_lookup_shapes(NO, T, B, bb, bo):
     rng = np.random.default_rng(1)
-    tbl = jnp.asarray(rng.integers(0, 2 ** 7, (O, T)), jnp.int32)
-    addr = jnp.asarray(rng.integers(0, T, (B, O)), jnp.int32)
+    tbl = jnp.asarray(rng.integers(0, 2 ** 7, (NO, T)), jnp.int32)
+    addr = jnp.asarray(rng.integers(0, T, (B, NO)), jnp.int32)
     got = lut_lookup_op(tbl, addr, block_b=bb, block_o=bo)
     ref = lut_gather_ref(tbl, addr)
     assert (np.asarray(got) == np.asarray(ref)).all()
 
 
 def test_lut_lookup_edge_addresses():
-    O, T = 8, 256
-    tbl = jnp.asarray(np.arange(O * T).reshape(O, T) % 251, jnp.int32)
-    addr = jnp.asarray(np.stack([np.zeros(O), np.full(O, T - 1)]), jnp.int32)
+    NO, T = 8, 256
+    tbl = jnp.asarray(np.arange(NO * T).reshape(NO, T) % 251, jnp.int32)
+    addr = jnp.asarray(np.stack([np.zeros(NO), np.full(NO, T - 1)]), jnp.int32)
     got = lut_lookup_op(tbl, addr, block_b=2, block_o=8)
     assert (np.asarray(got)[0] == np.asarray(tbl[:, 0])).all()
     assert (np.asarray(got)[1] == np.asarray(tbl[:, -1])).all()

@@ -210,11 +210,11 @@ def test_truth_table_oversized_guard():
 # lut_lookup: non-divisible shapes now pad instead of raising
 
 
-@pytest.mark.parametrize("B,O", [(5, 32), (16, 10), (7, 13)])
-def test_lut_lookup_pads_non_divisible(B, O):
+@pytest.mark.parametrize("B,NO", [(5, 32), (16, 10), (7, 13)])
+def test_lut_lookup_pads_non_divisible(B, NO):
     rng = np.random.default_rng(9)
-    tbl = jnp.asarray(rng.integers(0, 128, (O, 64)), jnp.int32)
-    addr = jnp.asarray(rng.integers(0, 64, (B, O)), jnp.int32)
+    tbl = jnp.asarray(rng.integers(0, 128, (NO, 64)), jnp.int32)
+    addr = jnp.asarray(rng.integers(0, 64, (B, NO)), jnp.int32)
     got = lut_lookup_op(tbl, addr, block_b=8, block_o=8)
     assert (np.asarray(got) == np.asarray(lut_gather_ref(tbl, addr))).all()
 

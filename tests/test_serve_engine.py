@@ -17,9 +17,8 @@ from repro.core import lut_infer as LI
 from repro.core import model as M
 from repro.core import truth_table as TT
 from repro.core.nl_config import NeuraLUTConfig
-from repro.serve import (DEFAULT_BUCKETS, LUTServeEngine, ServeMetrics,
-                         TableRegistry, bundle_from_training, percentile,
-                         pick_bucket)
+from repro.serve import (LUTServeEngine, ServeMetrics, TableRegistry,
+                         bundle_from_training, percentile, pick_bucket)
 
 
 def _tiny_cfg(name="serve-tiny", kind="subnet"):
@@ -136,6 +135,29 @@ def test_submit_after_close_raises():
     eng.close()
     with pytest.raises(RuntimeError):
         eng.submit(np.zeros((1, bundle.cfg.in_features), np.float32))
+
+
+def test_close_resolves_every_inflight_future():
+    """Shutdown with a backlog: every submitted future must resolve —
+    served if its batch was already accepted by the executor, failed
+    with 'engine closed' otherwise — and all threads must join."""
+    bundle, _ = _tiny_bundle()
+    x = np.random.default_rng(7).normal(
+        0, 1, (3, bundle.cfg.in_features)).astype(np.float32)
+    eng = LUTServeEngine(bundle, use_kernel=False, buckets=(1, 8),
+                         max_wait_ms=10.0)
+    eng.start()
+    eng.warmup()
+    futs = [eng.submit(x) for _ in range(30)]
+    eng.close()
+    assert eng._thread is None
+    assert all(ex._thread is None for ex in eng._executors)
+    for f in futs:
+        assert f.done()
+        if f.exception() is None:
+            assert f.result().shape == (3,)
+        else:
+            assert "engine closed" in str(f.exception())
 
 
 # ---------------------------------------------------------------------------

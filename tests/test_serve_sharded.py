@@ -1,0 +1,414 @@
+"""Multi-device sharded serving (repro.serve.sharded) + replica routing.
+
+Three layers of coverage:
+
+  * shard planning: auto layout selection against the VMEM budget,
+    padded-operand construction (neuron dims divisible by R, padding
+    provably inert), plan caching on the bundle and registry load;
+
+  * bit-exactness: the replicated and O-sharded cascades against the
+    ``lut_infer.lut_forward`` oracle — in-process on however many
+    devices exist (1 under plain pytest, 8 under the CI multi-device
+    job's ``XLA_FLAGS=--xla_force_host_platform_device_count=8``), and
+    in a forced-8-device subprocess for every ``configs/neuralut_*``
+    geometry (the acceptance gate);
+
+  * engine fault/shutdown paths: replica routing spreads batches, a
+    replica evicted by ``runtime.fault.ReplicaHealthTracker`` stops
+    receiving work (and keeps failing dispatches until auto-eviction),
+    and ``close()`` with requests in flight joins every thread while
+    resolving every future.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lut_infer as LI
+from repro.core.nl_config import NeuraLUTConfig
+from repro.runtime.fault import ReplicaHealthTracker
+from repro.serve import LUTServeEngine, ServeBundle, TableRegistry
+from repro.serve.sharded import (DEFAULT_VMEM_BUDGET, make_sharded_forward_fn,
+                                 plan_shards)
+from repro.sharding import replica_mesh
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+# Same random-geometry builder as the cascade kernel tests: lookup
+# semantics do not depend on how the tables were produced.
+from test_lut_cascade import _random_net  # noqa: E402
+
+
+def _bundle(cfg=None, seed=0):
+    cfg = cfg or NeuraLUTConfig(
+        name="sh-tiny", in_features=7, layer_widths=(9, 5, 3),
+        num_classes=3, beta=3, fan_in=2, beta_in=4, fan_in_0=2)
+    tables, statics = _random_net(cfg, seed)
+    return ServeBundle(
+        cfg=cfg, tables=tables, statics=statics,
+        in_log_s=np.zeros(cfg.in_features, np.float32),
+        layer_log_s=[np.zeros(o, np.float32) for o in cfg.layer_widths])
+
+
+def _oracle_preds(bundle, x):
+    cfg, params = bundle.cfg, bundle.serve_params()
+    codes = LI.input_codes(cfg, params, jnp.asarray(x))
+    out = LI.lut_forward(cfg, bundle.tables, bundle.statics, codes)
+    return np.asarray(jnp.argmax(LI.class_values(cfg, params, out), -1))
+
+
+# ---------------------------------------------------------------------------
+# shard planning
+
+
+def test_replica_mesh_bounds():
+    n = len(jax.devices())
+    assert replica_mesh().devices.size == n
+    assert replica_mesh(1).devices.size == 1
+    with pytest.raises(ValueError):
+        replica_mesh(n + 1)
+    with pytest.raises(ValueError):
+        replica_mesh(0)
+
+
+def test_plan_auto_selects_layout_by_budget():
+    bundle = _bundle()
+    roomy = plan_shards(bundle, 2)
+    assert roomy.mode == "replicated"
+    assert roomy.vmem_budget_bytes == DEFAULT_VMEM_BUDGET
+    assert roomy.operand_bytes_per_device == roomy.operand_bytes_total
+    assert roomy.shift_mats is None  # replicated reuses bundle operands
+    tight = plan_shards(bundle, 2, vmem_budget_bytes=1)
+    assert tight.mode == "o_sharded"
+    assert tight.operand_bytes_per_device < tight.operand_bytes_total
+    with pytest.raises(ValueError):
+        plan_shards(bundle, 2, mode="diagonal")
+    with pytest.raises(ValueError):
+        plan_shards(bundle, 0)
+
+
+@pytest.mark.parametrize("r", [2, 4, 8])
+def test_padded_operands_divisible_and_inert(r):
+    """Padded neuron dims divide R, and running the *padded* operands
+    through the plain packed cascade still matches the oracle — padding
+    must be provably inert before shard_map ever splits it."""
+    from repro.kernels.ref import lut_cascade_packed_ref
+    bundle = _bundle()
+    cfg = bundle.cfg
+    plan = plan_shards(bundle, r, mode="o_sharded")
+    assert all(w % r == 0 for w in plan.pad_widths)
+    for i, (sm, pt) in enumerate(zip(plan.shift_mats, plan.packed_tables)):
+        assert sm.shape[1] == plan.pad_widths[i] == pt.shape[0]
+    codes = jnp.asarray(np.random.default_rng(2).integers(
+        0, 2 ** cfg.layer_in_bits(0), (11, cfg.in_features)), jnp.int32)
+    oracle = np.asarray(LI.lut_forward(cfg, bundle.tables, bundle.statics,
+                                       codes))
+    got = np.asarray(lut_cascade_packed_ref(
+        codes, [jnp.asarray(m) for m in plan.shift_mats],
+        [jnp.asarray(t) for t in plan.packed_tables],
+        cfg.beta))[:, :cfg.layer_widths[-1]]
+    assert (got == oracle).all()
+
+
+def test_bundle_plan_cache_and_replan():
+    bundle = _bundle()
+    p1 = bundle.plan_shards(2)
+    assert bundle.plan_shards(2) is p1           # cached
+    p2 = bundle.plan_shards(4)                   # geometry change: re-plan
+    assert p2 is not p1 and p2.num_replicas == 4
+    p3 = bundle.plan_shards(4, mode="o_sharded")
+    assert p3.mode == "o_sharded"
+
+
+def test_registry_load_plans_shards(tmp_path):
+    bundle = _bundle()
+    reg = TableRegistry(str(tmp_path))
+    reg.save("m", bundle)
+    loaded = reg.load("m", shard_replicas=2, shard_mode="o_sharded")
+    assert loaded.shard_plan is not None
+    assert loaded.shard_plan.mode == "o_sharded"
+    assert loaded.shard_plan.num_replicas == 2
+    assert reg.load("m").shard_plan is None      # opt-in only
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness on whatever devices exist (1 locally, 8 in the CI job)
+
+
+def test_o_sharded_refuses_explicit_kernel_request():
+    """The fused Pallas kernel has no inter-layer boundary for the
+    neuron-axis all_gather: an explicit use_kernel=True with an
+    o_sharded plan must fail loudly, never degrade silently."""
+    bundle = _bundle()
+    with pytest.raises(ValueError, match="o_sharded"):
+        make_sharded_forward_fn(bundle, mode="o_sharded", use_kernel=True)
+    # auto (None) and explicit False both legally take the jnp path
+    make_sharded_forward_fn(bundle, mode="o_sharded")
+
+
+@pytest.mark.parametrize("mode,use_kernel", [
+    ("replicated", False), ("replicated", True), ("o_sharded", False),
+])
+def test_sharded_forward_bit_exact(mode, use_kernel):
+    bundle = _bundle()
+    # 13 rows: exercises the non-divisible-batch padding on any mesh size
+    x = np.random.default_rng(3).normal(
+        0, 1, (13, bundle.cfg.in_features)).astype(np.float32)
+    ref = _oracle_preds(bundle, x)
+    fwd = make_sharded_forward_fn(bundle, mode=mode, use_kernel=use_kernel)
+    assert (np.asarray(fwd(jnp.asarray(x))) == ref).all()
+
+
+def test_engine_sharded_mode_bit_exact():
+    bundle = _bundle()
+    x = np.random.default_rng(4).normal(
+        0, 1, (40, bundle.cfg.in_features)).astype(np.float32)
+    ref = _oracle_preds(bundle, x)
+    with LUTServeEngine(bundle, use_kernel=False, sharded=True) as eng:
+        eng.warmup()
+        got = eng.predict(x)
+    assert (got == ref).all()
+    with pytest.raises(ValueError):
+        LUTServeEngine(bundle, sharded=True, replicas=2)
+
+
+# ---------------------------------------------------------------------------
+# replica routing + fault paths
+
+
+def test_replica_routing_bit_exact_and_spreads_load():
+    bundle = _bundle()
+    x = np.random.default_rng(5).normal(
+        0, 1, (48, bundle.cfg.in_features)).astype(np.float32)
+    ref = _oracle_preds(bundle, x)
+    with LUTServeEngine(bundle, use_kernel=False, replicas=3,
+                        buckets=(1, 8), max_wait_ms=0.5) as eng:
+        eng.warmup()
+        futs = [eng.submit(x[i]) for i in range(len(x))]
+        got = np.array([f.result()[0] for f in futs])
+    assert (got == ref).all()
+    assert eng.replicas == 3
+    per = [m.report()["batches"] for m in eng.replica_metrics]
+    # round-robin tie-breaking must not pin a single replica
+    assert sum(1 for b in per if b > 0) >= 2, per
+    # aggregate metrics see every request exactly once
+    assert eng.metrics.report()["requests"] == len(x)
+
+
+def test_evicted_replica_stops_receiving_batches():
+    """Evict the replica sticky routing favors (replica 0, the cursor's
+    start): every subsequent batch must flow to replica 1 and replica
+    0's batch count must freeze."""
+    bundle = _bundle()
+    x = np.random.default_rng(6).normal(
+        0, 1, (8, bundle.cfg.in_features)).astype(np.float32)
+    health = ReplicaHealthTracker(2)
+    with LUTServeEngine(bundle, use_kernel=False, replicas=2,
+                        health=health, buckets=(1, 8)) as eng:
+        eng.warmup()
+        eng.predict(x)
+        eng.predict(x)
+        frozen = eng.replica_metrics[0].report()["batches"]
+        assert frozen > 0  # sequential load sticks to replica 0
+        health.evict(0)
+        for _ in range(6):
+            assert (eng.predict(x) == _oracle_preds(bundle, x)).all()
+        assert eng.replica_metrics[0].report()["batches"] == frozen
+        assert eng.replica_metrics[1].report()["batches"] >= 6
+    assert health.healthy_ids() == [1]
+
+
+def test_failing_replica_auto_evicts_and_serving_recovers():
+    """Break replica 0 — the one sticky routing sends sequential load
+    to.  It fails exactly max_consecutive_failures dispatches, the
+    tracker evicts it (firing on_evict), and every later request is
+    absorbed by replica 1."""
+    bundle = _bundle()
+    x = np.random.default_rng(7).normal(
+        0, 1, (4, bundle.cfg.in_features)).astype(np.float32)
+    evicted = []
+    health = ReplicaHealthTracker(
+        2, max_consecutive_failures=2,
+        on_evict=lambda rid, exc: evicted.append((rid, str(exc))))
+    with LUTServeEngine(bundle, use_kernel=False, replicas=2,
+                        health=health, buckets=(4,)) as eng:
+        eng.warmup()
+
+        def boom(_):
+            raise RuntimeError("injected replica failure")
+
+        eng._executors[0]._forward = boom
+        failures = 0
+        for _ in range(12):
+            try:
+                got = eng.predict(x)
+                assert (got == _oracle_preds(bundle, x)).all()
+            except RuntimeError:
+                failures += 1
+        assert failures == 2, failures
+        assert not health.is_healthy(0)
+        assert evicted and evicted[0][0] == 0
+        assert "injected replica failure" in evicted[0][1]
+        for _ in range(4):
+            assert (eng.predict(x) == _oracle_preds(bundle, x)).all()
+
+
+def test_raising_on_evict_hook_never_strands_clients():
+    """A user on_evict hook that throws must not kill the replica worker
+    or leave futures pending: the failed batch's clients still get the
+    original error and serving recovers on the surviving replica."""
+    bundle = _bundle()
+    x = np.random.default_rng(9).normal(
+        0, 1, (4, bundle.cfg.in_features)).astype(np.float32)
+
+    def bad_hook(rid, exc):
+        raise ValueError("hook exploded")
+
+    health = ReplicaHealthTracker(2, max_consecutive_failures=1,
+                                  on_evict=bad_hook)
+    with LUTServeEngine(bundle, use_kernel=False, replicas=2,
+                        health=health, buckets=(4,)) as eng:
+        eng.warmup()
+
+        def boom(_):
+            raise RuntimeError("injected replica failure")
+
+        eng._executors[0]._forward = boom
+        with pytest.raises(RuntimeError, match="injected replica failure"):
+            eng.predict(x)
+        assert not health.is_healthy(0)
+        for _ in range(3):
+            assert (eng.predict(x) == _oracle_preds(bundle, x)).all()
+
+
+def test_all_replicas_unhealthy_fails_fast():
+    bundle = _bundle()
+    health = ReplicaHealthTracker(1)
+    health.evict(0)
+    eng = LUTServeEngine(bundle, use_kernel=False, health=health)
+    try:
+        with pytest.raises(RuntimeError, match="no healthy replicas"):
+            eng.predict(np.zeros((1, bundle.cfg.in_features), np.float32))
+    finally:
+        eng.close()
+
+
+def test_close_with_requests_in_flight_joins_cleanly():
+    bundle = _bundle()
+    x = np.random.default_rng(8).normal(
+        0, 1, (2, bundle.cfg.in_features)).astype(np.float32)
+    eng = LUTServeEngine(bundle, use_kernel=False, replicas=2,
+                         buckets=(1, 8), max_wait_ms=5.0)
+    eng.start()
+    eng.warmup()
+    futs = [eng.submit(x) for _ in range(50)]
+    eng.close()  # must join dispatcher + executors, never hang
+    assert eng._thread is None
+    assert all(ex._thread is None for ex in eng._executors)
+    served = failed = 0
+    for f in futs:
+        assert f.done()
+        if f.exception() is None:
+            assert f.result().shape == (2,)
+            served += 1
+        else:
+            assert isinstance(f.exception(), RuntimeError)
+            failed += 1
+    # every request resolved exactly one way; batches accepted by an
+    # executor before the stop sentinel were served, the rest failed
+    assert served + failed == 50
+    with pytest.raises(RuntimeError):
+        eng.submit(x)
+
+
+def test_health_tracker_unit():
+    evicted = []
+    t = ReplicaHealthTracker(3, max_consecutive_failures=2,
+                             on_evict=lambda r, e: evicted.append(r))
+    assert t.healthy_ids() == [0, 1, 2]
+    assert t.record_failure(0)            # 1 consecutive: still healthy
+    t.record_success(0)                   # resets the streak
+    assert t.record_failure(0)
+    assert not t.record_failure(0)        # 2 consecutive: evicted
+    assert evicted == [0]
+    assert t.healthy_ids() == [1, 2]
+    assert t.failure_counts() == [3, 0, 0]
+    t.revive(0)
+    assert t.is_healthy(0)
+    with pytest.raises(IndexError):
+        t.record_failure(3)
+    with pytest.raises(ValueError):
+        ReplicaHealthTracker(0)
+
+
+# ---------------------------------------------------------------------------
+# acceptance gate: forced 8-device host, every paper geometry
+# (subprocess so the main pytest process keeps its real device view —
+# same pattern as tests/test_distributed.py)
+
+
+def test_sharded_bit_exact_all_geometries_8_devices():
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import importlib
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import lut_infer as LI
+        from repro.serve import ServeBundle
+        from repro.serve.sharded import make_sharded_forward_fn
+        assert jax.device_count() == 8
+
+        def random_net(cfg, seed):
+            rng = np.random.default_rng(seed)
+            statics, tables = [], []
+            w_prev = cfg.in_features
+            for i, o in enumerate(cfg.layer_widths):
+                f = cfg.layer_fan_in(i)
+                statics.append({"conn": rng.integers(0, w_prev, (o, f))})
+                tables.append(rng.integers(0, 2 ** cfg.beta,
+                              (o, cfg.table_size(i))).astype(np.uint16))
+                w_prev = o
+            return tables, statics
+
+        for mod, var in [("neuralut_hdr_5l", "full"),
+                         ("neuralut_hdr_5l", "reduced"),
+                         ("neuralut_jsc_2l", "full"),
+                         ("neuralut_jsc_2l", "reduced"),
+                         ("neuralut_jsc_5l", "full"),
+                         ("neuralut_jsc_5l", "reduced")]:
+            cfg = getattr(importlib.import_module(
+                f"repro.configs.{mod}"), var)()
+            tables, statics = random_net(cfg, seed=len(cfg.name))
+            bundle = ServeBundle(
+                cfg=cfg, tables=tables, statics=statics,
+                in_log_s=np.zeros(cfg.in_features, np.float32),
+                layer_log_s=[np.zeros(o, np.float32)
+                             for o in cfg.layer_widths])
+            x = np.random.default_rng(5).normal(
+                0, 1, (21, cfg.in_features)).astype(np.float32)
+            params = bundle.serve_params()
+            codes = LI.input_codes(cfg, params, jnp.asarray(x))
+            out = LI.lut_forward(cfg, tables, statics, codes)
+            ref = np.asarray(jnp.argmax(
+                LI.class_values(cfg, params, out), -1))
+            for mode in ("replicated", "o_sharded"):
+                fwd = make_sharded_forward_fn(bundle, mode=mode)
+                got = np.asarray(fwd(jnp.asarray(x)))
+                assert (got == ref).all(), (cfg.name, mode)
+            print("OK", cfg.name, flush=True)
+        print("ALL-GEOMETRIES-OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=560, env=env)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "ALL-GEOMETRIES-OK" in out.stdout
