@@ -11,6 +11,13 @@ from typing import Callable, Dict, List
 
 RECORDS: List[Dict] = []
 
+# Perf suites whose summaries land in BENCH_kernels.json and are gated
+# by ``benchmarks/run.py --check`` (suite name -> JSON section key).
+# Single source of truth: run.py's gate, write_bench_summary's section
+# mapping, and its record-prefix merge are all derived from this.
+GATED_SUITES = {"kernel": "cascade", "train": "train",
+                "convert": "convert"}
+
 
 def time_call(fn: Callable, *, warmup: int = 2, iters: int = 10) -> float:
     """Median wall time per call in microseconds."""
@@ -31,19 +38,43 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
-def write_kernel_summary(cascade_summary: Dict) -> None:
-    """BENCH_kernels.json at the repo root: the kernel perf trajectory
-    (fused-cascade vs per-layer lookups/s, packed table footprint, plus
-    every kernel/* record of this run).  Shared by benchmarks/run.py and
-    ``python -m benchmarks.kernel_bench`` so both entry points write the
-    same schema; the summary's ``fast_mode`` flag marks reduced (CI
-    smoke) sweeps."""
+def write_bench_summary(summaries: Dict) -> None:
+    """BENCH_kernels.json at the repo root: the perf trajectory of the
+    kernel serving path ("cascade"), the scanned trainer ("train") and
+    the fused converter ("convert"), plus every kernel/train/convert
+    record of this run.
+
+    ``summaries`` maps suite name ("kernel" | "train" | "convert") to
+    that suite's summary dict; the kernel suite lands under the JSON key
+    "cascade" (the historical schema).  Sections NOT run this time are
+    preserved from the existing file, so a smoke ``--only kernel`` run
+    does not clobber the committed train/convert baselines.  Each
+    summary's ``fast_mode`` flag marks reduced (CI smoke) sweeps.
+    Shared by benchmarks/run.py and the per-suite ``python -m
+    benchmarks.<suite>_bench`` entry points."""
     import json
     from pathlib import Path
     out = Path(__file__).resolve().parent.parent / "BENCH_kernels.json"
-    payload = {
-        "cascade": cascade_summary,
-        "records": [r for r in RECORDS if r["name"].startswith("kernel/")],
-    }
+    payload: Dict = {}
+    if out.is_file():
+        try:
+            payload = json.loads(out.read_text())
+        except json.JSONDecodeError as e:
+            # Never silently reset a corrupt baseline: sections from
+            # suites not in this run would vanish and the next --check
+            # would fail far from the cause.
+            raise RuntimeError(
+                f"{out} exists but is not valid JSON ({e}); fix or "
+                f"delete it before writing fresh bench sections") from e
+    for suite, summary in summaries.items():
+        payload[GATED_SUITES.get(suite, suite)] = summary
+    prefixes = tuple(f"{s}/" for s in GATED_SUITES)
+    fresh = [r for r in RECORDS if r["name"].startswith(prefixes)]
+    if fresh:
+        fresh_pfx = {p for p in prefixes
+                     if any(r["name"].startswith(p) for r in fresh)}
+        kept = [r for r in payload.get("records", [])
+                if not r["name"].startswith(tuple(fresh_pfx))]
+        payload["records"] = kept + fresh
     out.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"# wrote {out}", flush=True)

@@ -188,5 +188,5 @@ def run(fast: bool = False) -> Optional[Dict]:
 
 
 if __name__ == "__main__":
-    from benchmarks.common import write_kernel_summary
-    write_kernel_summary(run())
+    from benchmarks.common import write_bench_summary
+    write_bench_summary({"kernel": run()})

@@ -1,17 +1,26 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
-"""Benchmark harness: one module per paper table/figure + kernel/LM benches.
+"""Benchmark harness: one module per paper table/figure + kernel/LM/train/
+convert benches.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME] [--check]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only A,B] [--check]
 
 Emits CSV lines ``name,us_per_call,derived`` (see benchmarks/common.py).
+``--only`` takes one suite or a comma-separated list.
 
-``--check`` is the CI perf-regression gate: after the kernel suite runs
-(use ``--fast --only kernel`` in CI), the fresh fused-cascade throughput
-is compared against the *committed* BENCH_kernels.json baseline — read
+``--check`` is the CI perf-regression gate: after the perf suites run
+(use ``--fast --only kernel,train,convert`` in CI), the fresh numbers
+are compared against the *committed* BENCH_kernels.json baseline — read
 before the run overwrites it — and the process exits non-zero if any
-common batch size regressed by more than ``--check-threshold`` (default
-25%).  A selected suite that raises also exits non-zero, so a red bench
-can never slip through as a green step with a partial JSON.
+gated metric regressed by more than ``--check-threshold`` (default 25%).
+Gated sections (each compared only when present in both baseline and
+fresh run):
+
+  * "cascade"  — fused LUT-cascade serving throughput per batch size;
+  * "train"    — scanned-trainer steps/s on the JSC-5L model;
+  * "convert"  — fused conversion entries/s per paper geometry.
+
+A selected suite that raises also exits non-zero, so a red bench can
+never slip through as a green step with a partial JSON.
 """
 from __future__ import annotations
 
@@ -23,41 +32,113 @@ import traceback
 from pathlib import Path
 from typing import Dict, List
 
+from benchmarks.common import GATED_SUITES as GATED
+
 BASELINE = Path(__file__).resolve().parent.parent / "BENCH_kernels.json"
+
+
+def _gate(problems: List[str], section: str, key: str, base: float,
+          new: float, threshold: float) -> None:
+    floor = (1.0 - threshold) * base
+    if new < floor:
+        problems.append(
+            f"{section} {key}: {new:.3e} is {(1 - new / base) * 100:.1f}% "
+            f"below baseline {base:.3e} (allowed {threshold * 100:.0f}%)")
+
+
+def _check_cascade(baseline: Dict, fresh: Dict, threshold: float,
+                   metric: str) -> List[str]:
+    """Per-batch-size gate on the fused cascade sweep.  Smoke runs sweep
+    a subset of the full baseline's batches, so only the intersection is
+    comparable.  ``metric="throughput"`` gates absolute
+    ``fused_lookups_per_s`` (meaningful when baseline and CI run on
+    comparable machines); ``metric="speedup"`` gates the fused-vs-
+    per-layer ratio, which is machine-relative and robust to runner
+    hardware differences."""
+    key = {"throughput": "fused_lookups_per_s",
+           "speedup": "speedup"}[metric]
+    problems: List[str] = []
+    base_rows = {r["batch"]: r for r in baseline.get("sweep", [])}
+    fresh_rows = {r["batch"]: r for r in fresh.get("sweep", [])}
+    common = sorted(set(base_rows) & set(fresh_rows))
+    if not common:
+        return [f"cascade: no common batch sizes between baseline "
+                f"{sorted(base_rows)} and fresh run {sorted(fresh_rows)}"]
+    for b in common:
+        _gate(problems, "cascade", f"batch {b} {metric}",
+              float(base_rows[b][key]), float(fresh_rows[b][key]),
+              threshold)
+    return problems
+
+
+def _check_train(baseline: Dict, fresh: Dict, threshold: float,
+                 metric: str) -> List[str]:
+    """Gate the scanned trainer: absolute steps/s, or the scanned-vs-
+    host-sync ratio in ``speedup`` mode."""
+    key = {"throughput": "scanned_steps_per_s", "speedup": "speedup"}[metric]
+    problems: List[str] = []
+    if key not in baseline or key not in fresh:
+        return [f"train: metric {key!r} missing from "
+                f"{'baseline' if key not in baseline else 'fresh run'}"]
+    _gate(problems, "train", key, float(baseline[key]), float(fresh[key]),
+          threshold)
+    return problems
+
+
+def _check_convert(baseline: Dict, fresh: Dict, threshold: float,
+                   metric: str) -> List[str]:
+    """Per-geometry gate on fused conversion throughput (or the fused-
+    vs-legacy speedup in ``speedup`` mode); smoke runs convert a subset
+    of the geometries, so only the intersection is comparable.  Rows
+    flagged ``gate: false`` (sub-millisecond tiny geometries, pure
+    dispatch noise) are recorded but not compared."""
+    key = {"throughput": "entries_per_s", "speedup": "speedup"}[metric]
+    problems: List[str] = []
+    base_rows = baseline.get("geometries", {})
+    fresh_rows = fresh.get("geometries", {})
+    common = sorted(set(base_rows) & set(fresh_rows))
+    if not common:
+        return [f"convert: no common geometries between baseline "
+                f"{sorted(base_rows)} and fresh run {sorted(fresh_rows)}"]
+    gated = [g for g in common
+             if base_rows[g].get("gate", True)
+             and fresh_rows[g].get("gate", True)]
+    if not gated:
+        return [f"convert: no gate-eligible geometries among {common}"]
+    for g in gated:
+        _gate(problems, "convert", f"{g} {metric}",
+              float(base_rows[g][key]), float(fresh_rows[g][key]),
+              threshold)
+    return problems
 
 
 def check_regression(baseline: Dict, fresh: Dict, threshold: float,
                      metric: str = "throughput") -> List[str]:
-    """Compare the fresh cascade summary against the committed baseline.
+    """Compare a fresh run's summaries against the committed baseline.
 
-    Gates the fused cascade (the serving fast path) per batch size
-    present in both sweeps — smoke runs sweep a subset of the full
-    baseline's batches, so only the intersection is comparable.
-    ``metric="throughput"`` gates absolute ``fused_lookups_per_s``
-    (meaningful when baseline and CI run on comparable machines);
-    ``metric="speedup"`` gates the fused-vs-per-layer ratio, which is
-    machine-relative and robust to runner hardware differences.
-    Returns human-readable problem strings (empty = pass).
+    ``baseline`` is the committed BENCH_kernels.json payload; ``fresh``
+    maps JSON section keys ("cascade" / "train" / "convert") to the
+    summaries produced this run.  Sections absent on either side are
+    skipped; if NO section is comparable the check fails (a gate that
+    gates nothing is a misconfiguration, not a pass).  Neither metric
+    mode is fully machine-independent: refresh the baseline when CI
+    hardware changes.  Returns human-readable problem strings (empty =
+    pass).
     """
-    key = {"throughput": "fused_lookups_per_s",
-           "speedup": "speedup"}[metric]
+    checkers = {"cascade": _check_cascade, "train": _check_train,
+                "convert": _check_convert}
     problems: List[str] = []
-    base_rows = {r["batch"]: r
-                 for r in baseline.get("cascade", {}).get("sweep", [])}
-    fresh_rows = {r["batch"]: r for r in fresh.get("sweep", [])}
-    common = sorted(set(base_rows) & set(fresh_rows))
-    if not common:
-        return [f"no common batch sizes between baseline "
-                f"{sorted(base_rows)} and fresh run {sorted(fresh_rows)}"]
-    for b in common:
-        base = float(base_rows[b][key])
-        new = float(fresh_rows[b][key])
-        floor = (1.0 - threshold) * base
-        if new < floor:
-            problems.append(
-                f"batch {b}: fused cascade {metric} {new:.3e} is "
-                f"{(1 - new / base) * 100:.1f}% below baseline "
-                f"{base:.3e} (allowed {threshold * 100:.0f}%)")
+    compared = 0
+    for section, checker in checkers.items():
+        if section in fresh and section in baseline:
+            compared += 1
+            problems += checker(baseline[section], fresh[section],
+                                threshold, metric)
+    if not compared:
+        problems.append(
+            f"nothing to compare: baseline has "
+            f"{sorted(set(baseline) & set(checkers))}, fresh run produced "
+            f"{sorted(set(fresh) & set(checkers))}")
     return problems
 
 
@@ -65,9 +146,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="fewer epochs/seeds (CI mode)")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="run only these suites (comma-separated)")
     ap.add_argument("--check", action="store_true",
-                    help="gate the fresh kernel numbers against the "
+                    help="gate the fresh perf numbers against the "
                          "committed BENCH_kernels.json baseline")
     ap.add_argument("--baseline", default=str(BASELINE),
                     help="baseline JSON for --check")
@@ -75,15 +157,14 @@ def main() -> None:
                     help="max allowed fractional regression")
     ap.add_argument("--check-metric", default="throughput",
                     choices=["throughput", "speedup"],
-                    help="gate absolute fused throughput, or the "
-                         "fused-vs-per-layer speedup ratio (neither is "
-                         "fully machine-independent: refresh the "
-                         "baseline when CI hardware changes)")
+                    help="gate absolute throughputs, or the machine-"
+                         "relative speedup ratios")
     args = ap.parse_args()
 
-    from benchmarks import (fig3_boundaries, fig5_ablation, fig6_7_pareto,
-                            kernel_bench, lm_step_bench, serve_bench,
-                            table1_params, table3_eval)
+    from benchmarks import (convert_bench, fig3_boundaries, fig5_ablation,
+                            fig6_7_pareto, kernel_bench, lm_step_bench,
+                            serve_bench, table1_params, table3_eval,
+                            train_bench)
 
     suites = {
         "table1": lambda: table1_params.run(),
@@ -93,18 +174,24 @@ def main() -> None:
             n_train=3000 if args.fast else 6000),
         "fig6_7": lambda: fig6_7_pareto.run(
             epochs=4 if args.fast else 10,
-            n_train=3000 if args.fast else 6000),
+            n_train=3000 if args.fast else 6000,
+            seeds=2 if args.fast else 3),
         "table3": lambda: table3_eval.run(fast=args.fast),
         "kernel": lambda: kernel_bench.run(fast=args.fast),
+        "train": lambda: train_bench.run(fast=args.fast),
+        "convert": lambda: convert_bench.run(fast=args.fast),
         "lm_step": lambda: lm_step_bench.run(),
         "serve": lambda: serve_bench.run(reduced=args.fast),
     }
-    if args.only is not None and args.only not in suites:
-        sys.exit(f"unknown suite {args.only!r}; choose from "
+    selected = list(suites) if args.only is None else [
+        s.strip() for s in args.only.split(",") if s.strip()]
+    unknown = [s for s in selected if s not in suites]
+    if unknown:
+        sys.exit(f"unknown suite(s) {unknown}; choose from "
                  f"{sorted(suites)}")
-    if args.check and args.only not in (None, "kernel"):
-        sys.exit("--check gates the kernel suite; drop --only or use "
-                 "--only kernel")
+    if args.check and not any(s in GATED for s in selected):
+        sys.exit("--check gates the kernel/train/convert suites; select "
+                 "at least one of them (or drop --only)")
 
     # Read the committed baseline BEFORE the run overwrites it.
     baseline = None
@@ -116,17 +203,13 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failed = []
-    cascade_summary = None
-    for name, fn in suites.items():
-        if args.only and name != args.only:
-            continue
+    summaries: Dict[str, Dict] = {}
+    for name in selected:
         t0 = time.time()
         try:
-            result = fn()
-            if name == "kernel" and result:
-                cascade_summary = result
-                from benchmarks.common import write_kernel_summary
-                write_kernel_summary(result)
+            result = suites[name]()
+            if name in GATED and result:
+                summaries[name] = result
             print(f"# suite {name} done in {time.time()-t0:.0f}s",
                   flush=True)
         except Exception:
@@ -134,13 +217,20 @@ def main() -> None:
             print(f"# suite {name} FAILED:", flush=True)
             traceback.print_exc()
     if failed:
-        print(f"# failed suites: {failed}", file=sys.stderr, flush=True)
+        # Never update BENCH_kernels.json from a red run: a failed
+        # suite's partially-emitted records would clobber the committed
+        # full record set for its prefix.
+        print(f"# failed suites: {failed} (baseline JSON left untouched)",
+              file=sys.stderr, flush=True)
         sys.exit(1)
+    if summaries:
+        from benchmarks.common import write_bench_summary
+        write_bench_summary(summaries)
     if args.check:
-        if cascade_summary is None:
-            sys.exit("--check: kernel suite did not run or produced no "
-                     "cascade summary")
-        problems = check_regression(baseline, cascade_summary,
+        fresh = {GATED[s]: summary for s, summary in summaries.items()}
+        if not fresh:
+            sys.exit("--check: no gated suite produced a summary")
+        problems = check_regression(baseline, fresh,
                                     args.check_threshold,
                                     metric=args.check_metric)
         if problems:

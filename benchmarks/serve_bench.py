@@ -49,9 +49,9 @@ def _train_bundle(arch: str, *, reduced: bool, epochs: int, registry_dir: str):
     params, state, hist = train_neuralut(
         cfg, xtr, ytr, xte, yte, epochs=epochs, batch=256, lr=2e-3)
     statics = M.model_static(cfg)
-    tables = TT.convert(cfg, params, state, statics)
+    tables, packed = TT.convert_packed(cfg, params, state, statics)
     bundle = bundle_from_training(
-        cfg, params, tables, statics,
+        cfg, params, tables, statics, packed_tables=packed,
         meta={"train_acc_q": float(hist["test_acc_q"][-1])})
     reg = TableRegistry(registry_dir)
     reg.save(cfg.name, bundle)

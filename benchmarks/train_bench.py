@@ -1,0 +1,209 @@
+"""Train-throughput benchmark: per-step host-sync loop vs the scanned
+device-resident trainer (core/train.py), on the paper's JSC-5L model.
+
+``_host_sync_loop`` vendors the pre-refactor training loop verbatim in
+behaviour: one jitted dispatch per minibatch, a ``float(loss)`` host
+sync every step, numpy permutation indexing + a fresh H2D transfer per
+batch, and the canonical (B, O, F) einsum layout in the forward pass.
+The scanned trainer runs the whole epoch as one compiled scan with the
+data device-resident and the subnet in the fast neuron-leading layout.
+The steps/s ratio is the headline "train" entry of BENCH_kernels.json,
+gated by ``benchmarks/run.py --check`` (acceptance: >= 3x on this
+container).
+
+The ensemble row measures the vmapped multi-seed sweep in aggregate
+model-steps/s — the Pareto/multi-restart scenario the trainer exists
+for (train S candidate networks in one compiled computation).
+
+    PYTHONPATH=src python -m benchmarks.train_bench
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+import time
+from typing import Dict
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import model as M
+from repro.core import quant, subnet
+from repro.core.train import _make_epoch_fn, _make_step_fn
+from repro.data import jsc_synthetic
+from repro.optim import adamw_init, adamw_update, sgdr_schedule
+
+BATCH = 256
+N_TRAIN = 4096
+
+
+def _legacy_model_apply(cfg, params, state, statics, x):
+    """Pre-refactor training forward: canonical einsum layout."""
+    beta_in = cfg.beta_in or cfg.beta
+    v = quant.quant_apply(params["in_quant"], x, beta_in)
+    new_states = []
+    pre = None
+    for i in range(cfg.num_layers):
+        conn = jnp.asarray(statics[i]["conn"])
+        f = subnet.apply_hidden(cfg.kind, params["layers"][i]["fn"],
+                                v[:, conn], skip=cfg.skip,
+                                exps=statics[i].get("exps"),
+                                batch_leading=False)
+        pre, nbn = quant.bn_apply(params["layers"][i]["bn"],
+                                  state["layers"][i]["bn"], f, train=True,
+                                  momentum=cfg.bn_momentum)
+        v = quant.quant_apply(params["layers"][i]["quant"], pre, cfg.beta)
+        new_states.append({"bn": nbn})
+    return pre, {"layers": new_states}
+
+
+def _make_host_sync_epoch(cfg, statics, *, epochs: int, lr: float = 2e-3):
+    """The old train_neuralut inner loop, as a run-one-epoch closure."""
+
+    @jax.jit
+    def step_fn(params, state, opt, xb, yb):
+        def loss_fn(p):
+            logits, new_state = _legacy_model_apply(cfg, p, state, statics,
+                                                    xb)
+            return M.ce_loss(logits, yb), new_state
+
+        (loss, new_state), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        lr_t = sgdr_schedule(opt["count"], lr_max=lr, lr_min=lr * 1e-2,
+                             t0=epochs * (N_TRAIN // BATCH), t_mult=2)
+        params, opt = adamw_update(grads, opt, params, lr=lr_t,
+                                   weight_decay=1e-4, grad_clip=1.0)
+        return params, new_state, opt, loss
+
+    rng = np.random.default_rng(0)
+
+    def run_epoch(carry, x, y):
+        params, state, opt = carry
+        n = x.shape[0]
+        perm = rng.permutation(n)
+        for s in range(n // BATCH):
+            idx = perm[s * BATCH:(s + 1) * BATCH]
+            params, state, opt, loss = step_fn(
+                params, state, opt, jnp.asarray(x[idx]),
+                jnp.asarray(y[idx]))
+            float(loss)  # the per-step host sync being measured
+        return (params, state, opt)
+
+    return run_epoch
+
+
+def _measure_paired(cfg, statics, params, state, opt, x, y, *,
+                    epochs: int, lr: float = 2e-3):
+    """(host steps/s, scanned steps/s) from INTERLEAVED epoch timings.
+
+    Each round times one host-sync epoch then one scanned epoch
+    back-to-back, so machine load hits both paths alike and the
+    recorded speedup ratio stays meaningful on a noisy runner (the
+    --check-metric speedup CI gate rides on it).
+    """
+    n = x.shape[0]
+    spe = n // BATCH
+    host_epoch = _make_host_sync_epoch(cfg, statics, epochs=epochs, lr=lr)
+    step = _make_step_fn(cfg, statics, lr=lr, weight_decay=1e-4,
+                         t0=epochs * spe)
+    epoch_fn = _make_epoch_fn(step, n, spe, BATCH)
+    xd, yd = jnp.asarray(x), jnp.asarray(y)
+    key = jax.random.PRNGKey(0)
+
+    h_carry = (params, state, opt)
+    s_carry = (params, state, opt)
+    # warmup both (compile + steady state)
+    h_carry = host_epoch(h_carry, x, y)
+    out = epoch_fn(*s_carry, key, xd, yd)
+    jax.block_until_ready(out)
+    s_carry = out[:3]
+
+    host_ts, scan_ts = [], []
+    for ep in range(epochs):
+        t0 = time.perf_counter()
+        h_carry = host_epoch(h_carry, x, y)
+        host_ts.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        out = epoch_fn(*s_carry, jax.random.fold_in(key, ep), xd, yd)
+        jax.block_until_ready(out)
+        s_carry = out[:3]
+        scan_ts.append(time.perf_counter() - t0)
+    return spe / min(host_ts), spe / min(scan_ts)
+
+
+def _ensemble_sweep(cfg, statics, x, y, *, seeds: int, epochs: int,
+                    lr: float = 2e-3) -> float:
+    """Aggregate model-steps/s of the vmapped multi-seed sweep (warm
+    compiled epochs, the steady state a Pareto run spends its time in)."""
+    from repro.core.train import (_make_ensemble_epoch_fn, init_ensemble)
+    n = x.shape[0]
+    spe = n // BATCH
+    step = _make_step_fn(cfg, statics, lr=lr, weight_decay=1e-4,
+                         t0=epochs * spe)
+    epoch_fn = _make_ensemble_epoch_fn(step, n, spe, BATCH)
+    params, state, opt, keys = init_ensemble(cfg, tuple(range(seeds)), x)
+    xd, yd = jnp.asarray(x), jnp.asarray(y)
+
+    def one_epoch(params, state, opt, ep):
+        ekeys = jax.vmap(lambda k: jax.random.fold_in(k, ep))(keys)
+        out = epoch_fn(params, state, opt, ekeys, xd, yd)
+        jax.block_until_ready(out)
+        return out[:3]
+
+    params, state, opt = one_epoch(params, state, opt, 0)  # compile
+    times = []
+    for ep in range(epochs):
+        t0 = time.perf_counter()
+        params, state, opt = one_epoch(params, state, opt, ep + 1)
+        times.append(time.perf_counter() - t0)
+    return seeds * spe / min(times)
+
+
+def run(fast: bool = False) -> Dict:
+    from repro.configs.neuralut_jsc_5l import full
+    cfg = full()
+    statics = M.model_static(cfg)
+    x, y = jsc_synthetic(N_TRAIN, seed=0)
+    params, state = M.model_init(cfg, jax.random.PRNGKey(0))
+    params = M.calibrate_in_quant(cfg, params, x)
+    opt = adamw_init(params)
+    # min-of-N interleaved timed epochs: N >= 2 even in smoke mode so
+    # one noisy epoch on a busy runner cannot trip the CI gate.
+    epochs = 2 if fast else 4
+
+    host_sps, scan_sps = _measure_paired(cfg, statics, params, state,
+                                         opt, x, y, epochs=epochs)
+    emit("train/host_sync_loop", 1e6 / host_sps,
+         f"steps_per_s={host_sps:.1f};batch={BATCH}")
+    speedup = scan_sps / host_sps
+    emit("train/scanned_epoch", 1e6 / scan_sps,
+         f"steps_per_s={scan_sps:.1f};speedup={speedup:.2f}x")
+
+    seeds = 2 if fast else 4
+    ens_sps = _ensemble_sweep(cfg, statics, x, y, seeds=seeds,
+                              epochs=epochs)
+    emit("train/ensemble_sweep", 1e6 / ens_sps,
+         f"model_steps_per_s={ens_sps:.1f};seeds={seeds};"
+         f"vs_host={ens_sps / host_sps:.2f}x")
+
+    return {
+        "config": cfg.name,
+        "fast_mode": fast,
+        "batch": BATCH,
+        "steps_per_epoch": N_TRAIN // BATCH,
+        "host_sync_steps_per_s": host_sps,
+        "scanned_steps_per_s": scan_sps,
+        "speedup": speedup,
+        "ensemble_seeds": seeds,
+        "ensemble_model_steps_per_s": ens_sps,
+    }
+
+
+if __name__ == "__main__":
+    from benchmarks.common import write_bench_summary
+    write_bench_summary({"train": run()})

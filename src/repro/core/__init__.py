@@ -7,9 +7,10 @@ of the generated hardware.
 from .nl_config import NeuraLUTConfig
 from . import cost_model, lut_infer, model, quant, rtl, sparsity, subnet
 from . import truth_table
-from .train import train_neuralut
+from .train import ensemble_member, train_neuralut, train_neuralut_ensemble
 
 __all__ = [
-    "NeuraLUTConfig", "cost_model", "lut_infer", "model", "quant", "rtl",
-    "sparsity", "subnet", "truth_table", "train_neuralut",
+    "NeuraLUTConfig", "cost_model", "ensemble_member", "lut_infer", "model",
+    "quant", "rtl", "sparsity", "subnet", "truth_table", "train_neuralut",
+    "train_neuralut_ensemble",
 ]

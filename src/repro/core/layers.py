@@ -57,13 +57,13 @@ def layer_apply(cfg: NeuraLUTConfig, idx: int, p: Params, state: Params,
     new_state)."""
     conn = jnp.asarray(static["conn"])  # (O, F)
     xg = x[:, conn]  # (B, O, F) sparse gather
-    if cfg.kind == "linear":
-        f = subnet.linear_apply(p["fn"], xg)
-    elif cfg.kind == "poly":
-        f = subnet.poly_apply(p["fn"], xg, static["exps"])
-    else:
-        f = subnet.subnet_apply(p["fn"], xg, cfg.skip,
-                                grouped_matmul=grouped_matmul)
+    # Training steps run the subnet in the fast neuron-leading layout;
+    # eval keeps the canonical einsum the truth tables are defined
+    # against (bit-exact vs core/truth_table.py — see subnet_apply).
+    f = subnet.apply_hidden(cfg.kind, p["fn"], xg, skip=cfg.skip,
+                            exps=static.get("exps"),
+                            grouped_matmul=grouped_matmul,
+                            batch_leading=train)
     pre, new_bn = quant.bn_apply(p["bn"], state["bn"], f, train=train,
                                  momentum=cfg.bn_momentum)
     beta_out = cfg.beta  # outputs always use the model-wide beta

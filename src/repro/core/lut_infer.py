@@ -77,6 +77,28 @@ def pack_tables(table: np.ndarray, beta: int) -> np.ndarray:
     return words.view(np.int32)
 
 
+def pack_tables_jnp(table: jax.Array, beta: int) -> jax.Array:
+    """Device-side twin of :func:`pack_tables`: (O, T) codes -> (O, T//P)
+    int32 words, bit-identical to the numpy packer.
+
+    Runs inside the fused truth-table sweep (core/truth_table.py) so
+    freshly converted bundles come off the device already bit-packed and
+    ``ServeBundle.prepack`` has nothing left to do.  The OR-accumulation
+    is a small unrolled loop over the P slots (P <= 16); the uint32 ->
+    int32 reinterpret is a bitcast, not a value conversion.
+    """
+    p = packed_slots(beta)
+    o, n = table.shape
+    if n % p:
+        raise ValueError(f"table size {n} not a multiple of P={p} "
+                         f"(beta={beta})")
+    grouped = table.astype(jnp.uint32).reshape(o, n // p, p)
+    words = grouped[..., 0]
+    for j in range(1, p):
+        words = words | (grouped[..., j] << jnp.uint32(beta * j))
+    return jax.lax.bitcast_convert_type(words, jnp.int32)
+
+
 def unpack_tables(packed: np.ndarray, beta: int, *,
                   table_size: Optional[int] = None) -> np.ndarray:
     """Inverse of ``pack_tables``: (O, Tw) int32 -> (O, Tw * P) uint16."""

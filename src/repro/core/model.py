@@ -13,6 +13,7 @@ from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import layers as L
 from repro.core import quant
@@ -63,6 +64,20 @@ def model_init(cfg: NeuraLUTConfig, key) -> Tuple[Params, Params]:
     for ls_ in state["layers"]:
         ls_["bn"]["var"] = jnp.ones_like(ls_["bn"]["var"])
     return params, state
+
+
+def calibrate_in_quant(cfg: NeuraLUTConfig, params: Params,
+                       x_train) -> Params:
+    """Calibrate the input quantizer on the data: +-2.5 sigma per feature
+    spans the signed code range (learned scales then fine-tune from
+    here).  Returns ``params`` with ``in_quant.log_s`` replaced."""
+    beta_in = cfg.beta_in or cfg.beta
+    max_code = 2 ** (beta_in - 1)
+    std = np.maximum(np.asarray(x_train).std(axis=0), 1e-3)
+    params = dict(params)
+    params["in_quant"] = {"log_s": jnp.asarray(
+        np.log(2.5 * std / max_code), jnp.float32)}
+    return params
 
 
 def model_apply(cfg: NeuraLUTConfig, params: Params, state: Params,

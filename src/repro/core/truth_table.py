@@ -1,21 +1,42 @@
-"""Sub-network -> L-LUT conversion (paper §III-E.2).
+"""Sub-network -> L-LUT conversion (paper §III-E.2) as a fused,
+device-resident enumeration sweep.
 
 For every circuit layer we enumerate all 2^{beta_in * F} input code
 combinations, dequantize each code *with the source channel's learned
-scale*, evaluate the hidden function exactly as the quantized forward pass
-does (same jitted ops), and quantize the outputs back to codes.  The result
-is one (out_width, 2^{beta*F}) uint table per layer — the entire network
-becomes a cascade of lookups (see lut_infer / rtl).
+scale*, evaluate the hidden function exactly as the quantized forward
+pass does (same ops — the bit-exactness invariant), and quantize the
+outputs back to codes.  The result is one (out_width, 2^{beta*F}) uint
+table per layer — the entire network becomes a cascade of lookups (see
+lut_infer / rtl).
+
+The sweep is ONE jitted computation per layer: codes are enumerated on
+device from an iota (nothing is staged from the host), a ``lax.map``
+walks fixed-size chunks bounding peak memory, and the resulting table is
+bit-packed on device (``lut_infer.pack_tables_jnp``) so a freshly
+converted model is already in the serving fast-path format —
+``ServeBundle.prepack`` has nothing left to pack.  Compiled sweeps are
+cached by their static geometry ``(kind, skip/degree, beta_in, beta, F,
+T, chunk)`` (plus operand shapes, via jit), so consecutive layers with
+the same shape share one executable and converting a second model of
+the same family costs zero recompiles — the per-layer ``@jax.jit`` of
+the old converter is gone.  ``convert_cache_stats`` exposes compile
+counts for tests and profiling.
+
+On TPU the hidden subnet can additionally route through the fused
+Pallas kernel (``kernels.ops.subnet_kernel_apply``); the jnp einsum
+path is the oracle and remains the default off-TPU so converted tables
+stay bit-identical to the quantized eval forward pass.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import quant
+from repro.core import quant, subnet
+from repro.core.lut_infer import pack_tables_jnp, packed_slots
 from repro.core.nl_config import NeuraLUTConfig
 
 Params = Dict
@@ -41,64 +62,183 @@ def _input_scales(cfg: NeuraLUTConfig, params: Params, layer_idx: int
     return jnp.exp(params["layers"][layer_idx - 1]["quant"]["log_s"])
 
 
-def layer_truth_table(cfg: NeuraLUTConfig, params: Params, state: Params,
-                      statics: List[Dict], layer_idx: int, *,
-                      batch: int = 4096) -> np.ndarray:
-    """uint16 (out_width, 2^{beta_in*F}) output codes for one layer."""
+# ---------------------------------------------------------------------------
+# Fused sweep: one cached jitted function per static geometry
+
+
+_SWEEP_CACHE: Dict[Tuple, object] = {}
+
+
+def _make_sweep(kind: str, skip: int, degree: int, beta_in: int, beta: int,
+                fan_in: int, table_size: int, chunk: int, pack: bool,
+                use_kernel: bool, grouped_matmul):
+    """Build the jitted enumeration sweep for one layer geometry.
+
+    The returned function maps (slot_scale (O, F), fn_params, bn_params,
+    bn_state, quant_params) -> ((O, T) uint16 table, (O, T//P) int32
+    packed words or None).  All enumeration happens on device.
+    """
+    offs = 2 ** (beta_in - 1)
+    mask = 2 ** beta_in - 1
+    nchunks = table_size // chunk
+    shifts = jnp.asarray([beta_in * (fan_in - 1 - j)
+                          for j in range(fan_in)], jnp.int32)
+    exps = (subnet.monomial_exponents(fan_in, degree)
+            if kind == "poly" else None)
+
+    def eval_chunk(start, slot_scale, fnp, bn_p, bn_s, quant_p):
+        idx = start * chunk + jax.lax.iota(jnp.int32, chunk)
+        codes = (idx[:, None] >> shifts[None, :]) & mask  # (chunk, F)
+        # (chunk, O, F) dequantized values: scale of the SOURCE channel.
+        vals = (codes[:, None, :].astype(jnp.float32) - offs) \
+            * slot_scale[None]
+        if kind == "subnet" and use_kernel:
+            from repro.kernels.ops import subnet_kernel_apply
+            f = subnet_kernel_apply(fnp, vals, skip)
+        else:
+            f = subnet.apply_hidden(kind, fnp, vals, skip=skip, exps=exps,
+                                    grouped_matmul=grouped_matmul)
+        pre, _ = quant.bn_apply(bn_p, bn_s, f, train=False)
+        return quant.quant_codes(quant_p, pre, beta)  # (chunk, O) int32
+
+    def sweep(slot_scale, fnp, bn_p, bn_s, quant_p):
+        if nchunks == 1:
+            out = eval_chunk(jnp.int32(0), slot_scale, fnp, bn_p, bn_s,
+                             quant_p)  # (T, O)
+        else:
+            out = jax.lax.map(
+                lambda s: eval_chunk(s, slot_scale, fnp, bn_p, bn_s,
+                                     quant_p),
+                jnp.arange(nchunks, dtype=jnp.int32))
+            out = out.reshape(table_size, -1)
+        table = out.T.astype(jnp.uint16)  # (O, T)
+        packed = pack_tables_jnp(table, beta) if pack else None
+        return table, packed
+
+    return jax.jit(sweep)
+
+
+def _get_sweep(cfg: NeuraLUTConfig, layer_idx: int, chunk: int,
+               use_kernel: bool, grouped_matmul):
     beta_in = cfg.layer_in_bits(layer_idx)
-    F = cfg.layer_fan_in(layer_idx)
-    if beta_in * F > 20:
+    fan_in = cfg.layer_fan_in(layer_idx)
+    t = cfg.table_size(layer_idx)
+    pack = t % packed_slots(cfg.beta) == 0
+    key = (cfg.kind,
+           cfg.skip if cfg.kind == "subnet" else 0,
+           cfg.degree if cfg.kind == "poly" else 0,
+           beta_in, cfg.beta, fan_in, t, chunk, pack, use_kernel,
+           id(grouped_matmul) if grouped_matmul is not None else None)
+    fn = _SWEEP_CACHE.get(key)
+    if fn is None:
+        fn = _make_sweep(*key[:10], grouped_matmul)
+        _SWEEP_CACHE[key] = fn
+    return fn
+
+
+def convert_cache_stats() -> Dict[Tuple, int]:
+    """{static sweep key: number of compiled executables} — one entry per
+    distinct layer geometry seen this process, one compile per distinct
+    operand-shape signature under it.  Tests assert consecutive layers
+    sharing a geometry reuse a single compile."""
+    return {k: fn._cache_size() for k, fn in _SWEEP_CACHE.items()}
+
+
+def clear_convert_cache() -> None:
+    _SWEEP_CACHE.clear()
+
+
+def _chunk_for(table_size: int, batch: int) -> int:
+    """Largest power of two <= min(batch, T); T is a power of two, so the
+    chunk always divides it exactly (no ragged tail on device)."""
+    chunk = 1
+    while chunk * 2 <= min(batch, table_size):
+        chunk *= 2
+    return chunk
+
+
+def _guard_size(cfg: NeuraLUTConfig, layer_idx: int) -> None:
+    beta_in = cfg.layer_in_bits(layer_idx)
+    fan_in = cfg.layer_fan_in(layer_idx)
+    if beta_in * fan_in > 20:
         raise ValueError(
             f"layer {layer_idx}: truth table would have "
-            f"2^{beta_in * F} entries (beta_in={beta_in} x fan_in={F} "
-            f"> 20 address bits); reduce beta/fan-in instead of "
-            f"enumerating it")
+            f"2^{beta_in * fan_in} entries (beta_in={beta_in} x "
+            f"fan_in={fan_in} > 20 address bits); reduce beta/fan-in "
+            f"instead of enumerating it")
+
+
+def _layer_sweep(cfg: NeuraLUTConfig, params: Params, state: Params,
+                 statics: List[Dict], layer_idx: int, *, batch: int,
+                 use_kernel: bool, grouped_matmul
+                 ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+    """One layer's fused sweep -> ((O, T) uint16, packed int32 | None)."""
+    _guard_size(cfg, layer_idx)
+    t = cfg.table_size(layer_idx)
+    chunk = _chunk_for(t, batch)
+    fn = _get_sweep(cfg, layer_idx, chunk, use_kernel, grouped_matmul)
     conn = statics[layer_idx]["conn"]  # (O, F)
-    out_width = conn.shape[0]
-    codes = enumerate_codes(beta_in, F)  # (T, F)
-    t = codes.shape[0]
-
-    src_scales = _input_scales(cfg, params, layer_idx)  # (in_width,)
-    offs = 2 ** (beta_in - 1)
-    # values per (neuron, slot, code): scale of the SOURCE channel
+    src_scales = _input_scales(cfg, params, layer_idx)
     slot_scale = jnp.asarray(src_scales)[jnp.asarray(conn)]  # (O, F)
-
     lp = params["layers"][layer_idx]
-    ls = state["layers"][layer_idx]
+    table, packed = fn(slot_scale, lp["fn"], lp["bn"],
+                       state["layers"][layer_idx]["bn"], lp["quant"])
+    return (np.asarray(table),
+            None if packed is None else np.asarray(packed))
 
-    @jax.jit
-    def eval_chunk(code_chunk):
-        # (Bc, F) codes -> (Bc, O, F) dequantized values
-        vals = (code_chunk[:, None, :].astype(jnp.float32) - offs) \
-            * slot_scale[None]
-        from repro.core import subnet
-        if cfg.kind == "linear":
-            f = subnet.linear_apply(lp["fn"], vals)
-        elif cfg.kind == "poly":
-            f = subnet.poly_apply(lp["fn"], vals, statics[layer_idx]["exps"])
-        else:
-            f = subnet.subnet_apply(lp["fn"], vals, cfg.skip)
-        pre, _ = quant.bn_apply(lp["bn"], ls["bn"], f, train=False,
-                                momentum=cfg.bn_momentum)
-        return quant.quant_codes(lp["quant"], pre, cfg.beta)
 
-    # Pad the ragged final chunk up to ``batch`` and slice the result, so
-    # eval_chunk only ever sees one shape and jits exactly once per layer.
-    batch = min(batch, t)
-    outs = []
-    for s in range(0, t, batch):
-        chunk = codes[s:s + batch]
-        n = chunk.shape[0]
-        if n < batch:
-            chunk = np.concatenate(
-                [chunk, np.zeros((batch - n, F), chunk.dtype)], axis=0)
-        outs.append(np.asarray(eval_chunk(jnp.asarray(chunk)))[:n])
-    table = np.concatenate(outs, axis=0).T  # (O, T)
+def _resolve_kernel(use_subnet_kernel: Optional[bool]) -> bool:
+    if use_subnet_kernel is None:
+        return jax.default_backend() == "tpu"
+    return use_subnet_kernel
+
+
+def layer_truth_table(cfg: NeuraLUTConfig, params: Params, state: Params,
+                      statics: List[Dict], layer_idx: int, *,
+                      batch: int = 4096,
+                      use_subnet_kernel: Optional[bool] = None,
+                      grouped_matmul=None) -> np.ndarray:
+    """uint16 (out_width, 2^{beta_in*F}) output codes for one layer."""
+    table, _ = _layer_sweep(cfg, params, state, statics, layer_idx,
+                            batch=batch,
+                            use_kernel=_resolve_kernel(use_subnet_kernel),
+                            grouped_matmul=grouped_matmul)
     return table.astype(np.uint16)
 
 
 def convert(cfg: NeuraLUTConfig, params: Params, state: Params,
-            statics: List[Dict]) -> List[np.ndarray]:
-    """All layers' truth tables."""
-    return [layer_truth_table(cfg, params, state, statics, i)
+            statics: List[Dict], *, batch: int = 4096,
+            use_subnet_kernel: Optional[bool] = None,
+            grouped_matmul=None) -> List[np.ndarray]:
+    """All layers' truth tables (unpacked uint16)."""
+    return [layer_truth_table(cfg, params, state, statics, i, batch=batch,
+                              use_subnet_kernel=use_subnet_kernel,
+                              grouped_matmul=grouped_matmul)
             for i in range(cfg.num_layers)]
+
+
+def convert_packed(cfg: NeuraLUTConfig, params: Params, state: Params,
+                   statics: List[Dict], *, batch: int = 4096,
+                   use_subnet_kernel: Optional[bool] = None,
+                   grouped_matmul=None
+                   ) -> Tuple[List[np.ndarray], List[np.ndarray]]:
+    """All layers' tables in both forms: ([unpacked uint16], [bit-packed
+    int32]) with the packing fused into the device sweep.  Feed both to
+    ``serve.bundle_from_training(..., packed_tables=...)`` and the
+    resulting bundle is serving-ready without a prepack step."""
+    use_kernel = _resolve_kernel(use_subnet_kernel)
+    tables, packeds = [], []
+    for i in range(cfg.num_layers):
+        table, packed = _layer_sweep(cfg, params, state, statics, i,
+                                     batch=batch, use_kernel=use_kernel,
+                                     grouped_matmul=grouped_matmul)
+        if packed is None:
+            # T < P: the table does not fill one packed word, so the
+            # cascade format (and pack_tables itself) cannot hold it.
+            raise ValueError(
+                f"layer {i}: table size {cfg.table_size(i)} smaller than "
+                f"the packed word capacity {packed_slots(cfg.beta)} "
+                f"(beta={cfg.beta}); geometry not servable bit-packed")
+        tables.append(table)
+        packeds.append(packed)
+    return tables, packeds

@@ -73,6 +73,19 @@ def _kernel(nlayers: int, skip: int, *refs):
     out_ref[...] = h[..., 0].astype(out_ref.dtype)
 
 
+def auto_blocks(b: int, o: int, *, max_b: int = 128, max_o: int = 16
+                ) -> tuple:
+    """Largest legal (block_b, block_o) for a (B, O, F) operand: the
+    biggest power-of-two divisor of B up to ``max_b`` and the biggest
+    divisor of O up to ``max_o`` (grouped_subnet requires exact tiling).
+    """
+    bb = 1
+    while bb * 2 <= min(b, max_b) and b % (bb * 2) == 0:
+        bb *= 2
+    bo = max(d for d in range(1, min(o, max_o) + 1) if o % d == 0)
+    return bb, bo
+
+
 def grouped_subnet(
     xg: jax.Array,                       # (B, O, F)
     layer_ws: Sequence[jax.Array],       # each (O, n_i, n_{i+1})

@@ -77,6 +77,26 @@ def cascade_apply(codes, shift_mats, packed_tables, *, meta, beta: int,
                                   list(packed_tables), beta)
 
 
+def subnet_kernel_apply(fn_params: Dict, xg, skip: int, *,
+                        interpret: Optional[bool] = None):
+    """Run a whole (B, O, F) grouped sub-network through the fused
+    Pallas kernel (``neuralut_mlp.grouped_subnet``), shaping legal block
+    sizes automatically.  The converter's TPU fast path: one kernel
+    launch evaluates all O neurons' hidden MLPs for a chunk of
+    enumerated codes.  The jnp ``subnet.subnet_apply`` path is the
+    bit-exactness oracle (tests/test_convert_fused.py).
+    """
+    from .neuralut_mlp import auto_blocks, grouped_subnet
+    b, o, _ = xg.shape
+    block_b, block_o = auto_blocks(b, o)
+    kw = subnet_params_to_kernel(fn_params)
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return grouped_subnet(xg, kw["layer_ws"], kw["layer_bs"],
+                          kw["skip_ws"], kw["skip_bs"], skip=skip,
+                          block_b=block_b, block_o=block_o,
+                          interpret=interp)
+
+
 def subnet_params_to_kernel(fn_params: Dict) -> Dict:
     """Adapt a repro.core.subnet param dict -> kernel argument lists."""
     lw = [lp["w"] for lp in fn_params["layers"]]

@@ -49,10 +49,13 @@ def build_lut_bundle(args):
         cfg, xtr, ytr, xte, yte, epochs=args.epochs, batch=256, lr=2e-3,
         log_every=max(1, args.epochs // 4))
     statics = M.model_static(cfg)
-    tables = TT.convert(cfg, params, state, statics)
+    # Fused conversion emits bit-packed tables directly; the bundle is
+    # serving-ready without a prepack pass.
+    tables, packed = TT.convert_packed(cfg, params, state, statics)
     acc_q = hist["test_acc_q"][-1]
     print(f"accuracy (quantized): {acc_q:.4f}", flush=True)
     bundle = bundle_from_training(cfg, params, tables, statics,
+                                  packed_tables=packed,
                                   meta={"train_acc_q": float(acc_q)})
     if reg is not None:
         path = reg.save(cfg.name, bundle)

@@ -3,11 +3,22 @@
     python -m repro.launch.train --arch llama3-8b --steps 100 \
         --mesh host --ckpt-dir /ckpt/llama3
 
-Composes: config registry -> mesh -> sharded train step (pjit) ->
+LM archs compose: config registry -> mesh -> sharded train step (pjit) ->
 CheckpointStore + TrainSupervisor (restart on failure) -> deterministic
 ShardedLoader.  On this CPU container use ``--reduced`` configs and the
 ``host`` mesh; on a real cluster the same file runs under
 ``jax.distributed.initialize()`` with the production mesh.
+
+NeuraLUT archs run the device-resident scanned trainer instead — the
+full model-production pipeline, train -> convert -> pack -> registry:
+
+    python -m repro.launch.train --arch neuralut-jsc-5l --epochs 30 \
+        --seeds 4 --registry results/registry
+
+``--seeds N`` (N > 1) trains N restarts in one compiled vmapped sweep
+(``train_neuralut_ensemble``), keeps the best quantized-accuracy member,
+converts it through the fused truth-table sweep (bit-packed tables come
+straight off the device), and saves a serving-ready bundle.
 
 XLA flags for real TPU runs (overlap compute/comm; harmless elsewhere) are
 listed in ``TPU_XLA_FLAGS`` and applied with --tpu-flags.
@@ -28,11 +39,82 @@ TPU_XLA_FLAGS = " ".join([
 ])
 
 
+def train_neuralut_arch(args, cfg) -> None:
+    """Circuit-level pipeline: scanned (multi-seed) training -> fused
+    conversion with packed emission -> registry bundle."""
+    import time as _time
+
+    import numpy as np
+    from repro.core import model as M
+    from repro.core import truth_table as TT
+    from repro.core.train import (ensemble_member, train_neuralut,
+                                  train_neuralut_ensemble)
+    from repro.data import jsc_synthetic
+
+    if "jsc" not in cfg.name:
+        raise SystemExit(f"--arch {args.arch}: only the JSC NeuraLUT "
+                         f"configs have a synthetic dataset wired here "
+                         f"(hdr/MNIST-style archs train via "
+                         f"benchmarks/fig6_7_pareto.py)")
+    xtr, ytr = jsc_synthetic(20000, seed=0)
+    xte, yte = jsc_synthetic(4000, seed=1)
+    n_steps = args.epochs * (len(xtr) // 256)
+    # --lr's 3e-4 default is LM-tuned; the circuit-level models train
+    # at 2e-3 everywhere else (serve_bench, fig6_7, examples).
+    lr = args.lr if args.lr is not None else 2e-3
+
+    t0 = _time.time()
+    if args.seeds > 1:
+        params, state, hist = train_neuralut_ensemble(
+            cfg, xtr, ytr, xte, yte, seeds=tuple(range(args.seeds)),
+            epochs=args.epochs, batch=256, lr=lr,
+            log_every=args.log_every)
+        final_q = np.asarray(hist["test_acc_q"][-1])
+        best = int(final_q.argmax())
+        print(f"seeds={args.seeds} acc_q per seed="
+              f"{np.round(final_q, 4).tolist()} -> best seed {best}",
+              flush=True)
+        params, state = ensemble_member(params, state, best)
+        acc_q = float(final_q[best])
+        n_steps *= args.seeds
+    else:
+        params, state, hist = train_neuralut(
+            cfg, xtr, ytr, xte, yte, epochs=args.epochs, batch=256,
+            lr=lr, log_every=args.log_every)
+        acc_q = float(hist["test_acc_q"][-1])
+    dt = _time.time() - t0
+    print(f"trained {args.epochs} epochs in {dt:.1f}s "
+          f"({n_steps / dt:.1f} steps/s) acc_q={acc_q:.4f}", flush=True)
+
+    statics = M.model_static(cfg)
+    t0 = _time.time()
+    tables, packed = TT.convert_packed(cfg, params, state, statics)
+    entries = sum(t.size for t in tables)
+    print(f"converted {entries} table entries in {_time.time()-t0:.2f}s "
+          f"(packed {sum(p.nbytes for p in packed)/1024:.1f} KiB)",
+          flush=True)
+
+    if args.registry:
+        from repro.serve import TableRegistry, bundle_from_training
+        bundle = bundle_from_training(cfg, params, tables, statics,
+                                      packed_tables=packed,
+                                      meta={"train_acc_q": acc_q})
+        path = TableRegistry(args.registry).save(cfg.name, bundle)
+        print(f"saved serving-ready bundle -> {path}", flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--epochs", type=int, default=20,
+                    help="NeuraLUT archs: training epochs")
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="NeuraLUT archs: restarts trained in one "
+                         "vmapped sweep (best member is kept)")
+    ap.add_argument("--registry", default=None,
+                    help="NeuraLUT archs: save the converted bundle here")
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--mesh", default="host",
@@ -43,7 +125,8 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--grad-accum", type=int, default=1)
     ap.add_argument("--compress-grads", action="store_true")
-    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--lr", type=float, default=None,
+                    help="default: 3e-4 for LM archs, 2e-3 for NeuraLUT")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--tpu-flags", action="store_true")
     args = ap.parse_args()
@@ -67,6 +150,10 @@ def main() -> None:
     from repro.config.base import ShapeConfig
 
     cfg = get_config(args.arch, reduced=args.reduced)
+    from repro.core.nl_config import NeuraLUTConfig
+    if isinstance(cfg, NeuraLUTConfig):
+        train_neuralut_arch(args, cfg)
+        return
     if args.mesh == "host":
         nd = jax.device_count()
         if args.mesh_shape:
@@ -80,7 +167,8 @@ def main() -> None:
     print(f"mesh {mcfg.shape} devices={mcfg.num_devices}", flush=True)
 
     shape = ShapeConfig("cli", "train", args.seq_len, args.global_batch)
-    tcfg = TrainConfig(lr=args.lr, grad_accum=args.grad_accum,
+    tcfg = TrainConfig(lr=args.lr if args.lr is not None else 3e-4,
+                       grad_accum=args.grad_accum,
                        sgdr_t0=max(50, args.steps // 4))
 
     spec = api.param_spec(cfg, model_axis=mcfg.shape[-1])

@@ -73,13 +73,18 @@ class ServeBundle:
     def prepack(self) -> "ServeBundle":
         """Bit-pack every layer's table and build the shift matrices the
         fused cascade kernel consumes (see kernels/lut_cascade.py);
-        idempotent, returns self."""
+        idempotent, returns self.  Bundles built from
+        ``truth_table.convert_packed`` arrive with ``packed_tables``
+        (and the derived operands) already populated — the conversion
+        sweep emits packed words directly — so this is a no-op for
+        freshly converted models."""
+        from repro.kernels.lut_cascade import (build_shift_mats,
+                                               cascade_meta, cascade_tables)
         if self.packed_tables is None:
-            from repro.kernels.lut_cascade import (build_shift_mats,
-                                                   cascade_meta,
-                                                   cascade_tables)
             self.packed_tables = cascade_tables(self.cfg, self.tables)
+        if self.shift_mats is None:
             self.shift_mats = build_shift_mats(self.cfg, self.statics)
+        if self.cascade_geom is None:
             self.cascade_geom = cascade_meta(self.cfg)
         return self
 
@@ -105,10 +110,16 @@ class ServeBundle:
 
 def bundle_from_training(cfg: NeuraLUTConfig, params: Dict, tables: List,
                          statics: List[Dict], *,
+                         packed_tables: Optional[List] = None,
                          meta: Optional[Dict] = None) -> ServeBundle:
     """Extract the deployable subset from a training (params, tables,
-    statics) triple."""
-    return ServeBundle(
+    statics) triple.
+
+    Pass the packed tables from ``truth_table.convert_packed`` and the
+    bundle is completed serving-ready on the spot (shift matrices and
+    cascade geometry are derived here, so ``prepack`` finds nothing to
+    do on the load path)."""
+    bundle = ServeBundle(
         cfg=cfg,
         tables=[np.asarray(t) for t in tables],
         statics=[{k: np.asarray(v) for k, v in s.items()} for s in statics],
@@ -117,6 +128,10 @@ def bundle_from_training(cfg: NeuraLUTConfig, params: Dict, tables: List,
                      for lp in params["layers"]],
         meta=dict(meta or {}),
     )
+    if packed_tables is not None:
+        bundle.packed_tables = [np.asarray(p) for p in packed_tables]
+        bundle.prepack()  # fills only shift_mats + cascade_geom
+    return bundle
 
 
 def _cfg_to_meta(cfg: NeuraLUTConfig) -> Dict[str, Any]:

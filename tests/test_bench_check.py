@@ -1,0 +1,125 @@
+"""The CI perf-regression gate (benchmarks/run.py --check): the checker
+must pass on an honest fresh run and fail on a doctored baseline for
+every gated section — cascade throughput, scanned-trainer steps/s, and
+fused-converter entries/s — and must refuse to "pass" when it compared
+nothing.
+"""
+import copy
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.run import check_regression  # noqa: E402
+
+
+def _payload():
+    return {
+        "cascade": {
+            "sweep": [
+                {"batch": 256, "fused_lookups_per_s": 3.0e8,
+                 "speedup": 4.0},
+                {"batch": 4096, "fused_lookups_per_s": 9.0e8,
+                 "speedup": 3.2},
+            ],
+        },
+        "train": {
+            "host_sync_steps_per_s": 13.0,
+            "scanned_steps_per_s": 39.0,
+            "speedup": 3.0,
+        },
+        "convert": {
+            "geometries": {
+                "neuralut-jsc-5l": {"entries_per_s": 8.8e6,
+                                    "speedup": 2.3, "gate": True},
+                "neuralut-hdr-5l": {"entries_per_s": 6.9e6,
+                                    "speedup": 2.2, "gate": True},
+            },
+        },
+    }
+
+
+def test_identical_run_passes_all_sections():
+    base = _payload()
+    assert check_regression(base, copy.deepcopy(base), 0.25) == []
+    assert check_regression(base, copy.deepcopy(base), 0.25,
+                            metric="speedup") == []
+
+
+def test_small_regression_within_threshold_passes():
+    base, fresh = _payload(), _payload()
+    fresh["train"]["scanned_steps_per_s"] *= 0.80  # -20% < 25% allowed
+    fresh["cascade"]["sweep"][0]["fused_lookups_per_s"] *= 0.80
+    fresh["convert"]["geometries"]["neuralut-jsc-5l"][
+        "entries_per_s"] *= 0.80
+    assert check_regression(base, fresh, 0.25) == []
+
+
+def test_doctored_baseline_fails_each_section():
+    """Inflate the baseline 2x per section: the gate must flag exactly
+    that section (the negative test CI relies on)."""
+    for section, path in [
+        ("cascade", lambda d: d["cascade"]["sweep"][1]),
+        ("train", lambda d: d["train"]),
+        ("convert",
+         lambda d: d["convert"]["geometries"]["neuralut-hdr-5l"]),
+    ]:
+        base = _payload()
+        row = path(base)
+        for k in row:
+            if k != "batch":
+                row[k] = float(row[k]) * 2.0
+        problems = check_regression(base, _payload(), 0.25)
+        assert problems, f"doctored {section} baseline not caught"
+        assert all(p.startswith(section) for p in problems), problems
+        # and the speedup metric mode catches it too
+        assert check_regression(base, _payload(), 0.25, metric="speedup")
+
+
+def test_intersection_only_comparison():
+    """Smoke runs sweep fewer batches/geometries than the committed
+    baseline; only the common keys are gated."""
+    base, fresh = _payload(), _payload()
+    del fresh["cascade"]["sweep"][1]  # smoke sweeps only batch 256
+    del fresh["convert"]["geometries"]["neuralut-hdr-5l"]
+    base["cascade"]["sweep"][1]["fused_lookups_per_s"] *= 10  # not common
+    assert check_regression(base, fresh, 0.25) == []
+
+
+def test_disjoint_or_missing_sections_fail():
+    base, fresh = _payload(), _payload()
+    # no common batch sizes -> explicit problem, not a silent pass
+    for row in fresh["cascade"]["sweep"]:
+        row["batch"] += 1
+    problems = check_regression(base, fresh, 0.25)
+    assert any("no common batch sizes" in p for p in problems)
+    # nothing comparable at all -> explicit failure
+    problems = check_regression({"cascade": base["cascade"]},
+                                {"train": _payload()["train"]}, 0.25)
+    assert any("nothing to compare" in p for p in problems)
+
+
+def test_ungated_convert_rows_are_recorded_but_not_compared():
+    """Tiny geometries carry gate=false: a wild swing there must not
+    fail CI, but a run with ONLY ungated rows must not silently pass."""
+    base, fresh = _payload(), _payload()
+    base["convert"]["geometries"]["neuralut-jsc-2l-reduced"] = {
+        "entries_per_s": 4.0e6, "speedup": 50.0, "gate": False}
+    fresh["convert"]["geometries"]["neuralut-jsc-2l-reduced"] = {
+        "entries_per_s": 1.0e6, "speedup": 10.0, "gate": False}  # -75%
+    assert check_regression(base, fresh, 0.25) == []
+    only_ungated = {
+        "convert": {"geometries": {
+            "tiny": {"entries_per_s": 1.0, "gate": False}}}}
+    problems = check_regression(
+        {"convert": {"geometries": {
+            "tiny": {"entries_per_s": 4.0, "gate": False}}}},
+        only_ungated, 0.25)
+    assert any("no gate-eligible" in p for p in problems)
+
+
+def test_missing_metric_key_is_flagged():
+    base, fresh = _payload(), _payload()
+    del fresh["train"]["scanned_steps_per_s"]
+    problems = check_regression(base, fresh, 0.25)
+    assert any("train" in p and "missing" in p for p in problems)

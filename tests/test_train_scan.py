@@ -1,0 +1,138 @@
+"""Device-resident scanned trainer: semantics, ensemble mode, carriers.
+
+The per-step math must match a directly-applied single step (the scan is
+an orchestration change, not a numerics change), histories must come
+back as plain floats after the deferred fetch, and the vmapped ensemble
+must train S genuinely independent restarts in one compiled sweep.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import model as M
+from repro.core.nl_config import NeuraLUTConfig
+from repro.core.train import (_make_epoch_fn, _make_step_fn,
+                              ensemble_member, train_neuralut,
+                              train_neuralut_ensemble)
+from repro.data import two_semicircles
+
+TOY = NeuraLUTConfig(name="scan-toy", in_features=2, layer_widths=(6, 2),
+                     num_classes=2, beta=3, fan_in=2, kind="subnet",
+                     depth=2, width=4, skip=0)
+
+
+@pytest.mark.parametrize("skip", [0, 1, 2, 3])
+def test_batch_leading_layout_matches_canonical(skip):
+    """The neuron-leading training layout computes the same function as
+    the canonical einsum the tables are defined against, including the
+    skip-residual path every paper config trains with (agreement to
+    float32 rounding; bit-identity is deliberately NOT claimed — see
+    subnet_apply's docstring)."""
+    from repro.core import subnet
+    L, N, F, O, B = (skip if skip else 2) * 2, 5, 3, 7, 11
+    spec = subnet.subnet_spec(O, F, L, N, skip)
+    from repro.models.layers.common import init_from_spec
+    p = init_from_spec(spec, jax.random.PRNGKey(skip))
+    x = jnp.asarray(np.random.default_rng(skip).normal(0, 1, (B, O, F)),
+                    jnp.float32)
+    a = subnet.subnet_apply(p, x, skip, batch_leading=False)
+    b = subnet.subnet_apply(p, x, skip, batch_leading=True)
+    assert a.shape == b.shape == (B, O)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_scanned_epoch_matches_direct_step():
+    """One epoch of one full-batch step == applying the step directly."""
+    cfg = TOY
+    statics = M.model_static(cfg)
+    params, state = M.model_init(cfg, jax.random.PRNGKey(0))
+    from repro.optim import adamw_init
+    opt = adamw_init(params)
+    x, y = two_semicircles(64, seed=0)
+    xd, yd = jnp.asarray(x), jnp.asarray(y)
+    n = x.shape[0]
+
+    step = _make_step_fn(cfg, statics, lr=1e-3, weight_decay=1e-4, t0=10)
+    epoch = _make_epoch_fn(step, n, 1, n)
+    key = jax.random.PRNGKey(7)
+    p1, s1, o1, loss1 = epoch(params, state, opt, key, xd, yd)
+
+    perm = jax.random.permutation(key, n)
+    p2, s2, o2, loss2 = jax.jit(step)(params, state, opt,
+                                      jnp.take(xd, perm, axis=0),
+                                      jnp.take(yd, perm, axis=0))
+    np.testing.assert_allclose(float(loss1), float(loss2), rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-7)
+    for a, b in zip(jax.tree.leaves(s1), jax.tree.leaves(s2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-7)
+
+
+def test_train_neuralut_history_and_progress():
+    x, y = two_semicircles(600, seed=0)
+    xt, yt = two_semicircles(200, seed=1)
+    params, state, hist = train_neuralut(TOY, x, y, xt, yt, epochs=6,
+                                         batch=128, lr=5e-3)
+    assert sorted(hist) == ["loss", "test_acc", "test_acc_q"]
+    for k in hist:
+        assert len(hist[k]) == 6
+        assert all(isinstance(v, float) for v in hist[k])
+    assert hist["loss"][-1] < hist["loss"][0]
+    # the returned pytrees are a single network (no stacking axis)
+    assert params["in_quant"]["log_s"].shape == (2,)
+
+
+def test_train_batch_larger_than_dataset_clamps():
+    x, y = two_semicircles(40, seed=0)
+    params, state, hist = train_neuralut(TOY, x, y, x, y, epochs=2,
+                                         batch=512, lr=5e-3)
+    assert len(hist["loss"]) == 2  # one clamped full-batch step per epoch
+
+
+def test_ensemble_trains_independent_restarts():
+    x, y = two_semicircles(600, seed=0)
+    xt, yt = two_semicircles(200, seed=1)
+    seeds = (0, 1, 2)
+    params, state, hist = train_neuralut_ensemble(
+        TOY, x, y, xt, yt, seeds=seeds, epochs=5, batch=128, lr=5e-3)
+    S = len(seeds)
+    # stacked leaves: leading S axis everywhere
+    for leaf in jax.tree.leaves(params):
+        assert leaf.shape[0] == S
+    for k in ("loss", "test_acc", "test_acc_q"):
+        assert hist[k].shape == (5, S)
+    # distinct seeds -> distinct trained weights
+    w0 = np.asarray(params["layers"][0]["fn"]["layers"][0]["w"])
+    assert not np.allclose(w0[0], w0[1])
+    # every member trains
+    assert (hist["loss"][-1] < hist["loss"][0]).all()
+    # members slice back out to single-network pytrees
+    p1, s1 = ensemble_member(params, state, 1)
+    assert p1["in_quant"]["log_s"].shape == (2,)
+    logits, _, _ = M.model_apply(TOY, p1, s1, M.model_static(TOY),
+                                 jnp.asarray(xt), train=False)
+    assert logits.shape == (200, 2)
+
+
+def test_ensemble_member_converts_and_serves():
+    """Pipeline integration: pick an ensemble member, convert it fused-
+    packed, and check the LUT path is bit-exact vs its eval forward."""
+    from repro.core import lut_infer as LI
+    from repro.core import truth_table as TT
+    x, y = two_semicircles(400, seed=0)
+    params, state, hist = train_neuralut_ensemble(
+        TOY, x, y, x, y, seeds=(0, 1), epochs=4, batch=128, lr=5e-3)
+    best = int(np.asarray(hist["test_acc_q"][-1]).argmax())
+    p, s = ensemble_member(params, state, best)
+    statics = M.model_static(TOY)
+    tables, packed = TT.convert_packed(TOY, p, s, statics)
+    xe = jnp.asarray(x[:64])
+    _, values, _ = M.model_apply(TOY, p, s, statics, xe, train=False)
+    codes = LI.input_codes(TOY, p, xe)
+    lut_vals = LI.class_values(TOY, p, LI.lut_forward(TOY, tables,
+                                                      statics, codes))
+    assert (np.asarray(values) == np.asarray(lut_vals)).all()
