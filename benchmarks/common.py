@@ -1,4 +1,5 @@
-"""Shared benchmark utilities: timing + CSV emission.
+"""Shared benchmark utilities: timing + CSV emission + XLA:CPU thread
+pinning for bitwise comparison paths.
 
 Every ``emit`` also lands in ``RECORDS`` so harnesses (benchmarks/run.py)
 can dump machine-readable summaries (e.g. BENCH_kernels.json) next to
@@ -6,6 +7,8 @@ the CSV stream.
 """
 from __future__ import annotations
 
+import os
+import sys
 import time
 from typing import Callable, Dict, List
 
@@ -16,7 +19,57 @@ RECORDS: List[Dict] = []
 # Single source of truth: run.py's gate, write_bench_summary's section
 # mapping, and its record-prefix merge are all derived from this.
 GATED_SUITES = {"kernel": "cascade", "train": "train",
-                "convert": "convert"}
+                "train_kernel": "train_kernel", "convert": "convert"}
+
+# XLA:CPU contractions are not bitwise run-invariant when the Eigen
+# thread pool's availability varies: a pre-quant value landing exactly
+# on a round() boundary can flip by one code between two compilations
+# of the same math on a loaded machine (ROADMAP "Bitwise comparisons
+# under load").  Pinning intra-op parallelism to one thread makes the
+# partitioning — and therefore the f32 summation order — deterministic,
+# so the legacy-vs-fused conversion oracles can demand exact equality
+# instead of a ppm noise floor.
+PIN_FLAGS = "--xla_cpu_multi_thread_eigen=false " \
+            "intra_op_parallelism_threads=1"
+
+
+def pin_cpu_intra_op_threads() -> bool:
+    """Append the pinning flags to ``XLA_FLAGS`` if the jax backend can
+    still pick them up.  Returns True when the single-thread pin is (or
+    already was) in effect — callers use this to decide between the
+    strict and the ppm-floor comparison mode.  Must run before anything
+    initializes a jax backend (first device/array op); importing jax is
+    fine.
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "intra_op_parallelism_threads" in flags:
+        # Already set externally (e.g. tests/conftest.py, CI env).  Only
+        # the =1 pin buys determinism; any other value means the user
+        # chose their own parallelism — leave it alone, stay ppm-mode.
+        return cpu_threads_pinned()
+    if _jax_backend_live():
+        return False  # too late: the CPU client already sized its pool
+    os.environ["XLA_FLAGS"] = (flags + " " + PIN_FLAGS).strip()
+    return True
+
+
+def cpu_threads_pinned() -> bool:
+    """Whether the comparison paths may assume the single-thread pin
+    (``intra_op_parallelism_threads=1`` specifically — an external
+    XLA_FLAGS requesting N>1 threads is NOT a pin)."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    return any(tok == "intra_op_parallelism_threads=1"
+               for tok in flags.replace("--", " ").split())
+
+
+def _jax_backend_live() -> bool:
+    if "jax" not in sys.modules:
+        return False
+    try:
+        from jax._src import xla_bridge
+        return bool(xla_bridge._backends)
+    except Exception:  # private API moved: assume live, don't over-claim
+        return True
 
 
 def time_call(fn: Callable, *, warmup: int = 2, iters: int = 10) -> float:

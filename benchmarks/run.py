@@ -15,9 +15,11 @@ gated metric regressed by more than ``--check-threshold`` (default 25%).
 Gated sections (each compared only when present in both baseline and
 fresh run):
 
-  * "cascade"  — fused LUT-cascade serving throughput per batch size;
-  * "train"    — scanned-trainer steps/s on the JSC-5L model;
-  * "convert"  — fused conversion entries/s per paper geometry.
+  * "cascade"      — fused LUT-cascade serving throughput per batch;
+  * "train"        — scanned-trainer steps/s on the JSC-5L model;
+  * "train_kernel" — fused fwd+bwd kernel-route step vs the jnp route
+                     (speedup metric gates the machine-relative ratio);
+  * "convert"      — fused conversion entries/s per paper geometry.
 
 A selected suite that raises also exits non-zero, so a red bench can
 never slip through as a green step with a partial JSON.
@@ -85,6 +87,22 @@ def _check_train(baseline: Dict, fresh: Dict, threshold: float,
     return problems
 
 
+def _check_train_kernel(baseline: Dict, fresh: Dict, threshold: float,
+                        metric: str) -> List[str]:
+    """Gate the fused fwd+bwd kernel training step: absolute steps/s,
+    or the kernel-vs-jnp step ratio in ``speedup`` mode (the ratio is
+    machine-relative, so it survives runner hardware differences — and
+    it gates the interpret-mode overhead staying bounded on CPU CI)."""
+    key = {"throughput": "kernel_steps_per_s", "speedup": "speedup"}[metric]
+    problems: List[str] = []
+    if key not in baseline or key not in fresh:
+        return [f"train_kernel: metric {key!r} missing from "
+                f"{'baseline' if key not in baseline else 'fresh run'}"]
+    _gate(problems, "train_kernel", key, float(baseline[key]),
+          float(fresh[key]), threshold)
+    return problems
+
+
 def _check_convert(baseline: Dict, fresh: Dict, threshold: float,
                    metric: str) -> List[str]:
     """Per-geometry gate on fused conversion throughput (or the fused-
@@ -126,6 +144,7 @@ def check_regression(baseline: Dict, fresh: Dict, threshold: float,
     pass).
     """
     checkers = {"cascade": _check_cascade, "train": _check_train,
+                "train_kernel": _check_train_kernel,
                 "convert": _check_convert}
     problems: List[str] = []
     compared = 0
@@ -179,6 +198,7 @@ def main() -> None:
         "table3": lambda: table3_eval.run(fast=args.fast),
         "kernel": lambda: kernel_bench.run(fast=args.fast),
         "train": lambda: train_bench.run(fast=args.fast),
+        "train_kernel": lambda: train_bench.run_kernel(fast=args.fast),
         "convert": lambda: convert_bench.run(fast=args.fast),
         "lm_step": lambda: lm_step_bench.run(),
         "serve": lambda: serve_bench.run(reduced=args.fast),

@@ -37,15 +37,16 @@ from repro.core import lut_infer as LI
 from repro.core import model as M
 from repro.core import truth_table as TT
 from repro.core.train import train_neuralut
-from repro.data import jsc_synthetic
+from repro.data import device_dataset, jsc_synthetic
 from repro.serve import (LUTServeEngine, ServeMetrics, TableRegistry,
                          bundle_from_training)
 
 
 def _train_bundle(arch: str, *, reduced: bool, epochs: int, registry_dir: str):
     cfg = get_config(arch, reduced=reduced)
-    xtr, ytr = jsc_synthetic(8000 if reduced else 20000, seed=0)
-    xte, yte = jsc_synthetic(2000, seed=1)
+    xtr, ytr = device_dataset(jsc_synthetic, 8000 if reduced else 20000,
+                              seed=0)
+    xte, yte = device_dataset(jsc_synthetic, 2000, seed=1)
     params, state, hist = train_neuralut(
         cfg, xtr, ytr, xte, yte, epochs=epochs, batch=256, lr=2e-3)
     statics = M.model_static(cfg)
@@ -71,7 +72,8 @@ def _train_bundle(arch: str, *, reduced: bool, epochs: int, registry_dir: str):
     if not exact:
         raise SystemExit("registry round-trip predictions diverge from "
                          "lut_forward oracle")
-    return loaded, xte
+    # The closed-loop clients slice request payloads host-side.
+    return loaded, np.asarray(xte)
 
 
 def _closed_loop(engine: LUTServeEngine, x: np.ndarray, *, clients: int,

@@ -20,7 +20,8 @@ from repro.core import lut_infer as LI
 from repro.core import model as M
 from repro.core import truth_table as TT
 from repro.core.train import train_neuralut
-from repro.data import jsc_synthetic, mnist_synthetic
+from repro.data import (device_dataset, jsc_synthetic,
+                        mnist_synthetic)
 
 
 def _eval_model(arch: str, xtr, ytr, xte, yte, epochs: int):
@@ -57,13 +58,13 @@ def _eval_model(arch: str, xtr, ytr, xte, yte, epochs: int):
 def run(fast: bool = False) -> None:
     ep_jsc = 8 if fast else 25
     ep_mnist = 4 if fast else 12
-    xtr, ytr = jsc_synthetic(20000, seed=0)
-    xte, yte = jsc_synthetic(4000, seed=1)
+    xtr, ytr = device_dataset(jsc_synthetic, 20000, seed=0)
+    xte, yte = device_dataset(jsc_synthetic, 4000, seed=1)
     e2 = _eval_model("neuralut-jsc-2l", xtr, ytr, xte, yte, ep_jsc)
     e5 = _eval_model("neuralut-jsc-5l", xtr, ytr, xte, yte, ep_jsc)
 
-    xtr, ytr = mnist_synthetic(8000, seed=0)
-    xte, yte = mnist_synthetic(2000, seed=1)
+    xtr, ytr = device_dataset(mnist_synthetic, 8000, seed=0)
+    xte, yte = device_dataset(mnist_synthetic, 2000, seed=1)
     eh = _eval_model("neuralut-hdr-5l", xtr, ytr, xte, yte, ep_mnist)
 
     # headline ratios vs published baselines (modeled / paper-reported)

@@ -8,12 +8,21 @@ batch, and the canonical (B, O, F) einsum layout in the forward pass.
 The scanned trainer runs the whole epoch as one compiled scan with the
 data device-resident and the subnet in the fast neuron-leading layout.
 The steps/s ratio is the headline "train" entry of BENCH_kernels.json,
-gated by ``benchmarks/run.py --check`` (acceptance: >= 3x on this
-container).
+gated by ``benchmarks/run.py --check`` (~3x on this container — 2.98x
+in the committed thread-pinned baseline the CI ratio gate rides on).
 
 The ensemble row measures the vmapped multi-seed sweep in aggregate
 model-steps/s — the Pareto/multi-restart scenario the trainer exists
 for (train S candidate networks in one compiled computation).
+
+``run_kernel`` is the separate "train_kernel" section: one jitted SGD
+step through the fused fwd+bwd Pallas kernel route
+(``exec_plan`` route ``kernel_train``, kernels/neuralut_grad.py) vs the
+same step through the neuron-leading jnp route, timed interleaved.  The
+recorded ``speedup`` (kernel/jnp steps-per-s ratio) is machine-relative
+and CI-gated like train/convert; on this CPU container the kernel
+executes in Pallas interpret mode and the ratio documents the interpret
+overhead — the win case is a compiled TPU lowering, same kernel body.
 
     PYTHONPATH=src python -m benchmarks.train_bench
 """
@@ -204,6 +213,56 @@ def run(fast: bool = False) -> Dict:
     }
 
 
+def run_kernel(fast: bool = False) -> Dict:
+    """Kernel-vs-jnp training step ("train_kernel" bench section)."""
+    from repro.configs.neuralut_jsc_5l import full
+    from repro.core.exec_plan import plan_subnet_exec
+    cfg = full()
+    statics = M.model_static(cfg)
+    x, y = jsc_synthetic(N_TRAIN, seed=0)
+    params, state = M.model_init(cfg, jax.random.PRNGKey(0))
+    params = M.calibrate_in_quant(cfg, params, x)
+    opt = adamw_init(params)
+    xb, yb = jnp.asarray(x[:BATCH]), jnp.asarray(y[:BATCH])
+
+    fns = {}
+    for name, route in (("jnp", "neuron_leading"),
+                        ("kernel", "kernel_train")):
+        step = _make_step_fn(
+            cfg, statics, lr=2e-3, weight_decay=1e-4, t0=100,
+            exec_plan=plan_subnet_exec(cfg, purpose="train",
+                                       route=route))
+        fns[name] = jax.jit(step)
+        jax.block_until_ready(fns[name](params, state, opt, xb, yb))
+
+    iters = 5 if fast else 15
+    times: Dict[str, list] = {"jnp": [], "kernel": []}
+    for _ in range(iters):
+        # interleaved so machine load hits both routes alike — the CI
+        # gate rides on the ratio, not the absolute step times
+        for name in ("jnp", "kernel"):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fns[name](params, state, opt, xb, yb))
+            times[name].append(time.perf_counter() - t0)
+    jnp_sps = 1.0 / min(times["jnp"])
+    kernel_sps = 1.0 / min(times["kernel"])
+    speedup = kernel_sps / jnp_sps
+    emit("train_kernel/jnp_step", 1e6 / jnp_sps,
+         f"steps_per_s={jnp_sps:.1f};batch={BATCH}")
+    emit("train_kernel/kernel_step", 1e6 / kernel_sps,
+         f"steps_per_s={kernel_sps:.1f};speedup={speedup:.3f}x;"
+         f"backend={jax.default_backend()}")
+    return {
+        "config": cfg.name,
+        "fast_mode": fast,
+        "batch": BATCH,
+        "backend": jax.default_backend(),
+        "jnp_steps_per_s": jnp_sps,
+        "kernel_steps_per_s": kernel_sps,
+        "speedup": speedup,
+    }
+
+
 if __name__ == "__main__":
     from benchmarks.common import write_bench_summary
-    write_bench_summary({"train": run()})
+    write_bench_summary({"train": run(), "train_kernel": run_kernel()})

@@ -1,0 +1,152 @@
+"""Unified subnet execution planning: ONE dispatch for every way the
+hidden function can run.
+
+Before this layer existed the codebase had three subnet forward routes
+picked by convention — the canonical ``'boi,oij->boj'`` einsum (the
+layout the truth tables are defined against), the neuron-leading
+``batch_leading=True`` layout (fast training on XLA:CPU), and the fused
+Pallas inference kernel (``kernels/ops.subnet_kernel_apply``, the TPU
+converter path) — threaded through ``core/layers.py``,
+``core/train.py`` and ``core/truth_table.py`` as ad-hoc
+``grouped_matmul=`` / ``batch_leading=`` keyword plumbing, with the
+"training uses batch_leading, conversion uses canonical" invariant
+enforced only by convention.  ``SubnetExec`` makes the plan an explicit,
+hashable object: the planner picks a route from (purpose, backend,
+kind), callers thread the plan (or nothing, for the default), and the
+truth-table sweep cache keys on it directly.
+
+Routes (``SubnetExec.route``):
+
+  * ``canonical``       — the (B, O, n) einsum stack.  THE reference
+                          semantics: truth-table conversion and eval are
+                          bit-exact against it, and it is ``jax.grad``'s
+                          oracle for the kernel routes.  Also the only
+                          route for the linear/poly kinds (their whole
+                          hidden function is already one fused einsum).
+  * ``neuron_leading``  — same ops in (O, B, n) layout (one transpose
+                          in/out, layout-friendly batched GEMMs; ~3x
+                          faster fwd+bwd on XLA:CPU).  Float32-rounding
+                          equal to canonical, not bit-identical.
+  * ``kernel_infer``    — fused Pallas inference kernel
+                          (``kernels/neuralut_mlp.grouped_subnet``): all
+                          L sub-layers + skips in VMEM per (B, O) tile.
+                          NOT differentiable — forward-only purposes.
+  * ``kernel_train``    — fused fwd+bwd Pallas training kernel
+                          (``kernels/neuralut_grad``) wired through
+                          ``jax.custom_vjp``; the forward saves
+                          per-layer activations in the same launch and
+                          the backward produces dW/db/dx in one launch.
+
+Planner defaults (override with ``route=``):
+
+  purpose   linear/poly   subnet on CPU        subnet on TPU
+  -------   -----------   -------------        -------------
+  train     canonical     neuron_leading       kernel_train
+  eval      canonical     canonical            canonical
+  convert   canonical     canonical            kernel_infer
+
+Eval and convert stay canonical off-TPU on purpose: the conversion
+bit-exactness invariant (tables == quantized eval forward) rides on
+both sides running literally the same ops.  Kernel routes only apply to
+the subnet kind; for linear/poly they clamp to canonical (matching the
+pre-refactor behaviour of ``use_subnet_kernel`` on non-subnet models).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.core import subnet
+from repro.core.nl_config import NeuraLUTConfig
+
+ROUTES = ("canonical", "neuron_leading", "kernel_infer", "kernel_train")
+PURPOSES = ("train", "eval", "convert")
+_KERNEL_ROUTES = ("kernel_infer", "kernel_train")
+
+
+@dataclass(frozen=True)
+class SubnetExec:
+    """Execution plan for one model's hidden functions.
+
+    Hashable on purpose: the truth-table sweep cache keys compiled
+    executables on the plan, and jit treats it as a static argument.
+    ``kind``/``skip``/``degree`` are model-wide (fan-in varies per layer
+    but never changes the route), so one plan serves every layer.
+    """
+    kind: str                  # "subnet" | "linear" | "poly"
+    route: str
+    skip: int = 0
+    degree: int = 0
+    interpret: Optional[bool] = None  # kernel routes: None = auto
+
+    def __post_init__(self) -> None:
+        if self.route not in ROUTES:
+            raise ValueError(f"unknown route {self.route!r}; one of "
+                             f"{ROUTES}")
+        if self.kind != "subnet" and self.route != "canonical":
+            raise ValueError(f"kind {self.kind!r} only runs the "
+                             f"canonical route, got {self.route!r}")
+
+    @property
+    def differentiable(self) -> bool:
+        """Whether jax.grad may flow through :meth:`apply`."""
+        return self.route != "kernel_infer"
+
+    def apply(self, p: Dict[str, Any], xg: jax.Array, *,
+              exps=None) -> jax.Array:
+        """Evaluate the hidden function: (B, O, F) -> (B, O)."""
+        if self.kind == "linear":
+            return subnet.linear_apply(p, xg)
+        if self.kind == "poly":
+            return subnet.poly_apply(p, xg, exps)
+        if self.route == "kernel_infer":
+            from repro.kernels.ops import subnet_kernel_apply
+            return subnet_kernel_apply(p, xg, self.skip,
+                                       interpret=self.interpret)
+        if self.route == "kernel_train":
+            from repro.kernels.ops import subnet_train_apply
+            return subnet_train_apply(p, xg, self.skip,
+                                      interpret=self.interpret)
+        return subnet.subnet_apply(
+            p, xg, self.skip, batch_leading=self.route == "neuron_leading")
+
+
+def plan_subnet_exec(cfg: NeuraLUTConfig, *, purpose: str,
+                     route: Optional[str] = None,
+                     backend: Optional[str] = None,
+                     interpret: Optional[bool] = None) -> SubnetExec:
+    """Pick the execution route for ``purpose`` on ``backend``.
+
+    ``route`` overrides the default (clamped to canonical for
+    linear/poly kinds); ``backend`` defaults to
+    ``jax.default_backend()``.  A forced ``kernel_infer`` route is
+    rejected for training — it has no VJP and would fail deep inside
+    ``jax.grad`` instead of at plan time.
+    """
+    if purpose not in PURPOSES:
+        raise ValueError(f"unknown purpose {purpose!r}; one of {PURPOSES}")
+    if route is not None and route not in ROUTES:
+        raise ValueError(f"unknown route {route!r}; one of {ROUTES}")
+    if purpose == "train" and route == "kernel_infer":
+        raise ValueError("kernel_infer is forward-only; training needs a "
+                         "differentiable route (kernel_train or a jnp "
+                         "layout)")
+    if cfg.kind != "subnet":
+        return SubnetExec(kind=cfg.kind, route="canonical",
+                          degree=cfg.degree if cfg.kind == "poly" else 0)
+    if route is None:
+        on_tpu = (backend or jax.default_backend()) == "tpu"
+        if purpose == "train":
+            # The fused fwd+bwd kernel wins where it compiles (TPU); in
+            # interpret mode the neuron-leading einsum stack is the
+            # faster differentiable route (see train_bench train_kernel
+            # section for the measured gap on this host).
+            route = "kernel_train" if on_tpu else "neuron_leading"
+        elif purpose == "convert":
+            route = "kernel_infer" if on_tpu else "canonical"
+        else:  # eval: bit-exactness anchor, always the reference ops
+            route = "canonical"
+    return SubnetExec(kind=cfg.kind, route=route, skip=cfg.skip,
+                      interpret=interpret)

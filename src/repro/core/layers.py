@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.core.nl_config import NeuraLUTConfig
 from repro.core import quant, subnet
+from repro.core.exec_plan import SubnetExec, plan_subnet_exec
 from repro.core.sparsity import random_connectivity
 
 Params = Dict[str, Any]
@@ -49,21 +50,21 @@ def layer_spec(cfg: NeuraLUTConfig, idx: int, out_width: int
 
 def layer_apply(cfg: NeuraLUTConfig, idx: int, p: Params, state: Params,
                 static: Dict[str, np.ndarray], x: jax.Array, *,
-                train: bool, grouped_matmul=None
+                train: bool, exec_plan: SubnetExec = None
                 ) -> Tuple[jax.Array, jax.Array, Params]:
     """x: (B, in_width) dequantized values.
 
     Returns (values (B, O) after fake-quant, pre-quant logits (B, O),
-    new_state)."""
+    new_state).  ``exec_plan`` picks the hidden-function route; when
+    None the planner default for the purpose applies (training: the
+    fast layout/kernel, eval: the canonical einsum the truth tables are
+    defined against — bit-exact vs core/truth_table.py)."""
     conn = jnp.asarray(static["conn"])  # (O, F)
     xg = x[:, conn]  # (B, O, F) sparse gather
-    # Training steps run the subnet in the fast neuron-leading layout;
-    # eval keeps the canonical einsum the truth tables are defined
-    # against (bit-exact vs core/truth_table.py — see subnet_apply).
-    f = subnet.apply_hidden(cfg.kind, p["fn"], xg, skip=cfg.skip,
-                            exps=static.get("exps"),
-                            grouped_matmul=grouped_matmul,
-                            batch_leading=train)
+    if exec_plan is None:
+        exec_plan = plan_subnet_exec(
+            cfg, purpose="train" if train else "eval")
+    f = exec_plan.apply(p["fn"], xg, exps=static.get("exps"))
     pre, new_bn = quant.bn_apply(p["bn"], state["bn"], f, train=train,
                                  momentum=cfg.bn_momentum)
     beta_out = cfg.beta  # outputs always use the model-wide beta

@@ -82,11 +82,13 @@ def calibrate_in_quant(cfg: NeuraLUTConfig, params: Params,
 
 def model_apply(cfg: NeuraLUTConfig, params: Params, state: Params,
                 statics: List[Dict], x: jax.Array, *, train: bool,
-                grouped_matmul=None):
+                exec_plan=None):
     """x: (B, in_features) raw features.
 
     Returns (logits (B, classes) pre-quant, quantized class values,
-    new_state)."""
+    new_state).  ``exec_plan`` (a ``core.exec_plan.SubnetExec``) routes
+    every layer's hidden function; None uses the planner default for
+    the train/eval purpose."""
     beta_in = cfg.beta_in or cfg.beta
     v = quant.quant_apply(params["in_quant"], x, beta_in)
     new_states = []
@@ -94,7 +96,7 @@ def model_apply(cfg: NeuraLUTConfig, params: Params, state: Params,
     for i in range(cfg.num_layers):
         v, pre, ns = L.layer_apply(
             cfg, i, params["layers"][i], state["layers"][i], statics[i], v,
-            train=train, grouped_matmul=grouped_matmul)
+            train=train, exec_plan=exec_plan)
         new_states.append(ns)
     return pre, v, {"layers": new_states}
 

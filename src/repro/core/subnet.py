@@ -55,8 +55,7 @@ def subnet_spec(out_width: int, F: int, L: int, N: int, S: int) -> Params:
 
 
 def subnet_apply(p: Params, x: jax.Array, S: int, *,
-                 grouped_matmul=None, batch_leading: bool = False
-                 ) -> jax.Array:
+                 batch_leading: bool = False) -> jax.Array:
     """x: (B, O, F) -> (B, O). phi = ReLU (eq. 4).
 
     ``batch_leading=True`` runs the stack in neuron-leading (O, B, n)
@@ -64,27 +63,23 @@ def subnet_apply(p: Params, x: jax.Array, S: int, *,
     a layout-friendly batched GEMM (no per-op transposes; ~3x faster
     fwd+bwd on XLA:CPU, MXU batch dim on TPU).  The results agree with
     the canonical einsum to float32 rounding but are NOT guaranteed
-    bit-identical, so the *training* step uses it while eval and the
-    truth-table conversion keep the canonical (B, O, n) einsum the
-    tables are defined against (see core/truth_table.py).
+    bit-identical; which layout (or Pallas kernel) runs where is decided
+    by ``core.exec_plan.SubnetExec`` — conversion and eval stay on the
+    canonical (B, O, n) einsum the tables are defined against.
     """
-    neuron_leading = batch_leading and grouped_matmul is None
-    if neuron_leading:
+    if batch_leading:
         def mm(h, w, b):
             return jnp.einsum("obi,oij->obj", h, w) + b[:, None, :]
 
         h = x.transpose(1, 0, 2)  # (O, B, F)
     else:
-        if grouped_matmul is not None:
-            mm = grouped_matmul
-        else:
-            def mm(h, w, b):
-                return jnp.einsum("boi,oij->boj", h, w) + b[None]
+        def mm(h, w, b):
+            return jnp.einsum("boi,oij->boj", h, w) + b[None]
 
         h = x
 
     def squeeze(hh):
-        return hh[..., 0].T if neuron_leading else hh[..., 0]
+        return hh[..., 0].T if batch_leading else hh[..., 0]
     layers = p["layers"]
     L = len(layers)
     if S == 0:
@@ -110,21 +105,19 @@ def subnet_apply(p: Params, x: jax.Array, S: int, *,
 
 
 def apply_hidden(kind: str, p: Params, x: jax.Array, *, skip: int = 0,
-                 exps=None, grouped_matmul=None,
-                 batch_leading: bool = False) -> jax.Array:
-    """Single dispatch for the three hidden-function kinds.
+                 exps=None, batch_leading: bool = False) -> jax.Array:
+    """Kind-level dispatch over the jnp evaluation paths.
 
-    x: (B, O, F) -> (B, O).  Shared by the training/eval forward pass
-    (core/layers.py) and the truth-table sweep (core/truth_table.py) so
-    both evaluate the exact same ops — the conversion bit-exactness
-    invariant rides on this.
+    x: (B, O, F) -> (B, O).  Route selection (which layout, whether a
+    Pallas kernel runs instead) lives one level up in
+    ``core.exec_plan.SubnetExec``; this stays the shared jnp reference
+    the conversion bit-exactness invariant rides on.
     """
     if kind == "linear":
         return linear_apply(p, x)
     if kind == "poly":
         return poly_apply(p, x, exps)
-    return subnet_apply(p, x, skip, grouped_matmul=grouped_matmul,
-                        batch_leading=batch_leading)
+    return subnet_apply(p, x, skip, batch_leading=batch_leading)
 
 
 # ---------------------------------------------------------------------------

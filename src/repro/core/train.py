@@ -8,10 +8,12 @@ device, and the minibatch permutation drawn from a JAX PRNG inside the
 jit — no per-step Python dispatch, no per-step host sync, no per-step
 H2D batch transfer.  Per-epoch metrics stay on device until the end of
 training (one deferred fetch), so epochs pipeline back to back; inside
-the step the grouped subnet runs in the fast neuron-leading layout (see
-``subnet.subnet_apply(batch_leading=True)``).  Measured on the JSC-5L
-model this is >3x the steps/s of the per-step host-sync loop it
-replaces (benchmarks/train_bench.py, BENCH_kernels.json "train").
+the step the grouped subnet runs through the ``core.exec_plan`` train
+route — neuron-leading einsums on CPU, the fused fwd+bwd Pallas kernel
+(``kernels/neuralut_grad``) on TPU; ``subnet_route=`` overrides.
+Measured on the JSC-5L model this is ~3x the steps/s of the per-step
+host-sync loop it replaces (2.98x with intra-op threads pinned;
+benchmarks/train_bench.py, BENCH_kernels.json "train").
 
 ``train_neuralut_ensemble`` vmaps the same epoch body over S seeds:
 one compiled sweep trains S independent restarts (Pareto fronts,
@@ -24,13 +26,14 @@ trained (params, state) and an accuracy trace.
 """
 from __future__ import annotations
 
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import model as M
+from repro.core.exec_plan import plan_subnet_exec
 from repro.core.nl_config import NeuraLUTConfig
 from repro.optim import adamw_init, adamw_update, sgdr_schedule
 
@@ -45,14 +48,20 @@ def _donate_carries() -> Tuple[int, ...]:
 
 
 def _make_step_fn(cfg: NeuraLUTConfig, statics, *, lr: float,
-                  weight_decay: float, t0: int, grouped_matmul=None):
-    """Single SGD step: (params, state, opt, xb, yb) -> (..., loss)."""
+                  weight_decay: float, t0: int, exec_plan=None):
+    """Single SGD step: (params, state, opt, xb, yb) -> (..., loss).
+
+    ``exec_plan`` routes the grouped subnet (``core.exec_plan``); None
+    uses the train-purpose default for this backend (neuron-leading
+    einsums on CPU, the fused fwd+bwd Pallas kernel on TPU)."""
+    if exec_plan is None:
+        exec_plan = plan_subnet_exec(cfg, purpose="train")
 
     def step_fn(params, state, opt, xb, yb):
         def loss_fn(p):
             logits, _, new_state = M.model_apply(
                 cfg, p, state, statics, xb, train=True,
-                grouped_matmul=grouped_matmul)
+                exec_plan=exec_plan)
             return M.ce_loss(logits, yb), new_state
 
         (loss, new_state), grads = jax.value_and_grad(
@@ -93,12 +102,13 @@ def _make_epoch_fn(step_fn, n: int, steps_per_epoch: int, batch: int):
     return jax.jit(epoch_fn, donate_argnums=_donate_carries())
 
 
-def _make_eval_fn(cfg: NeuraLUTConfig, statics, grouped_matmul=None):
+def _make_eval_fn(cfg: NeuraLUTConfig, statics):
+    # Eval always runs the canonical plan — the layout the truth tables
+    # are bit-exact against (see core/exec_plan.py).
     @jax.jit
     def eval_fn(params, state, xb, yb):
         logits, values, _ = M.model_apply(cfg, params, state, statics, xb,
-                                          train=False,
-                                          grouped_matmul=grouped_matmul)
+                                          train=False)
         return (jnp.mean(jnp.argmax(logits, -1) == yb),
                 M.accuracy_from_values(values, yb))
 
@@ -118,7 +128,7 @@ def train_neuralut(
     weight_decay: float = 1e-4,
     seed: int = 0,
     sgdr_t0: int = 0,  # 0 -> one cosine cycle over all steps
-    grouped_matmul=None,
+    subnet_route: Optional[str] = None,
     log_every: int = 0,
 ) -> Tuple[Dict, Dict, Dict]:
     statics = M.model_static(cfg)
@@ -133,11 +143,12 @@ def train_neuralut(
     total_steps = epochs * steps_per_epoch
     t0 = sgdr_t0 or total_steps
 
-    step_fn = _make_step_fn(cfg, statics, lr=lr,
-                            weight_decay=weight_decay, t0=t0,
-                            grouped_matmul=grouped_matmul)
+    step_fn = _make_step_fn(
+        cfg, statics, lr=lr, weight_decay=weight_decay, t0=t0,
+        exec_plan=plan_subnet_exec(cfg, purpose="train",
+                                   route=subnet_route))
     epoch_fn = _make_epoch_fn(step_fn, n, steps_per_epoch, batch)
-    eval_fn = _make_eval_fn(cfg, statics, grouped_matmul)
+    eval_fn = _make_eval_fn(cfg, statics)
 
     # Device-resident once, for the whole run — the epoch scan gathers
     # minibatches on device and the per-epoch eval reuses the same test
@@ -228,7 +239,7 @@ def train_neuralut_ensemble(
     lr: float = 2e-3,
     weight_decay: float = 1e-4,
     sgdr_t0: int = 0,
-    grouped_matmul=None,
+    subnet_route: Optional[str] = None,
     log_every: int = 0,
 ) -> Tuple[Dict, Dict, Dict]:
     """Train S independent networks (one per seed) in one compiled sweep.
@@ -248,11 +259,12 @@ def train_neuralut_ensemble(
     steps_per_epoch = max(1, n // batch)
     t0 = sgdr_t0 or epochs * steps_per_epoch
 
-    step_fn = _make_step_fn(cfg, statics, lr=lr,
-                            weight_decay=weight_decay, t0=t0,
-                            grouped_matmul=grouped_matmul)
+    step_fn = _make_step_fn(
+        cfg, statics, lr=lr, weight_decay=weight_decay, t0=t0,
+        exec_plan=plan_subnet_exec(cfg, purpose="train",
+                                   route=subnet_route))
     jepoch = _make_ensemble_epoch_fn(step_fn, n, steps_per_epoch, batch)
-    eval_one = _make_eval_fn(cfg, statics, grouped_matmul)
+    eval_one = _make_eval_fn(cfg, statics)
 
     @jax.jit
     def eval_all(params, state, xe, ye):

@@ -15,17 +15,20 @@ walks fixed-size chunks bounding peak memory, and the resulting table is
 bit-packed on device (``lut_infer.pack_tables_jnp``) so a freshly
 converted model is already in the serving fast-path format —
 ``ServeBundle.prepack`` has nothing left to pack.  Compiled sweeps are
-cached by their static geometry ``(kind, skip/degree, beta_in, beta, F,
-T, chunk)`` (plus operand shapes, via jit), so consecutive layers with
+cached by their static geometry ``(exec plan, beta_in, beta, F, T,
+chunk)`` (plus operand shapes, via jit), so consecutive layers with
 the same shape share one executable and converting a second model of
 the same family costs zero recompiles — the per-layer ``@jax.jit`` of
 the old converter is gone.  ``convert_cache_stats`` exposes compile
 counts for tests and profiling.
 
-On TPU the hidden subnet can additionally route through the fused
-Pallas kernel (``kernels.ops.subnet_kernel_apply``); the jnp einsum
-path is the oracle and remains the default off-TPU so converted tables
-stay bit-identical to the quantized eval forward pass.
+The hidden function runs through a ``core.exec_plan.SubnetExec``: the
+convert-purpose planner default is the canonical jnp einsum off-TPU
+(the oracle the tables stay bit-identical to) and the fused Pallas
+inference kernel (route ``kernel_infer``) on TPU;
+``use_subnet_kernel=`` forces either side.  Sweep executables are
+cached keyed on the plan, so the two routes never share (or clobber)
+a compile.
 """
 from __future__ import annotations
 
@@ -36,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import quant, subnet
+from repro.core.exec_plan import SubnetExec, plan_subnet_exec
 from repro.core.lut_infer import pack_tables_jnp, packed_slots
 from repro.core.nl_config import NeuraLUTConfig
 
@@ -69,22 +73,22 @@ def _input_scales(cfg: NeuraLUTConfig, params: Params, layer_idx: int
 _SWEEP_CACHE: Dict[Tuple, object] = {}
 
 
-def _make_sweep(kind: str, skip: int, degree: int, beta_in: int, beta: int,
-                fan_in: int, table_size: int, chunk: int, pack: bool,
-                use_kernel: bool, grouped_matmul):
+def _make_sweep(exec_plan: SubnetExec, beta_in: int, beta: int,
+                fan_in: int, table_size: int, chunk: int, pack: bool):
     """Build the jitted enumeration sweep for one layer geometry.
 
     The returned function maps (slot_scale (O, F), fn_params, bn_params,
     bn_state, quant_params) -> ((O, T) uint16 table, (O, T//P) int32
-    packed words or None).  All enumeration happens on device.
+    packed words or None).  All enumeration happens on device; the
+    hidden function runs whatever route ``exec_plan`` picked.
     """
     offs = 2 ** (beta_in - 1)
     mask = 2 ** beta_in - 1
     nchunks = table_size // chunk
     shifts = jnp.asarray([beta_in * (fan_in - 1 - j)
                           for j in range(fan_in)], jnp.int32)
-    exps = (subnet.monomial_exponents(fan_in, degree)
-            if kind == "poly" else None)
+    exps = (subnet.monomial_exponents(fan_in, exec_plan.degree)
+            if exec_plan.kind == "poly" else None)
 
     def eval_chunk(start, slot_scale, fnp, bn_p, bn_s, quant_p):
         idx = start * chunk + jax.lax.iota(jnp.int32, chunk)
@@ -92,12 +96,7 @@ def _make_sweep(kind: str, skip: int, degree: int, beta_in: int, beta: int,
         # (chunk, O, F) dequantized values: scale of the SOURCE channel.
         vals = (codes[:, None, :].astype(jnp.float32) - offs) \
             * slot_scale[None]
-        if kind == "subnet" and use_kernel:
-            from repro.kernels.ops import subnet_kernel_apply
-            f = subnet_kernel_apply(fnp, vals, skip)
-        else:
-            f = subnet.apply_hidden(kind, fnp, vals, skip=skip, exps=exps,
-                                    grouped_matmul=grouped_matmul)
+        f = exec_plan.apply(fnp, vals, exps=exps)
         pre, _ = quant.bn_apply(bn_p, bn_s, f, train=False)
         return quant.quant_codes(quant_p, pre, beta)  # (chunk, O) int32
 
@@ -119,19 +118,17 @@ def _make_sweep(kind: str, skip: int, degree: int, beta_in: int, beta: int,
 
 
 def _get_sweep(cfg: NeuraLUTConfig, layer_idx: int, chunk: int,
-               use_kernel: bool, grouped_matmul):
+               exec_plan: SubnetExec):
     beta_in = cfg.layer_in_bits(layer_idx)
     fan_in = cfg.layer_fan_in(layer_idx)
     t = cfg.table_size(layer_idx)
     pack = t % packed_slots(cfg.beta) == 0
-    key = (cfg.kind,
-           cfg.skip if cfg.kind == "subnet" else 0,
-           cfg.degree if cfg.kind == "poly" else 0,
-           beta_in, cfg.beta, fan_in, t, chunk, pack, use_kernel,
-           id(grouped_matmul) if grouped_matmul is not None else None)
+    # SubnetExec is frozen/hashable and already carries kind/skip/degree
+    # — the plan IS the route part of the cache key.
+    key = (exec_plan, beta_in, cfg.beta, fan_in, t, chunk, pack)
     fn = _SWEEP_CACHE.get(key)
     if fn is None:
-        fn = _make_sweep(*key[:10], grouped_matmul)
+        fn = _make_sweep(*key)
         _SWEEP_CACHE[key] = fn
     return fn
 
@@ -170,13 +167,13 @@ def _guard_size(cfg: NeuraLUTConfig, layer_idx: int) -> None:
 
 def _layer_sweep(cfg: NeuraLUTConfig, params: Params, state: Params,
                  statics: List[Dict], layer_idx: int, *, batch: int,
-                 use_kernel: bool, grouped_matmul
+                 exec_plan: SubnetExec
                  ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
     """One layer's fused sweep -> ((O, T) uint16, packed int32 | None)."""
     _guard_size(cfg, layer_idx)
     t = cfg.table_size(layer_idx)
     chunk = _chunk_for(t, batch)
-    fn = _get_sweep(cfg, layer_idx, chunk, use_kernel, grouped_matmul)
+    fn = _get_sweep(cfg, layer_idx, chunk, exec_plan)
     conn = statics[layer_idx]["conn"]  # (O, F)
     src_scales = _input_scales(cfg, params, layer_idx)
     slot_scale = jnp.asarray(src_scales)[jnp.asarray(conn)]  # (O, F)
@@ -187,51 +184,51 @@ def _layer_sweep(cfg: NeuraLUTConfig, params: Params, state: Params,
             None if packed is None else np.asarray(packed))
 
 
-def _resolve_kernel(use_subnet_kernel: Optional[bool]) -> bool:
-    if use_subnet_kernel is None:
-        return jax.default_backend() == "tpu"
-    return use_subnet_kernel
+def _convert_plan(cfg: NeuraLUTConfig,
+                  use_subnet_kernel: Optional[bool]) -> SubnetExec:
+    """Map the legacy force-flag onto an exec plan (None = planner
+    default: canonical off-TPU, kernel_infer on TPU)."""
+    route = None
+    if use_subnet_kernel is not None and cfg.kind == "subnet":
+        route = "kernel_infer" if use_subnet_kernel else "canonical"
+    return plan_subnet_exec(cfg, purpose="convert", route=route)
 
 
 def layer_truth_table(cfg: NeuraLUTConfig, params: Params, state: Params,
                       statics: List[Dict], layer_idx: int, *,
                       batch: int = 4096,
-                      use_subnet_kernel: Optional[bool] = None,
-                      grouped_matmul=None) -> np.ndarray:
+                      use_subnet_kernel: Optional[bool] = None
+                      ) -> np.ndarray:
     """uint16 (out_width, 2^{beta_in*F}) output codes for one layer."""
     table, _ = _layer_sweep(cfg, params, state, statics, layer_idx,
                             batch=batch,
-                            use_kernel=_resolve_kernel(use_subnet_kernel),
-                            grouped_matmul=grouped_matmul)
+                            exec_plan=_convert_plan(cfg,
+                                                    use_subnet_kernel))
     return table.astype(np.uint16)
 
 
 def convert(cfg: NeuraLUTConfig, params: Params, state: Params,
             statics: List[Dict], *, batch: int = 4096,
-            use_subnet_kernel: Optional[bool] = None,
-            grouped_matmul=None) -> List[np.ndarray]:
+            use_subnet_kernel: Optional[bool] = None) -> List[np.ndarray]:
     """All layers' truth tables (unpacked uint16)."""
     return [layer_truth_table(cfg, params, state, statics, i, batch=batch,
-                              use_subnet_kernel=use_subnet_kernel,
-                              grouped_matmul=grouped_matmul)
+                              use_subnet_kernel=use_subnet_kernel)
             for i in range(cfg.num_layers)]
 
 
 def convert_packed(cfg: NeuraLUTConfig, params: Params, state: Params,
                    statics: List[Dict], *, batch: int = 4096,
-                   use_subnet_kernel: Optional[bool] = None,
-                   grouped_matmul=None
+                   use_subnet_kernel: Optional[bool] = None
                    ) -> Tuple[List[np.ndarray], List[np.ndarray]]:
     """All layers' tables in both forms: ([unpacked uint16], [bit-packed
     int32]) with the packing fused into the device sweep.  Feed both to
     ``serve.bundle_from_training(..., packed_tables=...)`` and the
     resulting bundle is serving-ready without a prepack step."""
-    use_kernel = _resolve_kernel(use_subnet_kernel)
+    exec_plan = _convert_plan(cfg, use_subnet_kernel)
     tables, packeds = [], []
     for i in range(cfg.num_layers):
         table, packed = _layer_sweep(cfg, params, state, statics, i,
-                                     batch=batch, use_kernel=use_kernel,
-                                     grouped_matmul=grouped_matmul)
+                                     batch=batch, exec_plan=exec_plan)
         if packed is None:
             # T < P: the table does not fill one packed word, so the
             # cascade format (and pack_tables itself) cannot hold it.

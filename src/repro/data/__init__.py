@@ -4,7 +4,13 @@ from .synthetic import (
     token_stream,
     two_semicircles,
 )
-from .pipeline import ShardedLoader
+from .pipeline import (
+    ShardedLoader,
+    clear_device_datasets,
+    device_dataset,
+    device_dataset_stats,
+)
 
 __all__ = ["jsc_synthetic", "mnist_synthetic", "token_stream",
-           "two_semicircles", "ShardedLoader"]
+           "two_semicircles", "ShardedLoader", "device_dataset",
+           "device_dataset_stats", "clear_device_datasets"]

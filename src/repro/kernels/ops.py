@@ -97,6 +97,26 @@ def subnet_kernel_apply(fn_params: Dict, xg, skip: int, *,
                           interpret=interp)
 
 
+def subnet_train_apply(fn_params: Dict, xg, skip: int, *,
+                       interpret: Optional[bool] = None):
+    """Differentiable twin of :func:`subnet_kernel_apply`: the fused
+    fwd+bwd training kernel (``neuralut_grad.subnet_train_op``), with
+    legal block sizes shaped automatically.  One Pallas launch per
+    direction; ``jax.grad`` through it matches the jnp einsum oracle to
+    float32 tolerance (tests/test_train_kernel.py).  Dispatched by
+    ``core.exec_plan`` route ``kernel_train``.
+    """
+    from .neuralut_grad import subnet_train_meta, subnet_train_op
+    b, o, _ = xg.shape
+    kw = subnet_params_to_kernel(fn_params)
+    meta = subnet_train_meta(b, o, len(kw["layer_ws"]), skip,
+                             interpret=interpret)
+    return subnet_train_op(meta, xg, tuple(kw["layer_ws"]),
+                           tuple(kw["layer_bs"]),
+                           tuple(kw["skip_ws"] or ()),
+                           tuple(kw["skip_bs"] or ()))
+
+
 def subnet_params_to_kernel(fn_params: Dict) -> Dict:
     """Adapt a repro.core.subnet param dict -> kernel argument lists."""
     lw = [lp["w"] for lp in fn_params["layers"]]

@@ -4,4 +4,18 @@ import sys
 # NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
 # and benches must see the real single device; multi-device tests spawn
 # subprocesses that set it themselves (see test_distributed.py).
+#
+# DO pin XLA:CPU intra-op parallelism (appended, so externally-set flags
+# survive): unpinned, the Eigen pool partitions contractions by thread
+# availability and f32 summation order varies run-to-run, flipping
+# round()-boundary table entries between two compilations of the same
+# math under load.  Pinning makes the bitwise comparison oracles
+# (test_convert_fused.py) exact instead of ppm-floored.  This runs
+# before any test module imports jax, so the CPU client sees the flag.
+if "intra_op_parallelism_threads" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_cpu_multi_thread_eigen=false"
+          " intra_op_parallelism_threads=1").strip()
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

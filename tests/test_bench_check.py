@@ -1,8 +1,8 @@
 """The CI perf-regression gate (benchmarks/run.py --check): the checker
 must pass on an honest fresh run and fail on a doctored baseline for
-every gated section — cascade throughput, scanned-trainer steps/s, and
-fused-converter entries/s — and must refuse to "pass" when it compared
-nothing.
+every gated section — cascade throughput, scanned-trainer steps/s, the
+fused fwd+bwd kernel-vs-jnp training step, and fused-converter
+entries/s — and must refuse to "pass" when it compared nothing.
 """
 import copy
 import os
@@ -28,6 +28,11 @@ def _payload():
             "scanned_steps_per_s": 39.0,
             "speedup": 3.0,
         },
+        "train_kernel": {
+            "jnp_steps_per_s": 40.0,
+            "kernel_steps_per_s": 8.0,
+            "speedup": 0.2,
+        },
         "convert": {
             "geometries": {
                 "neuralut-jsc-5l": {"entries_per_s": 8.8e6,
@@ -49,6 +54,7 @@ def test_identical_run_passes_all_sections():
 def test_small_regression_within_threshold_passes():
     base, fresh = _payload(), _payload()
     fresh["train"]["scanned_steps_per_s"] *= 0.80  # -20% < 25% allowed
+    fresh["train_kernel"]["kernel_steps_per_s"] *= 0.80
     fresh["cascade"]["sweep"][0]["fused_lookups_per_s"] *= 0.80
     fresh["convert"]["geometries"]["neuralut-jsc-5l"][
         "entries_per_s"] *= 0.80
@@ -61,6 +67,7 @@ def test_doctored_baseline_fails_each_section():
     for section, path in [
         ("cascade", lambda d: d["cascade"]["sweep"][1]),
         ("train", lambda d: d["train"]),
+        ("train_kernel", lambda d: d["train_kernel"]),
         ("convert",
          lambda d: d["convert"]["geometries"]["neuralut-hdr-5l"]),
     ]:
@@ -121,5 +128,9 @@ def test_ungated_convert_rows_are_recorded_but_not_compared():
 def test_missing_metric_key_is_flagged():
     base, fresh = _payload(), _payload()
     del fresh["train"]["scanned_steps_per_s"]
+    del fresh["train_kernel"]["speedup"]
     problems = check_regression(base, fresh, 0.25)
     assert any("train" in p and "missing" in p for p in problems)
+    assert any(p.startswith("train_kernel") and "missing" in p
+               for p in check_regression(base, fresh, 0.25,
+                                         metric="speedup"))

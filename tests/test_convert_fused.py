@@ -21,6 +21,7 @@ import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
+from benchmarks.common import cpu_threads_pinned  # noqa: E402
 from benchmarks.convert_bench import _legacy_convert  # noqa: E402
 from repro.core import lut_infer as LI  # noqa: E402
 from repro.core import model as M
@@ -53,13 +54,15 @@ def _trained_like(cfg, seed=0):
 @pytest.mark.parametrize("config_mod,variant", ALL_GEOMETRIES)
 def test_fused_bit_exact_vs_legacy_all_geometries(config_mod, variant):
     """Legacy and fused converters are two compilations of the same
-    math.  XLA:CPU contractions are not bitwise run-invariant under
-    varying thread-pool partitioning, so on multi-million-entry
-    geometries a pre-quant value landing EXACTLY on a round() boundary
-    can occasionally flip by one code between the two compilations.
-    The oracle therefore demands zero mismatches up to a ppm-level
-    allowance, and requires any allowed mismatch to carry the boundary
-    signature (difference of exactly +-1 code) — a real converter bug
+    math.  With intra-op threads pinned (tests/conftest.py) the
+    size-scaling ppm noise floor is retired: the allowance drops to a
+    constant two entries, and any allowed mismatch must carry the
+    round()-boundary signature (difference of exactly +-1 code).  The
+    constant remains because jaxlib 0.4.36's thunk-runtime CPU client
+    does not fully honor the eigen pinning flags — ~1 flip per 3.4M
+    entries was still observed under heavy runner load with the pin
+    active.  Unpinned (an external XLA_FLAGS overrode the conftest
+    pin), the old ppm floor applies.  Either way a real converter bug
     (wrong scale/BN/enumeration order) produces mass mismatches with
     arbitrary deltas and still fails loudly."""
     mod = importlib.import_module(f"repro.configs.{config_mod}")
@@ -68,7 +71,8 @@ def test_fused_bit_exact_vs_legacy_all_geometries(config_mod, variant):
     legacy = _legacy_convert(cfg, params, state, statics)
     tables, packed = TT.convert_packed(cfg, params, state, statics)
     entries = sum(t.size for t in tables)
-    allowed = max(3, entries * 3 // 1_000_000)
+    allowed = 2 if cpu_threads_pinned() \
+        else max(3, entries * 3 // 1_000_000)
     total = 0
     for i, (a, b) in enumerate(zip(legacy, tables)):
         diff = a.astype(np.int32) - b.astype(np.int32)

@@ -41,6 +41,80 @@ def test_rtl_top_structure(tmp_path):
     assert f"output [{cfg.beta * cfg.layer_widths[-1] - 1}:0] out_bus" in top
 
 
+def _legacy_rom_case(name, addr_bits, out_bits, table):
+    """The pre-vectorization per-entry emitter, vendored verbatim as the
+    output-equality oracle for the numpy batch hex formatter."""
+    lines = [
+        f"module {name} (input clk, input [{addr_bits-1}:0] addr,",
+        f"               output reg [{out_bits-1}:0] data);",
+        "  always @(posedge clk) begin",
+        "    case (addr)",
+    ]
+    for a, v in enumerate(table):
+        lines.append(
+            f"      {addr_bits}'h{a:0{(addr_bits+3)//4}x}: "
+            f"data <= {out_bits}'h{int(v):0{(out_bits+3)//4}x};")
+    lines += ["    endcase", "  end", "endmodule", ""]
+    return "\n".join(lines)
+
+
+def _legacy_generate_layer(cfg, idx, table, conn):
+    beta_in = cfg.layer_in_bits(idx)
+    beta_out = cfg.beta
+    f = cfg.layer_fan_in(idx)
+    o, t = table.shape
+    addr_bits = beta_in * f
+    in_width = int(conn.max()) + 1 if conn.size else 0
+    mods = []
+    body = [
+        f"module layer{idx} (input clk,",
+        f"    input [{beta_in * in_width - 1}:0] in_bus,",
+        f"    output [{beta_out * o - 1}:0] out_bus);",
+    ]
+    for n in range(o):
+        mods.append(_legacy_rom_case(f"rom_l{idx}_n{n}", addr_bits,
+                                     beta_out, table[n]))
+        sel = []
+        for j in range(f):
+            src = int(conn[n, j])
+            hi = beta_in * (src + 1) - 1
+            lo = beta_in * src
+            sel.append(f"in_bus[{hi}:{lo}]")
+        addr = "{" + ", ".join(sel) + "}"
+        body.append(f"  wire [{beta_out-1}:0] d{n};")
+        body.append(f"  rom_l{idx}_n{n} u{n} (.clk(clk), .addr({addr}), "
+                    f".data(d{n}));")
+    outs = ", ".join(f"d{n}" for n in reversed(range(o)))
+    body.append(f"  assign out_bus = {{{outs}}};")
+    body.append("endmodule\n")
+    return "\n".join(mods) + "\n" + "\n".join(body)
+
+
+def test_vectorized_emitter_locks_legacy_output(tmp_path):
+    """The vectorized ROM emitter must produce byte-identical Verilog to
+    the per-entry legacy loop, per layer AND as written to disk."""
+    cfg, statics, tables = _toy()
+    for i, tbl in enumerate(tables):
+        new = rtl.generate_layer(cfg, i, tbl, statics[i]["conn"])
+        old = _legacy_generate_layer(cfg, i, tbl, statics[i]["conn"])
+        assert new == old, f"layer {i}: emitter output drifted"
+    paths = rtl.generate_top(cfg, tables, statics, str(tmp_path))
+    for i, tbl in enumerate(tables):
+        assert (open(paths[i]).read()
+                == _legacy_generate_layer(cfg, i, tbl,
+                                          statics[i]["conn"]))
+
+
+def test_vhex_matches_format_spec():
+    vals = np.concatenate([np.arange(300),
+                           np.array([2 ** 16 - 1, 2 ** 20 - 1])])
+    for digits in (1, 2, 3, 5):
+        m = vals < 16 ** digits
+        got = rtl._vhex(vals[m], digits)
+        want = np.array([f"{int(v):0{digits}x}" for v in vals[m]])
+        assert (got == want).all()
+
+
 def test_rom_addressing_matches_connectivity(tmp_path):
     """The concatenated-select wiring must put slot 0 at the MSB."""
     cfg, statics, tables = _toy()

@@ -1,7 +1,8 @@
 import numpy as np
 
-from repro.data import (jsc_synthetic, mnist_synthetic, token_stream,
-                        two_semicircles)
+from repro.data import (clear_device_datasets, device_dataset,
+                        device_dataset_stats, jsc_synthetic,
+                        mnist_synthetic, token_stream, two_semicircles)
 from repro.data.pipeline import ShardedLoader, lm_batch_fn
 
 
@@ -34,6 +35,37 @@ def test_mnist_classes_distinguishable():
     cents = np.stack([xtr[ytr == c].mean(0) for c in range(10)])
     pred = np.argmin(((xte[:, None] - cents[None]) ** 2).sum(-1), -1)
     assert (pred == yte).mean() > 0.8
+
+
+def test_device_dataset_stages_once_and_reuses():
+    """Same (generator, args) -> the SAME device buffers, values equal
+    to the host generator; distinct args -> distinct entries."""
+    import jax
+    clear_device_datasets()
+    x1, y1 = device_dataset(jsc_synthetic, 128, seed=5)
+    x2, y2 = device_dataset(jsc_synthetic, 128, seed=5)
+    assert isinstance(x1, jax.Array) and isinstance(y1, jax.Array)
+    assert x1 is x2 and y1 is y2  # no re-materialization, no re-upload
+    xh, yh = jsc_synthetic(128, seed=5)
+    np.testing.assert_array_equal(np.asarray(x1), xh)
+    np.testing.assert_array_equal(np.asarray(y1), yh)
+    x3, _ = device_dataset(jsc_synthetic, 128, seed=6)
+    assert x3 is not x1
+    stats = device_dataset_stats()
+    assert stats["entries"] == 2
+    assert stats["bytes"] == 2 * (xh.nbytes + yh.nbytes)
+    clear_device_datasets()
+    assert device_dataset_stats() == {"entries": 0, "bytes": 0}
+
+
+def test_device_dataset_feeds_trainer_without_restaging():
+    """jnp.asarray on a cached entry is the identity, so the trainer's
+    own device staging adds no copy for cached data."""
+    import jax.numpy as jnp
+    clear_device_datasets()
+    x, y = device_dataset(two_semicircles, 64, seed=2)
+    assert jnp.asarray(x) is x and jnp.asarray(y) is y
+    clear_device_datasets()
 
 
 def test_sharded_loader_order_and_determinism():
