@@ -19,7 +19,10 @@ fresh run):
   * "train"        — scanned-trainer steps/s on the JSC-5L model;
   * "train_kernel" — fused fwd+bwd kernel-route step vs the jnp route
                      (speedup metric gates the machine-relative ratio);
-  * "convert"      — fused conversion entries/s per paper geometry.
+  * "convert"      — fused conversion entries/s per paper geometry;
+  * "serve_tenants"— multi-tenant consolidation: aggregate packed
+                     throughput vs one-engine-per-tenant (speedup mode
+                     gates the consolidation ratio).
 
 A selected suite that raises also exits non-zero, so a red bench can
 never slip through as a green step with a partial JSON.
@@ -130,6 +133,24 @@ def _check_convert(baseline: Dict, fresh: Dict, threshold: float,
     return problems
 
 
+def _check_serve_tenants(baseline: Dict, fresh: Dict, threshold: float,
+                         metric: str) -> List[str]:
+    """Gate the multi-tenant serving section: absolute aggregate
+    samples/s through the consolidated engine, or (``speedup`` mode) the
+    consolidation ratio — aggregate multi-tenant throughput over the
+    one-engine-per-tenant baseline measured in the same process, which
+    is machine-relative and survives runner hardware differences."""
+    key = {"throughput": "aggregate_sps",
+           "speedup": "consolidation_ratio"}[metric]
+    problems: List[str] = []
+    if key not in baseline or key not in fresh:
+        return [f"serve_tenants: metric {key!r} missing from "
+                f"{'baseline' if key not in baseline else 'fresh run'}"]
+    _gate(problems, "serve_tenants", key, float(baseline[key]),
+          float(fresh[key]), threshold)
+    return problems
+
+
 def check_regression(baseline: Dict, fresh: Dict, threshold: float,
                      metric: str = "throughput") -> List[str]:
     """Compare a fresh run's summaries against the committed baseline.
@@ -145,7 +166,8 @@ def check_regression(baseline: Dict, fresh: Dict, threshold: float,
     """
     checkers = {"cascade": _check_cascade, "train": _check_train,
                 "train_kernel": _check_train_kernel,
-                "convert": _check_convert}
+                "convert": _check_convert,
+                "serve_tenants": _check_serve_tenants}
     problems: List[str] = []
     compared = 0
     for section, checker in checkers.items():
@@ -202,6 +224,7 @@ def main() -> None:
         "convert": lambda: convert_bench.run(fast=args.fast),
         "lm_step": lambda: lm_step_bench.run(),
         "serve": lambda: serve_bench.run(reduced=args.fast),
+        "serve_tenants": lambda: serve_bench.run_tenants(reduced=args.fast),
     }
     selected = list(suites) if args.only is None else [
         s.strip() for s in args.only.split(",") if s.strip()]

@@ -24,6 +24,7 @@ import pathlib
 import sys
 import tempfile
 import threading
+import time
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
@@ -38,8 +39,9 @@ from repro.core import model as M
 from repro.core import truth_table as TT
 from repro.core.train import train_neuralut
 from repro.data import device_dataset, jsc_synthetic
-from repro.serve import (LUTServeEngine, ServeMetrics, TableRegistry,
-                         bundle_from_training)
+from repro.serve import (LUTServeEngine, MultiTenantEngine, ServeBundle,
+                         ServeMetrics, TableRegistry, Tenant,
+                         TenantOverloaded, bundle_from_training)
 
 
 def _train_bundle(arch: str, *, reduced: bool, epochs: int, registry_dir: str):
@@ -179,6 +181,220 @@ def run(*, reduced: bool = True, epochs: int = 0,
             tmp.cleanup()
 
 
+def _random_bundle(cfg, seed: int) -> ServeBundle:
+    """Serving-ready bundle with random tables/scales: lookup cost does
+    not depend on table contents, so the multi-tenant perf section skips
+    training and measures pure serving behavior."""
+    rng = np.random.default_rng(seed)
+    statics, tables = [], []
+    w_prev = cfg.in_features
+    for i, o in enumerate(cfg.layer_widths):
+        f = cfg.layer_fan_in(i)
+        statics.append({"conn": rng.integers(0, w_prev, (o, f))})
+        tables.append(rng.integers(0, 2 ** cfg.beta,
+                                   (o, cfg.table_size(i))).astype(np.uint16))
+        w_prev = o
+    return ServeBundle(
+        cfg=cfg, tables=tables, statics=statics,
+        in_log_s=rng.normal(0, 0.3, (cfg.in_features,)).astype(np.float32),
+        layer_log_s=[rng.normal(0, 0.3, (o,)).astype(np.float32)
+                     for o in cfg.layer_widths]).prepack()
+
+
+def _mt_closed_loop(engine: MultiTenantEngine, names, x: np.ndarray, *,
+                    clients: int, requests_per_client: int,
+                    request_size: int) -> None:
+    """Closed-loop clients spread round-robin across the tenants."""
+    def client(cid: int) -> None:
+        tenant = names[cid % len(names)]
+        rng = np.random.default_rng(cid)
+        for _ in range(requests_per_client):
+            idx = rng.integers(0, len(x), request_size)
+            engine.predict(tenant, x[idx])
+
+    threads = [threading.Thread(target=client, args=(c,))
+               for c in range(clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+
+def run_tenants(*, reduced: bool = True, arch: str = "neuralut-jsc-2l",
+                num_tenants: int = 2, clients: int = 8,
+                requests_per_client: int = 0, request_size: int = 32,
+                max_wait_ms: float = 1.0) -> dict:
+    """Multi-tenant consolidation section (BENCH_kernels.json key
+    ``serve_tenants``, gated by ``benchmarks/run.py --check``).
+
+    Measures the same offered load two ways in one process:
+
+      * ``single_engine_sps`` — each tenant behind its own
+        ``LUTServeEngine``, all engines live at once (the
+        pre-consolidation deployment: N processes contending for the
+        same host);
+      * ``aggregate_sps`` — every tenant behind ONE
+        ``MultiTenantEngine`` group, batches packed across tenants
+        into a single dispatch stream.
+
+    Both sides serve the identical offered load (same clients, same
+    request mix) and are timed wall-clock over the full window.
+
+    ``consolidation_ratio = aggregate_sps / single_engine_sps`` is the
+    machine-relative "speedup" metric for the CI gate (robust to runner
+    hardware, like the other ratio gates).  ``reduced`` shrinks the
+    offered load only, NOT the model geometry: the ratio depends
+    strongly on layer widths (tiny layers make the packed one-hot
+    einsum overhead dominate), so a smoke run must measure the same
+    geometry as the committed baseline to be comparable.  The section
+    also records a
+    forced-overload shed_rate demo (bounded low-priority queue under
+    flood while a high-priority tenant stays clean) and one clean
+    hot-swap under live traffic (shadow + cutover latency) —
+    EXPERIMENTS.md §Multi-tenant serving.
+    """
+    requests_per_client = requests_per_client or (20 if reduced else 80)
+    cfg = get_config(arch, reduced=False)
+    bundles = [_random_bundle(cfg, seed=i) for i in range(num_tenants)]
+    names = [f"t{i}" for i in range(num_tenants)]
+    x = np.random.default_rng(99).normal(
+        0, 1, (4096, cfg.in_features)).astype(np.float32)
+
+    per_tenant_clients = max(1, clients // num_tenants)
+    reps = 2  # best-of-2 per side: cancels transient host contention
+
+    # -- baseline: one dedicated engine per tenant, all live at once ------
+    def _measure_single() -> float:
+        engines = [LUTServeEngine(b, max_wait_ms=max_wait_ms,
+                                  use_kernel=False, metrics=ServeMetrics())
+                   for b in bundles]
+        try:
+            for e in engines:
+                e.start()
+                e.warmup()
+            t0 = time.perf_counter()
+            threads = [threading.Thread(
+                target=_closed_loop, args=(e, x),
+                kwargs=dict(clients=per_tenant_clients,
+                            requests_per_client=requests_per_client,
+                            request_size=request_size))
+                for e in engines]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            elapsed = time.perf_counter() - t0
+        finally:
+            for e in engines:
+                e.close()
+        samples = sum(e.metrics.report()["samples"] for e in engines)
+        return samples / elapsed if elapsed else 0.0
+
+    single_sps = max(_measure_single() for _ in range(reps))
+    emit("serve_tenants/single_engine", 0.0,
+         f"throughput_sps={single_sps:.0f};tenants={num_tenants};"
+         f"reps={reps}")
+
+    # -- consolidated: every tenant behind one packed group ----------------
+    def _measure_mt():
+        metrics = ServeMetrics()
+        eng = MultiTenantEngine(
+            [Tenant(n, b) for n, b in zip(names, bundles)],
+            max_wait_ms=max_wait_ms, metrics=metrics)
+        with eng:
+            eng.warmup()
+            t0 = time.perf_counter()
+            _mt_closed_loop(eng, names, x,
+                            clients=per_tenant_clients * num_tenants,
+                            requests_per_client=requests_per_client,
+                            request_size=request_size)
+            elapsed = time.perf_counter() - t0
+        rep = metrics.report()
+        sps = rep["samples"] / elapsed if elapsed else 0.0
+        return sps, rep, eng.num_groups
+
+    aggregate_sps, rep, num_groups = max(
+        (_measure_mt() for _ in range(reps)), key=lambda r: r[0])
+    ratio = aggregate_sps / single_sps if single_sps else 0.0
+    emit("serve_tenants/consolidated", rep["p50_ms"] * 1e3,
+         f"p50_ms={rep['p50_ms']:.2f};p99_ms={rep['p99_ms']:.2f};"
+         f"throughput_sps={aggregate_sps:.0f};"
+         f"consolidation_ratio={ratio:.2f};groups={num_groups}")
+
+    # -- forced overload: bounded low-priority tenant sheds, the
+    # high-priority tenant rides through clean -----------------------------
+    eng = MultiTenantEngine(
+        [Tenant("lo", bundles[0], priority=0, max_queue_depth=4),
+         Tenant("hi", bundles[1 % num_tenants], priority=5)],
+        max_wait_ms=max_wait_ms)
+    with eng:
+        eng.warmup()
+        stop = threading.Event()
+
+        def flood():
+            while not stop.is_set():
+                try:
+                    eng.submit("lo", x[:request_size])
+                except TenantOverloaded:
+                    pass
+
+        flooder = threading.Thread(target=flood, daemon=True)
+        flooder.start()
+        for _ in range(4 * requests_per_client):
+            eng.predict("hi", x[:2])
+        stop.set()
+        flooder.join()
+    shed_rate = eng.tenant_metrics("lo").shed_rate
+    hi_shed = eng.tenant_metrics("hi").shed
+    emit("serve_tenants/overload_shed", 0.0,
+         f"lo_shed_rate={shed_rate:.3f};hi_shed={hi_shed};"
+         f"hi_p99_ms={eng.tenant_metrics('hi').latency_ms(99):.2f}")
+
+    # -- hot swap under live traffic ---------------------------------------
+    eng = MultiTenantEngine([Tenant("live", bundles[0])],
+                            max_wait_ms=max_wait_ms)
+    candidate = ServeBundle(
+        cfg=cfg, tables=[t.copy() for t in bundles[0].tables],
+        statics=[{k: v.copy() for k, v in s.items()}
+                 for s in bundles[0].statics],
+        in_log_s=bundles[0].in_log_s.copy(),
+        layer_log_s=[s.copy() for s in bundles[0].layer_log_s])
+    with eng:
+        eng.warmup()
+        stop = threading.Event()
+
+        def traffic():
+            while not stop.is_set():
+                eng.predict("live", x[:request_size])
+
+        t = threading.Thread(target=traffic, daemon=True)
+        t.start()
+        swap = eng.swap("live", candidate, shadow_samples=64,
+                        timeout_s=60.0)
+        stop.set()
+        t.join()
+    if swap.status != "committed" or swap.mismatches:
+        raise SystemExit(f"clean hot-swap failed: {swap}")
+    emit("serve_tenants/hot_swap", swap.swap_latency_s * 1e6,
+         f"status={swap.status};shadow={swap.shadow_samples};"
+         f"swap_s={swap.swap_latency_s:.3f};"
+         f"cutover_ms={swap.cutover_latency_s * 1e3:.2f}")
+
+    return {
+        "tenants": num_tenants,
+        "arch": cfg.name,
+        "aggregate_sps": aggregate_sps,
+        "single_engine_sps": single_sps,
+        "consolidation_ratio": ratio,
+        "shed_rate_overload": shed_rate,
+        "hi_shed": int(hi_shed),
+        "swap_latency_s": swap.swap_latency_s,
+        "cutover_latency_s": swap.cutover_latency_s,
+        "shadow_samples": int(swap.shadow_samples),
+        "fast_mode": reduced,
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--reduced", action="store_true",
@@ -195,9 +411,20 @@ def main() -> None:
                     help="sweep replica counts at fixed offered load "
                          "(aggregate-throughput scaling) instead of the "
                          "client sweep; e.g. --replicas 1 2 4 8")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="run the multi-tenant consolidation section "
+                         "with this many tenants instead of the client "
+                         "sweep (see run_tenants)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    if args.replicas:
+    if args.tenants:
+        summary = run_tenants(
+            reduced=args.reduced, arch=args.arch,
+            num_tenants=args.tenants, clients=max(args.clients),
+            requests_per_client=args.requests_per_client,
+            max_wait_ms=args.max_wait_ms)
+        print(f"# {summary}")
+    elif args.replicas:
         run_replica_sweep(
             reduced=args.reduced, epochs=args.epochs, arch=args.arch,
             registry_dir=args.registry,

@@ -12,6 +12,13 @@ Two modes, matching the paper's kind (ultra-low-latency inference):
 
   * ``--mode lm``: decode tokens from a reduced LM with a KV cache
     (greedy), demonstrating the serve_step path end-to-end.
+
+With ``--tenants N`` the lut mode serves N tenants through one
+admission-controlled ``MultiTenantEngine`` (tenant 0 is the registry
+bundle; the rest are same-geometry variants), printing per-tenant
+metrics; add ``--swap`` to additionally hot-swap tenant 0 onto a
+re-packed redeploy under live traffic (shadow bit-exactness check ->
+atomic cutover) and print the SwapReport.
 """
 from __future__ import annotations
 
@@ -107,6 +114,79 @@ def serve_lut(args) -> None:
                 print(f"  replica {i}: {m.render()}", flush=True)
 
 
+def serve_tenants(args) -> None:
+    """N tenants behind one MultiTenantEngine: tenant 0 serves the
+    registry bundle; tenants 1..N-1 get same-geometry variant bundles
+    (fresh random tables — realistic distinct-customer payloads that
+    still pack into the same compiled forward)."""
+    import numpy as np
+    from repro.data import jsc_synthetic
+    from repro.serve import (MultiTenantEngine, ServeBundle, Tenant,
+                             TenantOverloaded)
+
+    bundle = build_lut_bundle(args)
+    cfg = bundle.cfg
+    xte, _ = jsc_synthetic(4000, seed=1)
+    rng = np.random.default_rng(7)
+    tenants = [Tenant("primary", bundle, priority=1)]
+    for i in range(1, args.tenants):
+        tenants.append(Tenant(
+            f"tenant{i}",
+            ServeBundle(
+                cfg=cfg,
+                tables=[rng.integers(0, 2 ** cfg.beta, t.shape)
+                        .astype(t.dtype) for t in bundle.tables],
+                statics=[{k: v.copy() for k, v in s.items()}
+                         for s in bundle.statics],
+                in_log_s=bundle.in_log_s.copy(),
+                layer_log_s=[s.copy() for s in bundle.layer_log_s]),
+            rate_limit=args.rate_limit or None))
+
+    with MultiTenantEngine(tenants,
+                           max_wait_ms=args.max_wait_ms) as eng:
+        eng.warmup()
+        print(f"{len(tenants)} tenants -> {eng.num_groups} geometry "
+              f"group(s), one compiled forward each", flush=True)
+        for r in range(args.requests):
+            name = tenants[r % len(tenants)].name
+            idx = rng.integers(0, len(xte), args.batch)
+            try:
+                eng.predict(name, xte[idx])
+            except TenantOverloaded as e:
+                print(f"  shed: {e}", flush=True)
+        for t in tenants:
+            m = eng.tenant_metrics(t.name)
+            print(f"  {t.name}: {m.render()} shed={m.shed} "
+                  f"shed_rate={m.shed_rate:.2f}", flush=True)
+        if args.swap:
+            candidate = ServeBundle(
+                cfg=cfg, tables=[t.copy() for t in bundle.tables],
+                statics=[{k: v.copy() for k, v in s.items()}
+                         for s in bundle.statics],
+                in_log_s=bundle.in_log_s.copy(),
+                layer_log_s=[s.copy() for s in bundle.layer_log_s])
+            import threading
+            stop = threading.Event()
+
+            def traffic():
+                while not stop.is_set():
+                    eng.predict("primary", xte[:args.batch])
+
+            th = threading.Thread(target=traffic, daemon=True)
+            th.start()
+            rep = eng.swap("primary", candidate, shadow_samples=64,
+                           timeout_s=60.0)
+            stop.set()
+            th.join()
+            print(f"swap: status={rep.status} states={rep.states} "
+                  f"shadow={rep.shadow_samples} "
+                  f"mismatches={rep.mismatches} "
+                  f"swap={rep.swap_latency_s*1e3:.1f}ms "
+                  f"cutover={rep.cutover_latency_s*1e3:.2f}ms", flush=True)
+            if rep.status != "committed":
+                raise SystemExit(f"hot swap failed: {rep.error}")
+
+
 def serve_lm(args) -> None:
     import jax
     import jax.numpy as jnp
@@ -160,8 +240,19 @@ def main() -> None:
                     help="serve through the shard_map'd multi-device "
                          "cascade (repro.serve.sharded) instead of "
                          "replica routing")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="serve N tenants through one MultiTenantEngine "
+                         "(lut mode only)")
+    ap.add_argument("--rate-limit", type=float, default=0.0,
+                    help="requests/s token-bucket for the secondary "
+                         "tenants (0 = unlimited)")
+    ap.add_argument("--swap", action="store_true",
+                    help="with --tenants: hot-swap tenant 0 onto a "
+                         "re-packed redeploy under live traffic")
     args = ap.parse_args()
-    if args.mode == "lut":
+    if args.mode == "lut" and args.tenants:
+        serve_tenants(args)
+    elif args.mode == "lut":
         serve_lut(args)
     else:
         serve_lm(args)

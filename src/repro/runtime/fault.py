@@ -130,6 +130,19 @@ class ReplicaHealthTracker:
         with self._lock:
             return list(self._failures)
 
+    def status(self) -> List[Dict[str, Any]]:
+        """One *consistent* per-replica snapshot (a single lock
+        acquisition — stitching healthy_ids/failure_counts together
+        races against concurrent recording).  Consumed by the
+        multi-tenant swap/canary reports (serve/tenants.py) and the
+        serving launcher's health printout."""
+        with self._lock:
+            return [{"replica": i,
+                     "healthy": self._healthy[i],
+                     "failures": self._failures[i],
+                     "consecutive": self._consecutive[i]}
+                    for i in range(self.num_replicas)]
+
 
 @dataclass
 class FailureInjector:

@@ -1,5 +1,6 @@
 """Production LUT serving: registry of converted-table bundles, a batched
-serving engine over the bit-exact lookup path, and serving metrics.
+serving engine over the bit-exact lookup path, multi-tenant consolidation,
+and serving metrics.
 
     bundle = bundle_from_training(cfg, params, tables, statics)
     TableRegistry(root).save(cfg.name, bundle)        # deploy artifact
@@ -9,26 +10,43 @@ serving engine over the bit-exact lookup path, and serving metrics.
         eng.warmup()
         pred = eng.predict(x)                         # or submit() -> Future
     print(eng.metrics.render())
+
+Fleet consolidation (serve/tenants.py): N bundles behind one
+admission-controlled front door, batched *across* tenants of the same
+geometry, hot-swapped with a shadow bit-exactness check:
+
+    with MultiTenantEngine([Tenant("a", ba, priority=1),
+                            Tenant("b", bb, rate_limit=500.0)]) as eng:
+        pred = eng.predict("a", x)
+        report = eng.swap("b", new_bb)                # shadow -> cutover
 """
 from .engine import DEFAULT_BUCKETS, LUTServeEngine, make_forward_fn, \
     pick_bucket
 from .metrics import ServeMetrics, percentile
 from .registry import ServeBundle, TableRegistry, bundle_from_training
-from .sharded import (DEFAULT_VMEM_BUDGET, ShardPlan,
+from .sharded import (DEFAULT_VMEM_BUDGET, ShardPlan, choose_layout,
                       make_sharded_forward_fn, o_sharded_cascade_fn,
                       plan_shards, replicated_cascade_fn)
+from .tenants import (MultiTenantEngine, SwapReport, Tenant,
+                      TenantOverloaded, make_tenant_forward_fn)
 
 __all__ = [
     "DEFAULT_BUCKETS",
     "DEFAULT_VMEM_BUDGET",
     "LUTServeEngine",
+    "MultiTenantEngine",
     "ServeBundle",
     "ServeMetrics",
     "ShardPlan",
+    "SwapReport",
     "TableRegistry",
+    "Tenant",
+    "TenantOverloaded",
     "bundle_from_training",
+    "choose_layout",
     "make_forward_fn",
     "make_sharded_forward_fn",
+    "make_tenant_forward_fn",
     "o_sharded_cascade_fn",
     "percentile",
     "pick_bucket",

@@ -173,6 +173,25 @@ class _Request:
 _STOP = object()
 
 
+def route_least_loaded(executors: Sequence["_ReplicaExecutor"],
+                       health: ReplicaHealthTracker,
+                       rr: int) -> Optional["_ReplicaExecutor"]:
+    """Queue-depth-aware sticky round-robin over healthy replicas: the
+    least-loaded healthy executor wins, with depth ties broken in
+    round-robin order *from the last-used replica inclusive* — so light
+    load sticks to one warm replica (no cross-device scatter for traffic
+    one device can absorb) and spills to the next replica exactly when
+    the current one has queued work.  Under saturation every replica
+    ends up busy and the policy degenerates to least-loaded.  Returns
+    None when no replica is healthy.  Shared by the single-bundle engine
+    and the multi-tenant geometry-group pools (serve/tenants.py)."""
+    healthy = [ex for ex in executors if health.is_healthy(ex.rid)]
+    if not healthy:
+        return None
+    n = len(executors)
+    return min(healthy, key=lambda ex: (ex.depth(), (ex.rid - rr) % n))
+
+
 def _complete(future: Future, result=None, exc=None) -> bool:
     """Resolve a future, tolerating client-side cancel(): a cancelled
     future makes set_result/set_exception raise InvalidStateError, which
@@ -502,26 +521,17 @@ class LUTServeEngine:
                 _complete(r.future, exc=RuntimeError("engine closed"))
 
     def _route(self, batch: List[_Request], total: int) -> None:
-        """Queue-depth-aware sticky round-robin over healthy replicas:
-        the least-loaded healthy executor wins, with depth ties broken
-        in round-robin order *from the last-used replica inclusive* —
-        so light load sticks to one warm replica (no cross-device
-        scatter for traffic one device can absorb) and spills to the
-        next replica exactly when the current one has queued work.
-        Under saturation every replica ends up busy and the policy
-        degenerates to least-loaded."""
+        """Route one coalesced batch via :func:`route_least_loaded`; with
+        no healthy replica left, fail the batch fast instead of queueing
+        it behind a pool that can never serve it."""
         depth = self._queue.qsize()
-        healthy = [ex for ex in self._executors
-                   if self.health.is_healthy(ex.rid)]
-        if not healthy:
+        chosen = route_least_loaded(self._executors, self.health, self._rr)
+        if chosen is None:
             err = RuntimeError(
                 f"no healthy replicas (of {len(self._executors)}) — "
                 f"failure counts {self.health.failure_counts()}")
             for r in batch:
                 _complete(r.future, exc=err)
             return
-        n = len(self._executors)
-        chosen = min(healthy,
-                     key=lambda ex: (ex.depth(), (ex.rid - self._rr) % n))
         self._rr = chosen.rid
         chosen.dispatch(batch, total, depth)

@@ -42,6 +42,8 @@ class ServeMetrics:
         self._real = 0                      # real samples across batches
         self._padded = 0                    # padded (dispatched) batch slots
         self._queue_depths: List[int] = []
+        self._admitted = 0                  # requests accepted at the door
+        self._shed = 0                      # requests refused (load shedding)
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
 
@@ -64,6 +66,30 @@ class ServeMetrics:
             self._padded += n_padded
             self._queue_depths.append(queue_depth)
 
+    # -- admission control (multi-tenant front door, serve/tenants.py) ----
+
+    def record_admitted(self, n_requests: int = 1) -> None:
+        with self._lock:
+            self._admitted += n_requests
+
+    def record_shed(self, n_requests: int = 1) -> None:
+        """One request refused at the admission door (queue bound or rate
+        limit).  ``shed_rate`` = shed / (admitted + shed) — the fraction
+        of offered load the door turned away."""
+        with self._lock:
+            self._shed += n_requests
+
+    @property
+    def shed(self) -> int:
+        with self._lock:
+            return self._shed
+
+    @property
+    def shed_rate(self) -> float:
+        with self._lock:
+            offered = self._admitted + self._shed
+            return self._shed / offered if offered else 0.0
+
     # -- reading ----------------------------------------------------------
 
     def latency_ms(self, p: float) -> float:
@@ -77,9 +103,11 @@ class ServeMetrics:
             samples, batches = self._samples, self._batches
             real, padded = self._real, self._padded
             depths = list(self._queue_depths)
+            admitted, shed = self._admitted, self._shed
             elapsed = ((self._t_last - self._t_first)
                        if self._t_first is not None and self._t_last is not None
                        and self._t_last > self._t_first else 0.0)
+        offered = admitted + shed
         rep: Dict[str, float] = {
             "requests": float(len(lat)),
             "samples": float(samples),
@@ -89,6 +117,9 @@ class ServeMetrics:
             "batch_occupancy": real / padded if padded else float("nan"),
             "mean_queue_depth": (sum(depths) / len(depths)) if depths
             else float("nan"),
+            "admitted": float(admitted),
+            "shed": float(shed),
+            "shed_rate": shed / offered if offered else 0.0,
         }
         for p in (50, 95, 99):
             rep[f"p{p}_ms"] = percentile(lat, p) * 1e3 if lat else float("nan")

@@ -88,6 +88,21 @@ class ServeBundle:
             self.cascade_geom = cascade_meta(self.cfg)
         return self
 
+    @property
+    def geometry_key(self) -> tuple:
+        """Everything that determines the *shapes* of the fused-cascade
+        operands (shift matrices, packed tables, quantizer scales) and
+        the bit-layout constants baked into a compiled forward: two
+        bundles with equal keys can share one jitted executable and be
+        packed into the same cross-tenant dispatch
+        (serve/tenants.py), and only an equal-key candidate may be
+        hot-swapped over an incumbent.  Table *contents* and
+        connectivity are deliberately excluded — they are per-tenant
+        operand values, not shapes."""
+        cfg = self.cfg
+        return (cfg.in_features, tuple(cfg.layer_widths), cfg.num_classes,
+                cfg.beta, cfg.beta_in, cfg.fan_in, cfg.fan_in_0)
+
     def serve_params(self) -> Dict[str, Any]:
         """Minimal params pytree compatible with ``repro.core.lut_infer``
         (input_codes / class_values); hidden-function weights are absent —
@@ -186,6 +201,13 @@ class TableRegistry:
     def has(self, name: str) -> bool:
         d = self.root / name
         return d.is_dir() and self._store(name).latest_step() is not None
+
+    def versions(self, name: str) -> List[int]:
+        """Committed versions of a model, ascending — the hot-swap
+        deployment path (serve/tenants.py) picks its candidate here."""
+        if not (self.root / name).is_dir():
+            return []
+        return self._store(name).list_steps()
 
     def load(self, name: str, *, version: Optional[int] = None,
              shard_replicas: Optional[int] = None,

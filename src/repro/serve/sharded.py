@@ -115,30 +115,47 @@ def _pad_operands(cfg, shift_mats: Sequence[np.ndarray],
     return pad_widths, out_sms, out_pts
 
 
-def plan_shards(bundle, num_replicas: int, *, mode: str = "auto",
-                vmem_budget_bytes: Optional[int] = None) -> ShardPlan:
-    """Choose (or force) a layout for ``bundle`` on ``num_replicas``
-    devices and precompute its operands.  ``mode="auto"`` replicates
-    when the resident operands fit the per-device budget, else shards
-    the neuron dim."""
+def choose_layout(operand_bytes_total: int, vmem_budget_bytes: int,
+                  num_replicas: int, mode: str = "auto"
+                  ) -> Tuple[str, int]:
+    """Pure layout decision: ``(mode, operand_bytes_per_device)``.
+
+    ``mode="auto"`` replicates when the resident operands fit the
+    per-device budget, else shards the neuron dim; explicit modes pass
+    through unchanged (an operator may force either).  Factored out of
+    :func:`plan_shards` so the decision is testable without building a
+    bundle — tests/test_serve_sharded.py property-checks it over
+    sampled (bytes, budget, replicas) triples.
+    """
     if mode not in ("auto", "replicated", "o_sharded"):
         raise ValueError(f"unknown shard mode {mode!r}")
     if num_replicas < 1:
         raise ValueError(f"num_replicas={num_replicas} must be >= 1")
-    bundle.prepack()
+    if mode == "auto":
+        mode = ("replicated" if operand_bytes_total <= vmem_budget_bytes
+                else "o_sharded")
+    per_device = (operand_bytes_total if mode == "replicated"
+                  else -(-operand_bytes_total // num_replicas))
+    return mode, per_device
+
+
+def plan_shards(bundle, num_replicas: int, *, mode: str = "auto",
+                vmem_budget_bytes: Optional[int] = None) -> ShardPlan:
+    """Choose (or force) a layout for ``bundle`` on ``num_replicas``
+    devices (see :func:`choose_layout`) and precompute its operands."""
     budget = DEFAULT_VMEM_BUDGET if vmem_budget_bytes is None \
         else int(vmem_budget_bytes)
+    choose_layout(0, 0, num_replicas, mode)  # validate args before packing
+    bundle.prepack()
     total = sum(int(t.nbytes) for t in bundle.packed_tables) + \
         sum(int(m.nbytes) for m in bundle.shift_mats)
-    if mode == "auto":
-        mode = "replicated" if total <= budget else "o_sharded"
+    mode, per_device = choose_layout(total, budget, num_replicas, mode)
     plan = ShardPlan(
         num_replicas=num_replicas,
         mode=mode,
         vmem_budget_bytes=budget,
         operand_bytes_total=total,
-        operand_bytes_per_device=(total if mode == "replicated"
-                                  else -(-total // num_replicas)),
+        operand_bytes_per_device=per_device,
         meta=bundle.cascade_geom,
     )
     if mode == "o_sharded":

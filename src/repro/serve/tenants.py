@@ -1,0 +1,754 @@
+"""Multi-tenant LUT serving: N bundles behind one admission-controlled
+engine.
+
+The paper's deliverable is a Pareto *front* of models (Fig. 6/7), so a
+production NeuraLUT fleet serves a zoo of per-task/per-geometry/per-seed
+bundles.  :class:`MultiTenantEngine` is the front door for that zoo:
+
+  * **Admission control.**  Every tenant has its own bounded request
+    queue, an optional token-bucket rate limit, and a priority.  A
+    request that would overflow the queue or exceed the rate is *shed*
+    at the door (:class:`TenantOverloaded`, counted in the tenant's and
+    the engine's ``shed_rate`` — serve/metrics.py) instead of being
+    accepted and served late: backpressure is explicit and per-tenant,
+    so one tenant's overload can never grow another tenant's queue.
+
+  * **Cross-tenant batch packing.**  Tenants are grouped by
+    ``ServeBundle.geometry_key`` (operand *shapes*, not contents).  Each
+    geometry group owns one jitted forward whose stacked per-tenant
+    operands are *arguments*, not closed-over constants — so N tenants
+    share one compiled executable per batch bucket (compile cost is per
+    geometry, not per tenant), and one dispatch carries rows from many
+    tenants with a per-row tenant id selecting each row's tables.  The
+    packed path is bit-exact vs per-tenant serial serving: the tenant
+    one-hot shift-matmul only adds exact zero terms to the integer
+    address arithmetic (tests/test_serve_tenants.py gates all six
+    ``configs/neuralut_*`` geometries).
+
+  * **Priority scheduling.**  The per-group dispatcher drains tenant
+    queues in descending priority order when coalescing a dispatch, so
+    under saturation the high-priority tenant's latency stays bounded
+    while low-priority traffic queues — and, once its queue bound is
+    hit, sheds.
+
+  * **Shared replica pools.**  Each geometry group routes coalesced
+    dispatches over its own ``_ReplicaExecutor``-style pool with the
+    same sticky least-loaded policy and health-based eviction
+    (``engine.route_least_loaded`` + ``runtime.fault``) as the
+    single-bundle engine.
+
+  * **Hot-swap deployment.**  ``swap()`` runs the state machine
+    validate -> shadow -> cutover -> committed: the candidate bundle is
+    loaded next to the incumbent, live traffic for that tenant is
+    *mirrored* through the candidate's own forward, and every mirrored
+    prediction must agree **bit-exactly** with the incumbent's (the
+    same contract the truth tables are defined against — a re-converted
+    or re-packed bundle of the same model must not change a single
+    prediction).  A :class:`repro.runtime.fault.ReplicaHealthTracker`
+    canary drives rollback: any shadow mismatch or candidate failure
+    evicts the canary and the swap rolls back with the incumbent still
+    serving.  Cutover is atomic — the group's stacked operands are
+    replaced as one reference, and every dispatch reads one consistent
+    snapshot, so no request ever observes a torn (half-swapped) bundle
+    (tests/test_serve_swap.py).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lut_infer as LI
+from repro.runtime.fault import ReplicaHealthTracker
+from repro.serve.engine import (DEFAULT_BUCKETS, _complete, _ReplicaExecutor,
+                                _Request, make_forward_fn, pick_bucket,
+                                route_least_loaded)
+from repro.serve.metrics import ServeMetrics
+from repro.serve.registry import ServeBundle
+
+
+class TenantOverloaded(RuntimeError):
+    """A request shed at the admission door (never enqueued)."""
+
+    def __init__(self, tenant: str, reason: str, detail: str = ""):
+        self.tenant = tenant
+        self.reason = reason  # "queue_full" | "rate_limited"
+        super().__init__(
+            f"tenant '{tenant}' shed request ({reason})"
+            + (f": {detail}" if detail else ""))
+
+
+@dataclass
+class Tenant:
+    """One tenant's serving contract: its bundle plus admission policy."""
+
+    name: str
+    bundle: ServeBundle
+    priority: int = 0                    # higher drains first
+    rate_limit: Optional[float] = None   # requests/s; None = unlimited
+    burst: Optional[int] = None          # token-bucket capacity
+    max_queue_depth: int = 256           # queued requests before shedding
+
+
+@dataclass
+class SwapReport:
+    """Outcome of one ``swap()`` run (see the state machine above)."""
+
+    tenant: str
+    status: str                          # committed | rolled_back | timeout
+    shadow_samples: int = 0              # mirrored rows compared
+    mismatches: int = 0
+    swap_latency_s: float = 0.0          # validate -> terminal state
+    cutover_latency_s: float = 0.0       # the atomic operand replacement
+    states: Tuple[str, ...] = ()
+    canary: List = field(default_factory=list)   # health.status() snapshot
+    error: str = ""
+
+
+class _TokenBucket:
+    """Classic token bucket; caller holds the tenant's group lock."""
+
+    def __init__(self, rate: float, burst: int):
+        if rate <= 0:
+            raise ValueError(f"rate_limit={rate} must be positive")
+        if burst < 1:
+            raise ValueError(f"burst={burst} must be >= 1")
+        self.rate = float(rate)
+        self.burst = float(burst)
+        self.tokens = float(burst)
+        self.t_last = time.monotonic()
+
+    def try_take(self, now: float) -> bool:
+        self.tokens = min(self.burst,
+                          self.tokens + (now - self.t_last) * self.rate)
+        self.t_last = now
+        if self.tokens >= 1.0:
+            self.tokens -= 1.0
+            return True
+        return False
+
+
+class _TenantRequest(_Request):
+    __slots__ = ("lane", "tenant")
+
+    def __init__(self, x: np.ndarray, lane: int, tenant: "_TenantState"):
+        super().__init__(x)
+        self.lane = lane
+        self.tenant = tenant
+
+
+class _TenantState:
+    """Engine-internal per-tenant state: queue, rate bucket, metrics."""
+
+    def __init__(self, spec: Tenant, lane: int, group: "_GeometryGroup"):
+        self.spec = spec
+        self.lane = lane
+        self.group = group
+        self.metrics = ServeMetrics()
+        self.pending: "deque[_TenantRequest]" = deque()
+        self.bucket = (None if spec.rate_limit is None else
+                       _TokenBucket(spec.rate_limit,
+                                    spec.burst or max(
+                                        1, int(spec.rate_limit))))
+
+
+def make_tenant_forward_fn(cfg) -> Callable:
+    """Jitted cross-tenant packed forward for one geometry group.
+
+    ``forward(x, tid, in_log_s, sms, pts, out_log_s) -> (B,) int32``
+    where ``tid`` is the per-row tenant lane and every operand carries a
+    leading tenant axis T.  Operands are jit *arguments*: all tenants of
+    the geometry share one compiled executable per batch shape, and a
+    hot-swap rebinds tables with zero retraces.
+
+    Bit-exactness vs the per-tenant serial path: each layer's address is
+    the block shift-matmul ``addr[b] = c[b] @ sms[tid[b]]``, computed as
+    an einsum against the per-row tenant one-hot.  All values involved
+    are non-negative integers below 2^20 carried in f32 (guarded at
+    conversion), so every partial sum is exactly representable and the
+    extra cross-tenant terms are exact zeros — the address, and
+    therefore every looked-up code, is bit-identical to running each
+    tenant alone.  ``forward.traces`` counts retraces (one per batch
+    shape, asserted in tests/test_serve_tenants.py).
+    """
+    beta = cfg.beta
+    beta_in = cfg.beta_in or cfg.beta
+    p = LI.packed_slots(beta)
+    slot_bits = p.bit_length() - 1
+    mask = (1 << beta) - 1
+    lo, hi = -(2 ** (beta_in - 1)), 2 ** (beta_in - 1) - 1
+    traces = [0]
+
+    def forward(x, tid, in_log_s, sms, pts, out_log_s):
+        traces[0] += 1  # python side effect: runs at trace time only
+        t = in_log_s.shape[0]
+        # Per-row input quantization: the gathered scale rows are the
+        # exact scalars the tenant's own quantizer would use, so the
+        # codes match quant.quant_codes bit for bit.
+        s_in = jnp.exp(in_log_s)[tid]                       # (B, F)
+        q = jnp.clip(jnp.round(x / s_in), lo, hi).astype(jnp.int32)
+        c = (q + 2 ** (beta_in - 1)).astype(jnp.float32)
+        onehot = (tid[:, None] == jnp.arange(t)[None, :]
+                  ).astype(jnp.float32)                     # (B, T)
+        for sm, pt in zip(sms, pts):
+            # Exact in f32: every operand is a non-negative integer, all
+            # partial sums stay < 2^20 (addresses), and the one-hot only
+            # contributes exact zeros — so any contraction order yields
+            # the identical address ``c[b] @ sm[tid[b]]``.  "highest"
+            # precision keeps accelerator backends in real f32.
+            addr = jnp.einsum("bw,bt,two->bo", c, onehot, sm,
+                              precision="highest"
+                              ).astype(jnp.int32)           # (B, O)
+            wsel = jax.lax.shift_right_logical(addr, slot_bits)
+            slot = addr & (p - 1)
+            o = pt.shape[1]
+            word = pt[tid[:, None], jnp.arange(o)[None, :], wsel]
+            code = jax.lax.shift_right_logical(word, beta * slot) & mask
+            c = code.astype(jnp.float32)
+        s_out = jnp.exp(out_log_s)[tid]                     # (B, O_last)
+        vals = (c - 2 ** (beta - 1)) * s_out
+        return jnp.argmax(vals, axis=-1).astype(jnp.int32)
+
+    fn = jax.jit(forward)
+    fn.traces = traces
+    return fn
+
+
+class _Shadow:
+    """One in-flight shadow deployment on a tenant lane.
+
+    The candidate's own single-bundle forward mirrors live rows; the
+    1-replica health tracker is the *canary*: any mismatch or candidate
+    failure records a failure, the canary evicts, and ``on_evict`` flips
+    the swap into rollback."""
+
+    def __init__(self, lane: int, forward: Callable, target: int,
+                 max_failures: int):
+        self.lane = lane
+        self.forward = forward
+        self.target = target
+        self.compared = 0
+        self.mismatches = 0
+        self.error = ""
+        self.finished = threading.Event()
+        self.aborted = False
+        self._lock = threading.Lock()
+
+        def _on_evict(rid, exc):
+            with self._lock:
+                self.aborted = True
+                if exc is not None and not self.error:
+                    self.error = str(exc)
+            self.finished.set()
+
+        self.health = ReplicaHealthTracker(
+            1, max_consecutive_failures=max_failures, on_evict=_on_evict)
+
+    def observe(self, x_rows: np.ndarray, primary_preds: np.ndarray) -> None:
+        """Mirror ``x_rows`` through the candidate and compare bit-exact."""
+        try:
+            got = np.asarray(self.forward(jnp.asarray(x_rows)))
+        except Exception as e:  # candidate unhealthy: canary failure
+            self.health.record_failure(0, e)
+            return
+        bad = int((got != primary_preds).sum())
+        with self._lock:
+            self.compared += len(x_rows)
+            self.mismatches += bad
+            done = self.compared >= self.target and not self.aborted
+        if bad:
+            self.health.record_failure(0, RuntimeError(
+                f"shadow mismatch: {bad}/{len(x_rows)} mirrored "
+                f"predictions diverge from the incumbent"))
+        else:
+            self.health.record_success(0)
+            if done:
+                self.finished.set()
+
+
+class _GeometryGroup:
+    """All tenants sharing one geometry key: stacked operands, one
+    jitted forward, one dispatcher, one executor pool."""
+
+    def __init__(self, key: tuple, cfg):
+        self.key = key
+        self.cfg = cfg
+        self.tenants: List[_TenantState] = []
+        self.cond = threading.Condition()      # guards tenant queues
+        self._state_lock = threading.Lock()    # guards operands + shadows
+        self._operands: Optional[tuple] = None
+        self._shadows: Dict[int, _Shadow] = {}
+        self.version = 0
+        self.forward = make_tenant_forward_fn(cfg)
+        self.executors: List["_TenantExecutor"] = []
+        self.health: Optional[ReplicaHealthTracker] = None
+        self.rr = 0
+        self.thread: Optional[threading.Thread] = None
+
+    # -- tenants / operands ------------------------------------------------
+
+    def add_tenant(self, state: _TenantState) -> None:
+        self.tenants.append(state)
+        self.tenants.sort(key=lambda t: (-t.spec.priority, t.lane))
+
+    def restack(self) -> None:
+        """Rebuild the stacked (T, ...) operand tuple from the current
+        bundles.  The whole tuple is replaced as ONE reference under the
+        state lock — executors snapshot it once per dispatch, which is
+        what makes cutover atomic."""
+        by_lane = sorted(self.tenants, key=lambda t: t.lane)
+        bundles = [t.spec.bundle for t in by_lane]
+        for b in bundles:
+            b.prepack()
+        in_log_s = jnp.asarray(np.stack(
+            [np.asarray(b.in_log_s, np.float32) for b in bundles]))
+        sms = [jnp.asarray(np.stack(
+            [np.asarray(b.shift_mats[i], np.float32) for b in bundles]))
+            for i in range(self.cfg.num_layers)]
+        pts = [jnp.asarray(np.stack(
+            [np.asarray(b.packed_tables[i], np.int32) for b in bundles]))
+            for i in range(self.cfg.num_layers)]
+        out_log_s = jnp.asarray(np.stack(
+            [np.asarray(b.layer_log_s[-1], np.float32) for b in bundles]))
+        ops = (in_log_s, sms, pts, out_log_s)
+        with self._state_lock:
+            self._operands = ops
+            self.version += 1
+
+    def operands(self) -> tuple:
+        with self._state_lock:
+            return self._operands
+
+    # -- shadows -----------------------------------------------------------
+
+    def install_shadow(self, shadow: _Shadow) -> None:
+        with self._state_lock:
+            if shadow.lane in self._shadows:
+                raise RuntimeError(
+                    f"a swap is already in flight on lane {shadow.lane}")
+            self._shadows[shadow.lane] = shadow
+
+    def remove_shadow(self, lane: int) -> None:
+        with self._state_lock:
+            self._shadows.pop(lane, None)
+
+    def mirror(self, x: np.ndarray, tid: np.ndarray,
+               preds: np.ndarray) -> None:
+        """Executor-side hook, after the primary futures resolved: feed
+        each active shadow its tenant's rows of this dispatch."""
+        with self._state_lock:
+            shadows = list(self._shadows.values())
+        for sh in shadows:
+            sel = tid == sh.lane
+            if sel.any():
+                sh.observe(x[sel], preds[sel])
+
+    # -- dispatcher-side queue accounting ---------------------------------
+
+    def has_work(self) -> bool:
+        return any(t.pending for t in self.tenants)
+
+    def pop(self, budget: int) -> Tuple[List[_TenantRequest], int]:
+        """Drain queued requests in descending tenant priority, up to
+        ``budget`` rows (one oversized request may exceed it — the
+        executor chunks).  Caller holds ``cond``."""
+        batch: List[_TenantRequest] = []
+        total = 0
+        for t in self.tenants:  # sorted by (-priority, lane)
+            while t.pending and total < budget:
+                r = t.pending.popleft()
+                batch.append(r)
+                total += r.n
+        return batch, total
+
+
+class _TenantExecutor(_ReplicaExecutor):
+    """A replica worker for one geometry group: threads the per-row
+    tenant id through the padded bucket dispatch, snapshots the group
+    operands once per dispatch (atomicity), attributes per-request
+    metrics to each request's tenant, and mirrors served rows to any
+    active shadow *after* resolving the primary futures."""
+
+    def __init__(self, rid: int, group: _GeometryGroup, *,
+                 buckets: Sequence[int], engine_metrics: ServeMetrics,
+                 health: ReplicaHealthTracker):
+        super().__init__(rid, group.forward, buckets=buckets, device=None,
+                         engine_metrics=engine_metrics, health=health)
+        self._group = group
+
+    def warmup(self, in_features: int) -> None:
+        ops = self._group.operands()
+        for b in self._buckets:
+            x = np.zeros((b, in_features), np.float32)
+            tid = np.zeros((b,), np.int32)
+            self._forward(jnp.asarray(x), jnp.asarray(tid),
+                          *ops).block_until_ready()
+
+    def _serve(self, batch: List[_TenantRequest], total: int,
+               depth: int) -> None:
+        x = (batch[0].x if len(batch) == 1
+             else np.concatenate([r.x for r in batch], axis=0))
+        tid = np.concatenate(
+            [np.full(r.n, r.lane, np.int32) for r in batch])
+        ops = self._group.operands()  # ONE snapshot for the whole dispatch
+        try:
+            preds, padded = self._run(x, tid, ops)
+        except Exception as e:
+            for r in batch:
+                _complete(r.future, exc=e)
+            self._health.record_failure(self.rid, e)
+            return
+        self._health.record_success(self.rid)
+        t_done = time.perf_counter()
+        off = 0
+        for r in batch:
+            delivered = _complete(r.future, preds[off:off + r.n])
+            off += r.n
+            if delivered:
+                lat = t_done - r.t_submit
+                r.tenant.metrics.record_request(lat, r.n)
+                self.metrics.record_request(lat, r.n)
+                self._engine_metrics.record_request(lat, r.n)
+        self.metrics.record_batch(total, padded, depth)
+        self._engine_metrics.record_batch(total, padded, depth)
+        # Shadows see exactly what was served, only after every client
+        # future resolved — mirroring adds capacity cost, never latency
+        # to the batch being mirrored.
+        self._group.mirror(x, tid, preds)
+
+    def _run(self, x: np.ndarray, tid: np.ndarray,
+             ops: tuple) -> Tuple[np.ndarray, int]:
+        n = x.shape[0]
+        max_bucket = self._buckets[-1]
+        outs: List[np.ndarray] = []
+        padded = 0
+        for s in range(0, n, max_bucket):
+            chunk = x[s:s + max_bucket]
+            tchunk = tid[s:s + max_bucket]
+            m = chunk.shape[0]
+            b = pick_bucket(m, self._buckets)
+            if m < b:
+                chunk = np.concatenate(
+                    [chunk, np.zeros((b - m, x.shape[1]), x.dtype)], axis=0)
+                # lane 0 is always a valid row of the stacked operands;
+                # the padded rows' predictions are sliced off below.
+                tchunk = np.concatenate(
+                    [tchunk, np.zeros(b - m, np.int32)])
+            out = np.asarray(self._forward(jnp.asarray(chunk),
+                                           jnp.asarray(tchunk), *ops))
+            outs.append(out[:m])
+            padded += b
+        return np.concatenate(outs, axis=0), padded
+
+
+class MultiTenantEngine:
+    """Serve N ServeBundles behind one admission-controlled front door
+    (see module docstring)."""
+
+    def __init__(self, tenants: Sequence[Tenant], *,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 max_wait_ms: float = 2.0,
+                 replicas: int = 1,
+                 metrics: Optional[ServeMetrics] = None):
+        if not tenants:
+            raise ValueError("MultiTenantEngine needs at least one tenant")
+        if list(buckets) != sorted(set(buckets)):
+            raise ValueError(f"buckets must be strictly increasing: {buckets}")
+        if replicas < 1:
+            raise ValueError(f"replicas={replicas} must be >= 1")
+        self.buckets = tuple(int(b) for b in buckets)
+        self.max_wait_s = max_wait_ms / 1e3
+        self.metrics = metrics or ServeMetrics()
+        self._groups: Dict[tuple, _GeometryGroup] = {}
+        self._tenants: Dict[str, _TenantState] = {}
+        self._closed = False
+        self._started = False
+        self._lifecycle = threading.Lock()
+        for spec in tenants:
+            if spec.name in self._tenants:
+                raise ValueError(f"duplicate tenant name '{spec.name}'")
+            key = spec.bundle.geometry_key
+            group = self._groups.get(key)
+            if group is None:
+                group = self._groups[key] = _GeometryGroup(
+                    key, spec.bundle.cfg)
+            state = _TenantState(spec, lane=len(
+                [t for t in self._tenants.values() if t.group is group]),
+                group=group)
+            group.add_tenant(state)
+            self._tenants[spec.name] = state
+        for group in self._groups.values():
+            group.restack()
+            group.health = ReplicaHealthTracker(replicas)
+            group.executors = [
+                _TenantExecutor(i, group, buckets=self.buckets,
+                                engine_metrics=self.metrics,
+                                health=group.health)
+                for i in range(replicas)]
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def num_groups(self) -> int:
+        return len(self._groups)
+
+    @property
+    def tenant_names(self) -> List[str]:
+        return list(self._tenants)
+
+    def tenant_metrics(self, name: str) -> ServeMetrics:
+        return self._tenant(name).metrics
+
+    def group_of(self, name: str) -> _GeometryGroup:
+        return self._tenant(name).group
+
+    def _tenant(self, name: str) -> _TenantState:
+        try:
+            return self._tenants[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown tenant '{name}' (have {sorted(self._tenants)})"
+            ) from None
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> "MultiTenantEngine":
+        with self._lifecycle:
+            if self._closed:
+                raise RuntimeError("engine is closed")
+            if self._started:
+                return self
+            self._started = True
+        for group in self._groups.values():
+            for ex in group.executors:
+                ex.start()
+            group.thread = threading.Thread(
+                target=self._dispatch_loop, args=(group,), daemon=True,
+                name=f"mt-serve-dispatch-{len(group.tenants)}t")
+            group.thread.start()
+        return self
+
+    def warmup(self) -> None:
+        """Compile every bucket shape for every geometry group — one
+        trace per (group, bucket), shared by all the group's tenants."""
+        for group in self._groups.values():
+            for ex in group.executors:
+                ex.warmup(group.cfg.in_features)
+
+    def close(self) -> None:
+        """Stop admission, drain every *admitted* request, join all
+        threads.  Idempotent: repeated (or concurrent) closes are
+        no-ops after the first."""
+        with self._lifecycle:
+            if self._closed:
+                return
+            self._closed = True
+            started = self._started
+        for group in self._groups.values():
+            with group.cond:
+                group.cond.notify_all()
+        if started:
+            for group in self._groups.values():
+                if group.thread is not None:
+                    group.thread.join()
+                    group.thread = None
+                for ex in group.executors:
+                    ex.stop()
+        # Never started: nothing is draining the queues — fail any
+        # requests admitted before close instead of leaving them pending.
+        for group in self._groups.values():
+            with group.cond:
+                leftovers, _ = group.pop(float("inf"))
+            for r in leftovers:
+                _complete(r.future, exc=RuntimeError("engine closed"))
+
+    def __enter__(self) -> "MultiTenantEngine":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- client API --------------------------------------------------------
+
+    def submit(self, tenant: str, x: np.ndarray):
+        """Admission-controlled enqueue for one tenant.  Raises
+        :class:`TenantOverloaded` (and bumps the shed counters) when the
+        tenant's rate limit or queue bound would be exceeded — the
+        backpressure signal — and RuntimeError once the engine is
+        closed.  Returns a Future of the (n,) int32 predictions.
+        Requests admitted before ``start()`` queue up (still subject to
+        the tenant's bounds) and are served once the engine starts —
+        the dispatcher drains strictly by priority, which the
+        scheduling tests exploit for determinism."""
+        state = self._tenant(tenant)
+        x = np.asarray(x, np.float32)
+        if x.ndim == 1:
+            x = x[None, :]
+        f = state.group.cfg.in_features
+        if x.ndim != 2 or x.shape[1] != f:
+            raise ValueError(f"request shape {x.shape} != (n, {f})")
+        req = _TenantRequest(x, state.lane, state)
+        group = state.group
+        with group.cond:
+            if self._closed:
+                raise RuntimeError("engine is closed")
+            now = time.monotonic()
+            if state.bucket is not None and not state.bucket.try_take(now):
+                state.metrics.record_shed()
+                self.metrics.record_shed()
+                raise TenantOverloaded(
+                    tenant, "rate_limited",
+                    f"{state.spec.rate_limit:.0f} req/s exceeded")
+            if len(state.pending) >= state.spec.max_queue_depth:
+                state.metrics.record_shed()
+                self.metrics.record_shed()
+                raise TenantOverloaded(
+                    tenant, "queue_full",
+                    f"{len(state.pending)} queued >= bound "
+                    f"{state.spec.max_queue_depth}")
+            state.pending.append(req)
+            state.metrics.record_admitted()
+            self.metrics.record_admitted()
+            group.cond.notify_all()
+        return req.future
+
+    def predict(self, tenant: str, x: np.ndarray) -> np.ndarray:
+        if not self._started:
+            self.start()
+        return self.submit(tenant, x).result()
+
+    # -- dispatcher (one thread per geometry group) ------------------------
+
+    def _dispatch_loop(self, group: _GeometryGroup) -> None:
+        max_bucket = self.buckets[-1]
+        while True:
+            with group.cond:
+                while not group.has_work():
+                    if self._closed:
+                        return
+                    group.cond.wait(timeout=0.05)
+                batch, total = group.pop(max_bucket)
+            deadline = time.perf_counter() + self.max_wait_s
+            # Coalesce across tenants until the largest bucket fills or
+            # the admission window closes (skipped entirely once the
+            # engine is draining).
+            while total < max_bucket and not self._closed:
+                wait = deadline - time.perf_counter()
+                if wait <= 0:
+                    break
+                with group.cond:
+                    if not group.has_work():
+                        group.cond.wait(timeout=wait)
+                    more, n = group.pop(max_bucket - total)
+                if more:
+                    batch += more
+                    total += n
+            self._route(group, batch, total)
+
+    def _route(self, group: _GeometryGroup, batch: List[_TenantRequest],
+               total: int) -> None:
+        with group.cond:
+            depth = sum(len(t.pending) for t in group.tenants)
+        chosen = route_least_loaded(group.executors, group.health, group.rr)
+        if chosen is None:
+            err = RuntimeError(
+                f"no healthy replicas (of {len(group.executors)}) in "
+                f"geometry group — failure counts "
+                f"{group.health.failure_counts()}")
+            for r in batch:
+                _complete(r.future, exc=err)
+            return
+        group.rr = chosen.rid
+        chosen.dispatch(batch, total, depth)
+
+    # -- hot-swap deployment ----------------------------------------------
+
+    def swap(self, tenant: str, candidate: ServeBundle, *,
+             shadow_samples: int = 64, timeout_s: float = 30.0,
+             max_shadow_failures: int = 1) -> SwapReport:
+        """Hot-swap ``tenant`` onto ``candidate``.
+
+        State machine: validate -> shadow -> cutover -> committed.  The
+        shadow phase mirrors live traffic through the candidate until
+        ``shadow_samples`` rows agreed bit-exactly with the incumbent;
+        any mismatch (or candidate failure) trips the 1-replica canary
+        (``runtime.fault.ReplicaHealthTracker``) and rolls the swap back
+        with the incumbent untouched.  ``shadow_samples=0`` skips the
+        shadow check — an explicit opt-out for candidates that are
+        *supposed* to change predictions.  No live traffic within
+        ``timeout_s`` also rolls back (status "timeout").  Cutover is
+        the atomic replacement of the group's stacked operands; the old
+        bundle is evicted from the group on commit.
+        """
+        state = self._tenant(tenant)
+        group = state.group
+        t0 = time.perf_counter()
+        states = ["validate"]
+        if candidate.geometry_key != group.key:
+            raise ValueError(
+                f"candidate geometry {candidate.geometry_key} does not "
+                f"match tenant '{tenant}' group {group.key} — hot-swap "
+                f"requires identical operand shapes")
+        candidate.prepack()
+        compared = mismatches = 0
+        canary_status: List = []
+        error = ""
+        if shadow_samples > 0:
+            states.append("shadow")
+            shadow = _Shadow(
+                state.lane,
+                make_forward_fn(candidate, use_kernel=False),
+                shadow_samples, max_shadow_failures)
+            group.install_shadow(shadow)
+            try:
+                shadow.finished.wait(timeout=timeout_s)
+            finally:
+                group.remove_shadow(state.lane)
+            compared, mismatches = shadow.compared, shadow.mismatches
+            canary_status = shadow.health.status()
+            error = shadow.error
+            if shadow.aborted:
+                states.append("rolled_back")
+                return SwapReport(
+                    tenant=tenant, status="rolled_back",
+                    shadow_samples=compared, mismatches=mismatches,
+                    swap_latency_s=time.perf_counter() - t0,
+                    states=tuple(states), canary=canary_status,
+                    error=error or "shadow canary evicted")
+            if not shadow.finished.is_set():
+                states.append("rolled_back")
+                return SwapReport(
+                    tenant=tenant, status="timeout",
+                    shadow_samples=compared, mismatches=mismatches,
+                    swap_latency_s=time.perf_counter() - t0,
+                    states=tuple(states), canary=canary_status,
+                    error=f"only {compared}/{shadow_samples} rows "
+                          f"mirrored within {timeout_s:.1f}s")
+        states.append("cutover")
+        t_cut = time.perf_counter()
+        state.spec.bundle = candidate   # evicts the incumbent reference
+        group.restack()                 # atomic: one reference swap
+        cutover_s = time.perf_counter() - t_cut
+        states.append("committed")
+        return SwapReport(
+            tenant=tenant, status="committed",
+            shadow_samples=compared, mismatches=mismatches,
+            swap_latency_s=time.perf_counter() - t0,
+            cutover_latency_s=cutover_s, states=tuple(states),
+            canary=canary_status)
+
+
+__all__ = [
+    "MultiTenantEngine",
+    "SwapReport",
+    "Tenant",
+    "TenantOverloaded",
+    "make_tenant_forward_fn",
+]

@@ -1,8 +1,9 @@
 """The CI perf-regression gate (benchmarks/run.py --check): the checker
 must pass on an honest fresh run and fail on a doctored baseline for
 every gated section — cascade throughput, scanned-trainer steps/s, the
-fused fwd+bwd kernel-vs-jnp training step, and fused-converter
-entries/s — and must refuse to "pass" when it compared nothing.
+fused fwd+bwd kernel-vs-jnp training step, fused-converter entries/s,
+and the multi-tenant serving consolidation ratio — and must refuse to
+"pass" when it compared nothing.
 """
 import copy
 import os
@@ -41,6 +42,11 @@ def _payload():
                                     "speedup": 2.2, "gate": True},
             },
         },
+        "serve_tenants": {
+            "aggregate_sps": 5.0e4,
+            "single_engine_sps": 4.0e4,
+            "consolidation_ratio": 1.25,
+        },
     }
 
 
@@ -58,6 +64,7 @@ def test_small_regression_within_threshold_passes():
     fresh["cascade"]["sweep"][0]["fused_lookups_per_s"] *= 0.80
     fresh["convert"]["geometries"]["neuralut-jsc-5l"][
         "entries_per_s"] *= 0.80
+    fresh["serve_tenants"]["aggregate_sps"] *= 0.80
     assert check_regression(base, fresh, 0.25) == []
 
 
@@ -70,6 +77,7 @@ def test_doctored_baseline_fails_each_section():
         ("train_kernel", lambda d: d["train_kernel"]),
         ("convert",
          lambda d: d["convert"]["geometries"]["neuralut-hdr-5l"]),
+        ("serve_tenants", lambda d: d["serve_tenants"]),
     ]:
         base = _payload()
         row = path(base)
@@ -129,8 +137,12 @@ def test_missing_metric_key_is_flagged():
     base, fresh = _payload(), _payload()
     del fresh["train"]["scanned_steps_per_s"]
     del fresh["train_kernel"]["speedup"]
+    del fresh["serve_tenants"]["consolidation_ratio"]
     problems = check_regression(base, fresh, 0.25)
     assert any("train" in p and "missing" in p for p in problems)
+    assert any(p.startswith("serve_tenants") and "missing" in p
+               for p in check_regression(base, fresh, 0.25,
+                                         metric="speedup"))
     assert any(p.startswith("train_kernel") and "missing" in p
                for p in check_regression(base, fresh, 0.25,
                                          metric="speedup"))

@@ -128,13 +128,33 @@ def test_cancelled_future_does_not_kill_dispatcher():
     assert (got == ref).all()
 
 
-def test_submit_after_close_raises():
+def test_submit_after_close_fails_fast_with_clear_error():
     bundle, _ = _tiny_bundle()
     eng = LUTServeEngine(bundle, use_kernel=False)
     eng.start()
     eng.close()
-    with pytest.raises(RuntimeError):
+    # Fails at the door (no enqueue, no hang) and says why.
+    with pytest.raises(RuntimeError, match="closed"):
         eng.submit(np.zeros((1, bundle.cfg.in_features), np.float32))
+
+
+def test_double_close_is_idempotent():
+    """close() is a terminal no-op after the first call — started or
+    not, repeated closes must neither raise nor hang on joined threads."""
+    bundle, _ = _tiny_bundle()
+    eng = LUTServeEngine(bundle, use_kernel=False)
+    eng.start()
+    eng.predict(np.zeros((2, bundle.cfg.in_features), np.float32))
+    eng.close()
+    eng.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.submit(np.zeros((1, bundle.cfg.in_features), np.float32))
+    never_started = LUTServeEngine(bundle, use_kernel=False)
+    never_started.close()
+    never_started.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        never_started.submit(
+            np.zeros((1, bundle.cfg.in_features), np.float32))
 
 
 def test_close_resolves_every_inflight_future():
@@ -253,3 +273,18 @@ def test_metrics_empty_report_is_nan_safe():
     r = ServeMetrics().report()
     assert r["requests"] == 0
     assert np.isnan(r["p50_ms"]) and np.isnan(r["throughput_sps"])
+
+
+def test_metrics_admission_counters():
+    """shed_rate = shed / (admitted + shed): the fraction of *offered*
+    load turned away at the multi-tenant admission door."""
+    m = ServeMetrics()
+    assert m.shed == 0 and m.shed_rate == 0.0  # no offered load yet
+    m.record_admitted()
+    m.record_admitted(2)
+    m.record_shed()
+    assert m.shed == 1
+    assert m.shed_rate == pytest.approx(0.25)
+    r = m.report()
+    assert r["admitted"] == 3.0 and r["shed"] == 1.0
+    assert r["shed_rate"] == pytest.approx(0.25)

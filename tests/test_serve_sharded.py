@@ -412,3 +412,111 @@ def test_sharded_bit_exact_all_geometries_8_devices():
                          text=True, timeout=560, env=env)
     assert out.returncode == 0, out.stderr[-4000:]
     assert "ALL-GEOMETRIES-OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Property tests: layout choice + padding inertness over sampled geometries
+#
+# hypothesis drives the sampling when installed (the dev extra); without
+# it the same properties run over a fixed-seed random sample so the
+# invariants are never silently unchecked.
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _check_choose_layout(total, budget, r):
+    from repro.serve.sharded import choose_layout
+    mode, per = choose_layout(total, budget, r, "auto")
+    if total <= budget:
+        assert mode == "replicated" and per == total
+    else:
+        assert mode == "o_sharded"
+        assert per == -(-total // r)          # ceil split of the stack
+        assert per * r >= total >= per        # covers all bytes, <= total
+    for forced in ("replicated", "o_sharded"):
+        fmode, fper = choose_layout(total, budget, r, forced)
+        assert fmode == forced
+        assert fper == (total if forced == "replicated"
+                        else -(-total // r))
+    with pytest.raises(ValueError):
+        choose_layout(total, budget, 0)
+    with pytest.raises(ValueError):
+        choose_layout(total, budget, r, "diagonal")
+
+
+# (beta, fan_in) pairs whose table size 2^(beta*fan) is packable into
+# whole int32 words (pack_tables requires T % packed_slots(beta) == 0).
+_PACKABLE = [(2, 2), (2, 3), (3, 1), (3, 2)]
+
+
+def _check_padding_inert(widths, in_f, beta, fan, r, seed):
+    from repro.kernels.ref import lut_cascade_packed_ref
+    cfg = NeuraLUTConfig(
+        name=f"prop-{seed}", in_features=in_f, layer_widths=tuple(widths),
+        num_classes=widths[-1], beta=beta, fan_in=fan)
+    bundle = _bundle(cfg, seed=seed)
+    plan = plan_shards(bundle, r, mode="o_sharded")
+    assert len(plan.pad_widths) == cfg.num_layers
+    for o, o_pad in zip(cfg.layer_widths, plan.pad_widths):
+        assert o_pad % r == 0 and o <= o_pad < o + r
+    for sm, pt, o_pad in zip(plan.shift_mats, plan.packed_tables,
+                             plan.pad_widths):
+        assert sm.shape[1] == o_pad and pt.shape[0] == o_pad
+    # Inertness: the padded operands through the plain (single-device)
+    # packed cascade still match the unpadded oracle on the real lanes.
+    params = bundle.serve_params()
+    x = np.random.default_rng(seed).normal(
+        0, 1, (5, cfg.in_features)).astype(np.float32)
+    codes = LI.input_codes(cfg, params, jnp.asarray(x))
+    got = np.asarray(lut_cascade_packed_ref(
+        codes, [jnp.asarray(m) for m in plan.shift_mats],
+        [jnp.asarray(t) for t in plan.packed_tables], cfg.beta))
+    oracle = np.asarray(LI.lut_forward(cfg, bundle.tables, bundle.statics,
+                                       codes))
+    np.testing.assert_array_equal(got[:, :cfg.layer_widths[-1]], oracle)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=40, deadline=None)
+    @given(total=st.integers(0, 1 << 26), budget=st.integers(1, 1 << 26),
+           r=st.integers(1, 16))
+    def test_choose_layout_properties(total, budget, r):
+        _check_choose_layout(total, budget, r)
+
+    @settings(max_examples=12, deadline=None)
+    @given(data=st.data())
+    def test_o_sharded_padding_inert_property(data):
+        widths = data.draw(st.lists(st.integers(1, 9), min_size=1,
+                                    max_size=3))
+        in_f = data.draw(st.integers(2, 7))
+        beta, fan = data.draw(st.sampled_from(_PACKABLE))
+        r = data.draw(st.integers(1, 4))
+        seed = data.draw(st.integers(0, 999))
+        _check_padding_inert(widths, in_f, beta, fan, r, seed)
+
+else:
+
+    def test_choose_layout_properties():
+        rng = np.random.default_rng(0)
+        for _ in range(60):
+            _check_choose_layout(int(rng.integers(0, 1 << 26)),
+                                 int(rng.integers(1, 1 << 26)),
+                                 int(rng.integers(1, 17)))
+        _check_choose_layout(0, 1, 1)          # empty stack fits anywhere
+        _check_choose_layout(8, 8, 3)          # exactly at budget
+        _check_choose_layout(9, 8, 3)          # one byte over
+
+    def test_o_sharded_padding_inert_property():
+        rng = np.random.default_rng(1)
+        for seed in range(10):
+            widths = [int(w) for w in
+                      rng.integers(1, 10, size=int(rng.integers(1, 4)))]
+            beta, fan = _PACKABLE[int(rng.integers(0, len(_PACKABLE)))]
+            _check_padding_inert(widths, int(rng.integers(2, 8)), beta,
+                                 fan, int(rng.integers(1, 5)), seed)

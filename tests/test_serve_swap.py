@@ -1,0 +1,236 @@
+"""Hot-swap deployment state machine (MultiTenantEngine.swap).
+
+The swap contract: a candidate bundle replaces a live tenant's incumbent
+only after mirrored live traffic (the *shadow* phase) agreed with the
+incumbent **bit-exactly** — the same invariant the whole serving stack
+is built on, applied to deployment.  This suite locks down:
+
+  * a bit-identical candidate (a re-packed redeploy of the same tables)
+    commits, with the full validate -> shadow -> cutover -> committed
+    state trace and zero mismatches;
+
+  * a doctored-table candidate is caught by the shadow check: the swap
+    rolls back, the canary health tracker shows the eviction, and the
+    incumbent keeps serving its exact old predictions;
+
+  * a candidate whose forward *fails* (corrupt operands) also trips the
+    canary and rolls back — rollback does not require a clean mismatch;
+
+  * cutover is **atomic**: under concurrent traffic spanning the swap,
+    every response is entirely old-bundle or entirely new-bundle
+    predictions — no request ever observes a torn bundle;
+
+  * a geometry-mismatched candidate is refused outright, and a shadow
+    phase that sees no traffic times out and rolls back;
+
+  * the registry's version listing feeds the deployment path: saving a
+    v1 next to a v0 and swapping onto the loaded v1 commits cleanly.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.nl_config import NeuraLUTConfig
+from repro.serve import (MultiTenantEngine, ServeBundle, TableRegistry,
+                         Tenant)
+
+from test_serve_tenants import _bundle, _oracle_preds  # noqa: E402
+
+CFG = NeuraLUTConfig(name="swap-tiny", in_features=6, layer_widths=(8, 3),
+                     num_classes=3, beta=2, fan_in=2)
+
+
+def _clone_bundle(src):
+    """A distinct ServeBundle object with byte-identical operands — what
+    a re-converted/re-packed redeploy of the same model looks like."""
+    return ServeBundle(
+        cfg=src.cfg,
+        tables=[t.copy() for t in src.tables],
+        statics=[{k: v.copy() for k, v in s.items()} for s in src.statics],
+        in_log_s=src.in_log_s.copy(),
+        layer_log_s=[s.copy() for s in src.layer_log_s])
+
+
+def _doctored_bundle(src, ref_preds):
+    """Byte-identical except the last layer's table is rewritten to
+    force every prediction to one class the incumbent does not always
+    predict — guaranteed shadow mismatches on any probe set."""
+    bad = _clone_bundle(src)
+    k = (int(ref_preds[0]) + 1) % src.cfg.num_classes
+    bad.tables[-1][:, :] = 0
+    bad.tables[-1][k, :] = 2 ** src.cfg.beta - 1
+    return bad
+
+
+class _Traffic:
+    """Background client hammering one tenant with a fixed probe batch
+    (what the shadow phase mirrors)."""
+
+    def __init__(self, eng, tenant, x):
+        self.results = []
+        self._stop = threading.Event()
+
+        def loop():
+            while not self._stop.is_set():
+                try:
+                    self.results.append(
+                        np.asarray(eng.submit(tenant, x).result(timeout=10)))
+                except Exception:
+                    return
+        self._thread = threading.Thread(target=loop, daemon=True)
+
+    def __enter__(self):
+        self._thread.start()
+        return self
+
+    def __exit__(self, *exc):
+        self._stop.set()
+        self._thread.join()
+
+
+def test_clean_swap_commits_with_zero_mismatches():
+    inc = _bundle(CFG, seed=0)
+    x = np.random.default_rng(1).normal(
+        0, 1, (8, CFG.in_features)).astype(np.float32)
+    with MultiTenantEngine([Tenant("a", inc)], max_wait_ms=0.5) as eng:
+        eng.warmup()
+        with _Traffic(eng, "a", x):
+            rep = eng.swap("a", _clone_bundle(inc), shadow_samples=24,
+                           timeout_s=30.0)
+    assert rep.status == "committed"
+    assert rep.states == ("validate", "shadow", "cutover", "committed")
+    assert rep.shadow_samples >= 24 and rep.mismatches == 0
+    assert rep.swap_latency_s > 0 and rep.cutover_latency_s > 0
+    assert rep.canary == [{"replica": 0, "healthy": True, "failures": 0,
+                           "consecutive": 0}]
+
+
+def test_doctored_candidate_rolls_back_and_incumbent_keeps_serving():
+    inc = _bundle(CFG, seed=0)
+    x = np.random.default_rng(2).normal(
+        0, 1, (8, CFG.in_features)).astype(np.float32)
+    ref = _oracle_preds(inc, x)
+    with MultiTenantEngine([Tenant("a", inc)], max_wait_ms=0.5) as eng:
+        eng.warmup()
+        with _Traffic(eng, "a", x):
+            rep = eng.swap("a", _doctored_bundle(inc, ref),
+                           shadow_samples=24, timeout_s=30.0)
+        assert rep.status == "rolled_back"
+        assert rep.states[-1] == "rolled_back" and "cutover" not in rep.states
+        assert rep.mismatches > 0
+        assert "mismatch" in rep.error
+        assert rep.canary[0]["healthy"] is False  # the evicted canary
+        # Rollback means the incumbent is untouched: still bit-exact.
+        np.testing.assert_array_equal(eng.predict("a", x), ref)
+
+
+def test_failing_candidate_forward_rolls_back():
+    """Corrupt candidate operands (a shift matrix of the wrong shape)
+    make the shadow forward raise; the canary records the failure and
+    the swap rolls back instead of crashing a serving thread."""
+    inc = _bundle(CFG, seed=0)
+    x = np.random.default_rng(3).normal(
+        0, 1, (4, CFG.in_features)).astype(np.float32)
+    bad = _clone_bundle(inc).prepack()
+    bad.shift_mats = [np.zeros((2, 2), np.float32)
+                      for _ in bad.shift_mats]  # geometry key still matches
+    with MultiTenantEngine([Tenant("a", inc)], max_wait_ms=0.5) as eng:
+        eng.warmup()
+        with _Traffic(eng, "a", x):
+            rep = eng.swap("a", bad, shadow_samples=8, timeout_s=30.0)
+        assert rep.status == "rolled_back"
+        assert rep.canary[0]["healthy"] is False
+        np.testing.assert_array_equal(eng.predict("a", x),
+                                      _oracle_preds(inc, x))
+
+
+def test_cutover_is_atomic_no_torn_responses():
+    """Swap to a genuinely different bundle (shadow explicitly skipped)
+    under concurrent traffic: every response observed across the
+    cutover must match the old bundle or the new bundle *in full*."""
+    old = _bundle(CFG, seed=0)
+    new = _bundle(CFG, seed=9)
+    x = np.random.default_rng(4).normal(
+        0, 1, (16, CFG.in_features)).astype(np.float32)
+    ref_old, ref_new = _oracle_preds(old, x), _oracle_preds(new, x)
+    assert not np.array_equal(ref_old, ref_new)  # the probe distinguishes
+    with MultiTenantEngine([Tenant("a", old)], max_wait_ms=0.2) as eng:
+        eng.warmup()
+        with _Traffic(eng, "a", x) as traffic:
+            for _ in range(3):  # several cutovers while traffic flows
+                assert eng.swap("a", new, shadow_samples=0
+                                ).status == "committed"
+                assert eng.swap("a", old, shadow_samples=0
+                                ).status == "committed"
+        assert len(traffic.results) > 0
+        for got in traffic.results:
+            assert (np.array_equal(got, ref_old)
+                    or np.array_equal(got, ref_new)), \
+                "torn response: mixes old- and new-bundle predictions"
+
+
+def test_geometry_mismatch_refused():
+    inc = _bundle(CFG, seed=0)
+    other = _bundle(NeuraLUTConfig(
+        name="swap-other", in_features=5, layer_widths=(6, 3),
+        num_classes=3, beta=2, fan_in=2), seed=1)
+    with MultiTenantEngine([Tenant("a", inc)]) as eng:
+        with pytest.raises(ValueError, match="geometry"):
+            eng.swap("a", other)
+
+
+def test_shadow_without_traffic_times_out_and_rolls_back():
+    inc = _bundle(CFG, seed=0)
+    with MultiTenantEngine([Tenant("a", inc)]) as eng:
+        rep = eng.swap("a", _clone_bundle(inc), shadow_samples=4,
+                       timeout_s=0.3)
+    assert rep.status == "timeout"
+    assert rep.shadow_samples == 0 and "0/4" in rep.error
+    assert rep.states[-1] == "rolled_back"
+
+
+def test_registry_versions_feed_the_swap_path(tmp_path):
+    """Deployment loop end to end: v0 serves, v1 is saved next to it,
+    ``TableRegistry.versions`` lists both, and the loaded v1 (a
+    re-packed redeploy) shadow-commits over the live v0."""
+    reg = TableRegistry(str(tmp_path))
+    v0, v1 = _bundle(CFG, seed=0), _clone_bundle(_bundle(CFG, seed=0))
+    reg.save("m", v0, version=0)
+    reg.save("m", v1, version=1)
+    assert reg.versions("m") == [0, 1]
+    assert reg.versions("absent") == []
+    inc = reg.load("m", version=0)
+    cand = reg.load("m", version=1)
+    x = np.random.default_rng(5).normal(
+        0, 1, (8, CFG.in_features)).astype(np.float32)
+    with MultiTenantEngine([Tenant("m", inc)], max_wait_ms=0.5) as eng:
+        eng.warmup()
+        with _Traffic(eng, "m", x):
+            rep = eng.swap("m", cand, shadow_samples=8, timeout_s=30.0)
+    assert rep.status == "committed" and rep.mismatches == 0
+
+
+def test_concurrent_swap_on_same_lane_refused():
+    """Two in-flight shadow deployments on one tenant lane would mirror
+    into each other's sample budget; the second must be refused."""
+    inc = _bundle(CFG, seed=0)
+    with MultiTenantEngine([Tenant("a", inc)]) as eng:
+        reports, errors = [], []
+
+        def swapper():
+            try:
+                reports.append(eng.swap("a", _clone_bundle(inc),
+                                        shadow_samples=4, timeout_s=1.0))
+            except RuntimeError as e:
+                errors.append(e)
+
+        threads = [threading.Thread(target=swapper) for _ in range(2)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    # One swap ran the shadow phase (timing out — no traffic), the other
+    # was refused while it was in flight.
+    assert len(errors) == 1 and "already in flight" in str(errors[0])
+    assert len(reports) == 1 and reports[0].status == "timeout"

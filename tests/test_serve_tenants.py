@@ -1,0 +1,354 @@
+"""Multi-tenant serving platform (repro.serve.tenants).
+
+The serving correctness suite for :class:`MultiTenantEngine`, covering
+the four properties the platform exists to provide:
+
+  * cross-tenant batch packing is **bit-exact** vs per-tenant serial
+    serving (the ``lut_infer`` oracle) on every ``configs/neuralut_*``
+    geometry — the one-hot shift-matmul and per-row scale gather must
+    not change a single prediction;
+
+  * **isolation**: one tenant's overload sheds only its own traffic
+    (bounded queues + token-bucket rate limits, counted per tenant in
+    ``ServeMetrics.shed_rate``), and under forced overload the
+    low-priority tenant sheds while the high-priority tenant's latency
+    stays bounded — the ISSUE's acceptance scenario;
+
+  * **priority scheduling** is strict: the dispatcher drains queued
+    requests in descending tenant priority;
+
+  * **consolidation** shares compiles: N same-geometry tenants behind
+    one group trace once per batch bucket, not once per tenant.
+
+The hot-swap state machine has its own suite (tests/test_serve_swap.py).
+"""
+import importlib
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import lut_infer as LI
+from repro.core.nl_config import NeuraLUTConfig
+from repro.serve import (MultiTenantEngine, ServeBundle, Tenant,
+                         TenantOverloaded)
+from repro.serve.tenants import _TokenBucket
+
+from test_lut_cascade import _random_net  # noqa: E402  (same-geometry nets)
+
+ALL_GEOMETRIES = [("neuralut_hdr_5l", "full"), ("neuralut_hdr_5l", "reduced"),
+                  ("neuralut_jsc_2l", "full"), ("neuralut_jsc_2l", "reduced"),
+                  ("neuralut_jsc_5l", "full"), ("neuralut_jsc_5l", "reduced")]
+
+
+def _tiny_cfg(name="mt-tiny"):
+    return NeuraLUTConfig(name=name, in_features=6, layer_widths=(8, 3),
+                          num_classes=3, beta=2, fan_in=2)
+
+
+def _bundle(cfg, seed):
+    """Random tables AND random (nonzero) quantizer scales: two tenants
+    of one geometry must differ in every operand, or the per-row scale
+    gather could silently use the wrong tenant's scales and still pass."""
+    rng = np.random.default_rng(seed)
+    tables, statics = _random_net(cfg, seed=seed)
+    return ServeBundle(
+        cfg=cfg, tables=tables, statics=statics,
+        in_log_s=rng.normal(0, 0.3, (cfg.in_features,)).astype(np.float32),
+        layer_log_s=[rng.normal(0, 0.3, (o,)).astype(np.float32)
+                     for o in cfg.layer_widths])
+
+
+def _oracle_preds(bundle, x):
+    params = bundle.serve_params()
+    codes = LI.input_codes(bundle.cfg, params, jnp.asarray(x))
+    out = LI.lut_forward(bundle.cfg, bundle.tables, bundle.statics, codes)
+    return np.asarray(jnp.argmax(LI.class_values(bundle.cfg, params, out),
+                                 -1))
+
+
+# ---------------------------------------------------------------------------
+# Bit-exactness: cross-tenant packing vs the serial oracle
+
+
+@pytest.mark.parametrize("mod,var", ALL_GEOMETRIES,
+                         ids=[f"{m}-{v}" for m, v in ALL_GEOMETRIES])
+def test_cross_tenant_packing_bit_exact(mod, var):
+    """Two tenants of the same geometry, interleaved through one packed
+    dispatch, must reproduce the per-tenant ``lut_forward`` oracle
+    bit for bit on every paper geometry."""
+    cfg = getattr(importlib.import_module(f"repro.configs.{mod}"), var)()
+    ba, bb = _bundle(cfg, seed=1), _bundle(cfg, seed=2)
+    rng = np.random.default_rng(7)
+    xa = rng.normal(0, 1, (11, cfg.in_features)).astype(np.float32)
+    xb = rng.normal(0, 1, (5, cfg.in_features)).astype(np.float32)
+    ref_a, ref_b = _oracle_preds(ba, xa), _oracle_preds(bb, xb)
+    with MultiTenantEngine([Tenant("a", ba), Tenant("b", bb)],
+                           buckets=(16,), max_wait_ms=20.0) as eng:
+        assert eng.num_groups == 1  # same geometry -> one packed group
+        # Submitted inside one admission window so both tenants' rows
+        # ride the same coalesced dispatch.
+        fa, fb = eng.submit("a", xa), eng.submit("b", xb)
+        got_a, got_b = fa.result(timeout=60), fb.result(timeout=60)
+    np.testing.assert_array_equal(got_a, ref_a)
+    np.testing.assert_array_equal(got_b, ref_b)
+
+
+def test_different_geometries_get_separate_groups():
+    cfg_a = _tiny_cfg("mt-a")
+    cfg_c = NeuraLUTConfig(name="mt-c", in_features=5, layer_widths=(6, 4),
+                           num_classes=4, beta=2, fan_in=2)
+    ba, bb, bc = (_bundle(cfg_a, 0), _bundle(cfg_a, 1), _bundle(cfg_c, 2))
+    with MultiTenantEngine([Tenant("a", ba), Tenant("b", bb),
+                            Tenant("c", bc)], max_wait_ms=1.0) as eng:
+        assert eng.num_groups == 2
+        assert eng.group_of("a") is eng.group_of("b")
+        assert eng.group_of("a") is not eng.group_of("c")
+        x = np.random.default_rng(3).normal(
+            0, 1, (9, cfg_c.in_features)).astype(np.float32)
+        np.testing.assert_array_equal(eng.predict("c", x),
+                                      _oracle_preds(bc, x))
+
+
+def test_compile_shared_across_tenants_one_trace_per_bucket():
+    """N same-geometry tenants share ONE jitted executable per bucket:
+    the trace counter must not scale with the tenant count."""
+    cfg = _tiny_cfg()
+    tenants = [Tenant(f"t{i}", _bundle(cfg, seed=i)) for i in range(3)]
+    with MultiTenantEngine(tenants, buckets=(4, 8)) as eng:
+        eng.warmup()
+        traces = eng.group_of("t0").forward.traces
+        assert traces[0] == 2  # one per bucket, regardless of tenants
+        for i in range(3):
+            x = np.random.default_rng(i).normal(
+                0, 1, (3 + i, cfg.in_features)).astype(np.float32)
+            eng.predict(f"t{i}", x)
+        assert traces[0] == 2  # serving added no retraces
+
+
+def test_duplicate_and_unknown_tenants_rejected():
+    cfg = _tiny_cfg()
+    with pytest.raises(ValueError, match="duplicate"):
+        MultiTenantEngine([Tenant("a", _bundle(cfg, 0)),
+                           Tenant("a", _bundle(cfg, 1))])
+    eng = MultiTenantEngine([Tenant("a", _bundle(cfg, 0))])
+    with pytest.raises(ValueError, match="unknown tenant"):
+        eng.submit("nope", np.zeros((1, cfg.in_features), np.float32))
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# Admission control: queues, rate limits, isolation
+
+
+def test_queue_bound_sheds_only_the_offender():
+    """Flooding one tenant's bounded queue sheds only its requests; the
+    well-behaved tenant is admitted in full.  Enqueued before start()
+    so admission decisions are deterministic."""
+    cfg = _tiny_cfg()
+    eng = MultiTenantEngine(
+        [Tenant("bulk", _bundle(cfg, 0), max_queue_depth=2),
+         Tenant("prime", _bundle(cfg, 1), max_queue_depth=64)])
+    x = np.zeros((1, cfg.in_features), np.float32)
+    admitted, shed = [], 0
+    for _ in range(8):
+        try:
+            admitted.append(eng.submit("bulk", x))
+        except TenantOverloaded as e:
+            assert e.tenant == "bulk" and e.reason == "queue_full"
+            shed += 1
+    prime = [eng.submit("prime", x) for _ in range(5)]
+    assert shed == 6 and len(admitted) == 2
+    bm, pm = eng.tenant_metrics("bulk"), eng.tenant_metrics("prime")
+    assert bm.shed == 6 and bm.shed_rate == pytest.approx(6 / 8)
+    assert pm.shed == 0 and pm.shed_rate == 0.0
+    assert eng.metrics.shed == 6  # aggregate sees the same sheds
+    with eng:  # start: every *admitted* request must still be served
+        for f in admitted + prime:
+            assert f.result(timeout=30).shape == (1,)
+
+
+def test_rate_limit_sheds_and_recovers():
+    cfg = _tiny_cfg()
+    eng = MultiTenantEngine(
+        [Tenant("a", _bundle(cfg, 0), rate_limit=1.0, burst=2)])
+    x = np.zeros((1, cfg.in_features), np.float32)
+    outcomes = []
+    for _ in range(5):
+        try:
+            eng.submit("a", x)
+            outcomes.append("ok")
+        except TenantOverloaded as e:
+            assert e.reason == "rate_limited"
+            outcomes.append("shed")
+    assert outcomes == ["ok", "ok", "shed", "shed", "shed"]  # burst of 2
+    eng.close()
+
+
+def test_token_bucket_refill_math():
+    b = _TokenBucket(rate=2.0, burst=2)
+    t0 = b.t_last
+    assert b.try_take(t0) and b.try_take(t0)
+    assert not b.try_take(t0)           # bucket empty
+    assert b.try_take(t0 + 0.5)         # 0.5s * 2/s = 1 token back
+    assert not b.try_take(t0 + 0.5)
+    assert b.try_take(t0 + 10.0)        # refill clamps at burst
+    assert b.try_take(t0 + 10.0)
+    assert not b.try_take(t0 + 10.0)
+
+
+def test_priority_strictly_ordered_under_saturation():
+    """Queued low- and high-priority work drains strictly by priority:
+    every high-priority request completes before any low-priority one.
+    Requests are enqueued before start() so the dispatcher faces the
+    full backlog at once — saturation without timing games."""
+    cfg = _tiny_cfg()
+    eng = MultiTenantEngine(
+        [Tenant("lo", _bundle(cfg, 0), priority=0),
+         Tenant("hi", _bundle(cfg, 1), priority=5)],
+        buckets=(4,))  # one request per dispatch: order is observable
+    x = np.zeros((4, cfg.in_features), np.float32)
+    order, lock = [], threading.Lock()
+
+    def track(name, fut):
+        def done(f):
+            f.result()  # raise loudly if the request failed
+            with lock:
+                order.append(name)
+        fut.add_done_callback(done)
+
+    for _ in range(5):
+        track("lo", eng.submit("lo", x))
+    for _ in range(5):
+        track("hi", eng.submit("hi", x))
+    with eng:
+        t0 = time.time()
+        while len(order) < 10 and time.time() - t0 < 30:
+            time.sleep(0.01)
+    assert len(order) == 10
+    assert order == ["hi"] * 5 + ["lo"] * 5
+
+
+def test_overload_low_priority_sheds_high_priority_bounded():
+    """The ISSUE acceptance scenario: force overload on the low-priority
+    tenant and assert (a) its shed_rate rises above zero while the
+    high-priority tenant sheds nothing, and (b) every high-priority
+    request completes with bounded p99 latency."""
+    cfg = _tiny_cfg()
+    eng = MultiTenantEngine(
+        [Tenant("lo", _bundle(cfg, 0), priority=0, max_queue_depth=4),
+         Tenant("hi", _bundle(cfg, 1), priority=5, max_queue_depth=256)],
+        buckets=(1, 8), max_wait_ms=0.5)
+    x_lo = np.zeros((8, cfg.in_features), np.float32)
+    x_hi = np.zeros((2, cfg.in_features), np.float32)
+    stop = threading.Event()
+
+    def flood():
+        while not stop.is_set():
+            try:
+                eng.submit("lo", x_lo)
+            except TenantOverloaded:
+                pass  # counted by the engine; keep offering load
+
+    with eng:
+        eng.warmup()
+        flooder = threading.Thread(target=flood, daemon=True)
+        flooder.start()
+        hi_futures = [eng.submit("hi", x_hi) for _ in range(40)]
+        for f in hi_futures:
+            f.result(timeout=30)  # bounded: every hi request completes
+        stop.set()
+        flooder.join()
+    lo_m, hi_m = eng.tenant_metrics("lo"), eng.tenant_metrics("hi")
+    assert lo_m.shed_rate > 0.0, "overloaded tenant must shed"
+    assert hi_m.shed == 0, "victim tenant must not shed"
+    assert hi_m.report()["requests"] == 40.0
+    p99 = hi_m.latency_ms(99)
+    assert np.isfinite(p99) and p99 < 20_000.0  # bounded, CI-safe margin
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle
+
+
+def test_close_serves_backlog_and_is_idempotent():
+    cfg = _tiny_cfg()
+    eng = MultiTenantEngine([Tenant("a", _bundle(cfg, 0)),
+                             Tenant("b", _bundle(cfg, 1))])
+    rng = np.random.default_rng(0)
+    xs = [rng.normal(0, 1, (3, cfg.in_features)).astype(np.float32)
+          for _ in range(6)]
+    futs = [eng.submit("a" if i % 2 else "b", x)
+            for i, x in enumerate(xs)]
+    eng.start()
+    eng.close()
+    for f in futs:  # every admitted request resolved by the drain
+        assert f.result(timeout=5).shape == (3,)
+    eng.close()  # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.submit("a", xs[0])
+
+
+def test_close_without_start_fails_pending_cleanly():
+    cfg = _tiny_cfg()
+    eng = MultiTenantEngine([Tenant("a", _bundle(cfg, 0))])
+    f = eng.submit("a", np.zeros((1, cfg.in_features), np.float32))
+    eng.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        f.result(timeout=5)
+    eng.close()  # still idempotent on the never-started path
+
+
+def test_bad_request_shape_rejected():
+    cfg = _tiny_cfg()
+    eng = MultiTenantEngine([Tenant("a", _bundle(cfg, 0))])
+    with pytest.raises(ValueError, match="request shape"):
+        eng.submit("a", np.zeros((2, cfg.in_features + 1), np.float32))
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# Soak: sustained mixed load (excluded from the CI tier-1 matrix)
+
+
+@pytest.mark.soak
+def test_soak_sustained_mixed_load_stays_bit_exact():
+    """A few seconds of concurrent mixed-size traffic from client
+    threads across two packed tenants: every response bit-exact, no
+    stuck futures, engine healthy at the end."""
+    cfg = _tiny_cfg()
+    ba, bb = _bundle(cfg, 0), _bundle(cfg, 1)
+    rng = np.random.default_rng(11)
+    probe = {"a": rng.normal(0, 1, (64, cfg.in_features)).astype(np.float32),
+             "b": rng.normal(0, 1, (64, cfg.in_features)).astype(np.float32)}
+    ref = {"a": _oracle_preds(ba, probe["a"]),
+           "b": _oracle_preds(bb, probe["b"])}
+    errors = []
+
+    def client(name, seed):
+        r = np.random.default_rng(seed)
+        for _ in range(60):
+            n = int(r.integers(1, 32))
+            lo = int(r.integers(0, 64 - n))
+            got = eng.predict(name, probe[name][lo:lo + n])
+            if not np.array_equal(got, ref[name][lo:lo + n]):
+                errors.append((name, lo, n))
+                return
+
+    with MultiTenantEngine([Tenant("a", ba), Tenant("b", bb)],
+                           buckets=(1, 8, 32), max_wait_ms=0.5) as eng:
+        eng.warmup()
+        threads = [threading.Thread(target=client,
+                                    args=("a" if i % 2 else "b", 100 + i))
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        healthy = {k: g.health.healthy_ids()
+                   for k, g in eng._groups.items()}
+    assert not errors, errors[:3]
+    assert all(ids == [0] for ids in healthy.values())
