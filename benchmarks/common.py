@@ -20,7 +20,7 @@ RECORDS: List[Dict] = []
 # mapping, and its record-prefix merge are all derived from this.
 GATED_SUITES = {"kernel": "cascade", "train": "train",
                 "train_kernel": "train_kernel", "convert": "convert",
-                "serve_tenants": "serve_tenants"}
+                "serve_tenants": "serve_tenants", "sweep": "sweep"}
 
 # XLA:CPU contractions are not bitwise run-invariant when the Eigen
 # thread pool's availability varies: a pre-quant value landing exactly

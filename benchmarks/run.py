@@ -22,7 +22,12 @@ fresh run):
   * "convert"      — fused conversion entries/s per paper geometry;
   * "serve_tenants"— multi-tenant consolidation: aggregate packed
                      throughput vs one-engine-per-tenant (speedup mode
-                     gates the consolidation ratio).
+                     gates the consolidation ratio);
+  * "sweep"        — mesh Pareto sweep engine vs the vendored
+                     sequential per-geometry loop (speedup mode gates
+                     the engine-vs-loop total wall-clock ratio, which
+                     is machine-relative: both sides run in the same
+                     process on the same devices).
 
 A selected suite that raises also exits non-zero, so a red bench can
 never slip through as a green step with a partial JSON.
@@ -151,6 +156,25 @@ def _check_serve_tenants(baseline: Dict, fresh: Dict, threshold: float,
     return problems
 
 
+def _check_sweep(baseline: Dict, fresh: Dict, threshold: float,
+                 metric: str) -> List[str]:
+    """Gate the Pareto sweep engine: trained (point, seed) units per
+    engine-second, or (``speedup`` mode) the engine-vs-sequential-loop
+    total wall-clock ratio — both paths measured in the same process, so
+    the ratio survives runner hardware differences.  The ratio's floor
+    is what holds the engine's one-compile-per-group amortization (and
+    its mesh scaling, when the runner has devices) from regressing back
+    toward one-compile-per-point."""
+    key = {"throughput": "units_per_s", "speedup": "speedup"}[metric]
+    problems: List[str] = []
+    if key not in baseline or key not in fresh:
+        return [f"sweep: metric {key!r} missing from "
+                f"{'baseline' if key not in baseline else 'fresh run'}"]
+    _gate(problems, "sweep", key, float(baseline[key]), float(fresh[key]),
+          threshold)
+    return problems
+
+
 def check_regression(baseline: Dict, fresh: Dict, threshold: float,
                      metric: str = "throughput") -> List[str]:
     """Compare a fresh run's summaries against the committed baseline.
@@ -167,7 +191,8 @@ def check_regression(baseline: Dict, fresh: Dict, threshold: float,
     checkers = {"cascade": _check_cascade, "train": _check_train,
                 "train_kernel": _check_train_kernel,
                 "convert": _check_convert,
-                "serve_tenants": _check_serve_tenants}
+                "serve_tenants": _check_serve_tenants,
+                "sweep": _check_sweep}
     problems: List[str] = []
     compared = 0
     for section, checker in checkers.items():
@@ -225,6 +250,7 @@ def main() -> None:
         "lm_step": lambda: lm_step_bench.run(),
         "serve": lambda: serve_bench.run(reduced=args.fast),
         "serve_tenants": lambda: serve_bench.run_tenants(reduced=args.fast),
+        "sweep": lambda: fig6_7_pareto.run_sweep_bench(fast=args.fast),
     }
     selected = list(suites) if args.only is None else [
         s.strip() for s in args.only.split(",") if s.strip()]

@@ -47,17 +47,21 @@ def _donate_carries() -> Tuple[int, ...]:
     return () if jax.default_backend() == "cpu" else (0, 1, 2)
 
 
-def _make_step_fn(cfg: NeuraLUTConfig, statics, *, lr: float,
-                  weight_decay: float, t0: int, exec_plan=None):
-    """Single SGD step: (params, state, opt, xb, yb) -> (..., loss).
+def make_step_fn_dynamic(cfg: NeuraLUTConfig, *, lr: float,
+                         weight_decay: float, t0: int, exec_plan=None):
+    """Single SGD step with *traced* statics:
+    (params, state, opt, statics, xb, yb) -> (params, state, opt, loss).
 
-    ``exec_plan`` routes the grouped subnet (``core.exec_plan``); None
-    uses the train-purpose default for this backend (neuron-leading
-    einsums on CPU, the fused fwd+bwd Pallas kernel on TPU)."""
+    The statics-as-operand form is what lets the sweep engine
+    (``repro.sweep``) vmap one compiled step over a stacked geometry
+    group — every unit carries its own connectivity arrays.  ``exec_plan``
+    routes the grouped subnet (``core.exec_plan``); None uses the
+    train-purpose default for this backend (neuron-leading einsums on
+    CPU, the fused fwd+bwd Pallas kernel on TPU)."""
     if exec_plan is None:
         exec_plan = plan_subnet_exec(cfg, purpose="train")
 
-    def step_fn(params, state, opt, xb, yb):
+    def step_fn(params, state, opt, statics, xb, yb):
         def loss_fn(p):
             logits, _, new_state = M.model_apply(
                 cfg, p, state, statics, xb, train=True,
@@ -72,6 +76,21 @@ def _make_step_fn(cfg: NeuraLUTConfig, statics, *, lr: float,
                                    weight_decay=weight_decay,
                                    grad_clip=1.0)
         return params, new_state, opt, loss
+
+    return step_fn
+
+
+def _make_step_fn(cfg: NeuraLUTConfig, statics, *, lr: float,
+                  weight_decay: float, t0: int, exec_plan=None):
+    """Single SGD step: (params, state, opt, xb, yb) -> (..., loss).
+
+    Thin closure over :func:`make_step_fn_dynamic` for the fixed-
+    geometry trainers in this module."""
+    dyn = make_step_fn_dynamic(cfg, lr=lr, weight_decay=weight_decay,
+                               t0=t0, exec_plan=exec_plan)
+
+    def step_fn(params, state, opt, xb, yb):
+        return dyn(params, state, opt, statics, xb, yb)
 
     return step_fn
 
@@ -102,15 +121,28 @@ def _make_epoch_fn(step_fn, n: int, steps_per_epoch: int, batch: int):
     return jax.jit(epoch_fn, donate_argnums=_donate_carries())
 
 
-def _make_eval_fn(cfg: NeuraLUTConfig, statics):
-    # Eval always runs the canonical plan — the layout the truth tables
-    # are bit-exact against (see core/exec_plan.py).
-    @jax.jit
-    def eval_fn(params, state, xb, yb):
+def make_eval_fn_dynamic(cfg: NeuraLUTConfig):
+    """Eval with traced statics (un-jitted, composable):
+    (params, state, statics, xb, yb) -> (acc, acc_q).
+
+    Always the canonical plan — the layout the truth tables are
+    bit-exact against (see core/exec_plan.py)."""
+
+    def eval_fn(params, state, statics, xb, yb):
         logits, values, _ = M.model_apply(cfg, params, state, statics, xb,
                                           train=False)
         return (jnp.mean(jnp.argmax(logits, -1) == yb),
                 M.accuracy_from_values(values, yb))
+
+    return eval_fn
+
+
+def _make_eval_fn(cfg: NeuraLUTConfig, statics):
+    dyn = make_eval_fn_dynamic(cfg)
+
+    @jax.jit
+    def eval_fn(params, state, xb, yb):
+        return dyn(params, state, statics, xb, yb)
 
     return eval_fn
 

@@ -1,5 +1,6 @@
 from .synthetic import (
     jsc_synthetic,
+    mnist_pooled,
     mnist_synthetic,
     token_stream,
     two_semicircles,
@@ -11,6 +12,7 @@ from .pipeline import (
     device_dataset_stats,
 )
 
-__all__ = ["jsc_synthetic", "mnist_synthetic", "token_stream",
+__all__ = ["jsc_synthetic", "mnist_pooled", "mnist_synthetic",
+           "token_stream",
            "two_semicircles", "ShardedLoader", "device_dataset",
            "device_dataset_stats", "clear_device_datasets"]

@@ -97,3 +97,15 @@ def token_stream(n_tokens: int, vocab: int, *, seed: int = 0,
         if out[i] % 3 == 0:  # a third of positions are "predictable"
             out[i] = perm[out[i - order]]
     return out
+
+
+def mnist_pooled(n: int, *, seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """``mnist_synthetic`` 28x28 -> 14x14 average pool => 196 standardized
+    features — the input the circuit-level Pareto sweeps train on
+    (benchmarks/fig6_7_pareto, repro.launch.sweep).  Standardization is
+    per split, matching the historical benchmark pooling helper."""
+    x, y = mnist_synthetic(n, seed=seed)
+    img = x.reshape(-1, 28, 28)
+    out = img.reshape(-1, 14, 2, 14, 2).mean((2, 4)).reshape(-1, 196)
+    out = (out - out.mean(0)) / (out.std(0) + 1e-6)
+    return out.astype(np.float32), y

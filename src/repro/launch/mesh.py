@@ -31,3 +31,15 @@ def make_host_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh over however many (fake) host devices exist — used by
     multi-device tests."""
     return jax.make_mesh(shape, axes)
+
+
+def make_sweep_mesh(num_devices=None):
+    """1-D ``(replica,)`` mesh for the Pareto sweep engine: a sweep's
+    stacked (point, seed) unit axis has no model-parallel structure, so
+    it shards along one replica axis (``sharding.ctx.replica_mesh``).
+    Defaults to every visible device; in CI the multidevice job forces 8
+    host devices via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    """
+    from repro.sharding.ctx import replica_mesh
+
+    return replica_mesh(num_devices)

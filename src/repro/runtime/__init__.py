@@ -1,5 +1,9 @@
 from .fault import FailureInjector, ReplicaHealthTracker, TrainSupervisor
 from .straggler import run_with_backup, StepWatchdog
+from .tracker import (CallbackTracker, CompositeTracker, JsonlTracker,
+                      NoopTracker, PrintTracker, Tracker)
 
 __all__ = ["FailureInjector", "ReplicaHealthTracker", "TrainSupervisor",
-           "run_with_backup", "StepWatchdog"]
+           "run_with_backup", "StepWatchdog", "Tracker", "NoopTracker",
+           "CallbackTracker", "PrintTracker", "JsonlTracker",
+           "CompositeTracker"]

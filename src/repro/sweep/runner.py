@@ -1,0 +1,376 @@
+"""Mesh-parallel Pareto sweep engine: the whole seeds x geometries grid
+as a handful of compiled programs on a device mesh, with results
+streamed per group.
+
+For every :class:`~repro.sweep.plan.GeometryGroup` the runner
+
+  1. initializes every (point, seed) unit with its TRUE config (exactly
+     the init ``train_neuralut_ensemble`` would draw), pads each leaf to
+     the group's padded shapes and stacks everything along one leading
+     unit axis (host-side numpy, once per group);
+
+  2. builds ONE jitted program that runs the unit's *entire training* —
+     a ``lax.scan`` over epochs of (scan over steps + fused eval) —
+     ``vmap``'d over the unit axis and ``shard_map``'d over a 1-D
+     ``(replica,)`` mesh (``launch.mesh.make_sweep_mesh``) so S seeds x
+     G geometries fill every device.  One compile per *group*, not per
+     point: the host loop this replaces re-traced and re-compiled a
+     fresh ensemble trainer for every geometry;
+
+  3. AOT-compiles each group's program (the cold/warm split the bench
+     gates ride on), dispatches all groups back to back, then fetches
+     group results in completion order — each finished group's frontier
+     points go to the :class:`~repro.runtime.tracker.Tracker`
+     *immediately*, and (optionally) its best members run through the
+     fused truth-table converter (``core.truth_table.convert_packed``)
+     while later groups are still training on device.
+
+Equivalence contract: every point's history matches a sequential
+``train_neuralut_ensemble`` call for that geometry to f32 tolerance
+(same PRNG streams, same minibatch permutations, same optimizer math;
+padding is exactly inert — see plan.py).  tests/test_sweep.py holds
+this on 1 and on 8 (forced host) devices.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import cost_model as CM
+from repro.core import model as M
+from repro.core import truth_table as TT
+from repro.core.exec_plan import plan_subnet_exec
+from repro.core.nl_config import NeuraLUTConfig
+from repro.core.train import (_donate_carries, init_ensemble,
+                              make_eval_fn_dynamic, make_step_fn_dynamic)
+from repro.runtime.tracker import NoopTracker, Tracker
+from repro.sweep.plan import GeometryGroup, SweepPoint, plan_sweep
+
+Params = Dict
+
+
+# ---------------------------------------------------------------------------
+# stacked-group operand construction (host-side, numpy)
+
+
+def _pad_stack(member_trees: Sequence, pad_units: int):
+    """Stack per-member (S, ...)-leaf trees along the unit axis, zero-
+    padding every trailing dim to the per-leaf max across members (the
+    group's padded shapes).  ``pad_units`` extra units replicate unit 0."""
+
+    def stack(*leaves):
+        leaves = [np.asarray(x) for x in leaves]
+        s = leaves[0].shape[0]
+        tgt = tuple(max(x.shape[d] for x in leaves)
+                    for d in range(1, leaves[0].ndim))
+        w = len(leaves) * s + pad_units
+        out = np.zeros((w,) + tgt, leaves[0].dtype)
+        for m, x in enumerate(leaves):
+            sl = (slice(m * s, (m + 1) * s),) + tuple(
+                slice(0, d) for d in x.shape[1:])
+            out[sl] = x
+        if pad_units:
+            out[len(leaves) * s:] = out[:1]
+        return out
+
+    return jax.tree.map(stack, *member_trees)
+
+
+def _stack_statics(group: GeometryGroup) -> List[Dict[str, np.ndarray]]:
+    """Per-layer statics stacked over units: every point's connectivity
+    padded to (O_pad, F) with all-zero rows (padded neurons read real
+    lane 0 — provably inert, see plan.py) and repeated per seed."""
+    s = len(group.seeds)
+    per_point = [M.model_static(p.cfg) for p in group.points]
+    padded = group.padded_cfg
+    out: List[Dict[str, np.ndarray]] = []
+    for li in range(padded.num_layers):
+        layer: Dict[str, np.ndarray] = {}
+        o_pad = padded.layer_widths[li]
+        f = padded.layer_fan_in(li)
+        conns = []
+        for st in per_point:
+            conn = np.zeros((o_pad, f), np.int32)
+            real = np.asarray(st[li]["conn"], np.int32)
+            conn[: real.shape[0]] = real
+            conns.extend([conn] * s)
+        if group.pad_units:
+            conns.extend([conns[0]] * group.pad_units)
+        layer["conn"] = np.stack(conns)
+        if "exps" in per_point[0][li]:
+            exps = np.asarray(per_point[0][li]["exps"])
+            layer["exps"] = np.broadcast_to(
+                exps, (len(conns),) + exps.shape).copy()
+        out.append(layer)
+    return out
+
+
+def stack_group_operands(group: GeometryGroup, x_train) -> Tuple:
+    """(params, state, opt, statics, keys) stacked over the unit axis.
+
+    Every unit is initialized with its point's TRUE config — the exact
+    draws ``train_neuralut_ensemble`` makes — then padded into the
+    group's canvas shapes, so real lanes train identically to the
+    sequential loop."""
+    member_p, member_s, member_o, keys = [], [], [], None
+    for pt in group.points:
+        p, s, o, keys = init_ensemble(pt.cfg, group.seeds, x_train)
+        member_p.append(jax.device_get(p))
+        member_s.append(jax.device_get(s))
+        member_o.append(jax.device_get(o))
+    params = _pad_stack(member_p, group.pad_units)
+    state = _pad_stack(member_s, group.pad_units)
+    opt = _pad_stack(member_o, group.pad_units)
+    keys_np = np.asarray(jax.device_get(keys))
+    all_keys = np.concatenate([keys_np] * len(group.points) +
+                              ([keys_np[:1]] * group.pad_units
+                               if group.pad_units else []))
+    return params, state, opt, _stack_statics(group), all_keys
+
+
+# ---------------------------------------------------------------------------
+# one compiled program per group
+
+
+def make_group_train_fn(padded_cfg: NeuraLUTConfig, *, n: int, batch: int,
+                        epochs: int, lr: float, weight_decay: float,
+                        sgdr_t0: int = 0, mesh: Optional[Mesh] = None,
+                        subnet_route: Optional[str] = None):
+    """Jitted (params, state, opt, statics, keys, xd, yd, xe, ye) ->
+    (params, state, history) over a stacked unit axis.
+
+    The unit's whole training runs in one program: scan over epochs,
+    each epoch a scan over permuted minibatch steps plus the canonical
+    eval, exactly the ``train_neuralut_ensemble`` schedule.  With a
+    multi-device ``mesh`` the vmapped unit axis is ``shard_map``'d along
+    it (units per device = W / R); on one device it is a plain vmap.
+    """
+    steps_per_epoch = max(1, n // batch)
+    t0 = sgdr_t0 or epochs * steps_per_epoch
+    step = make_step_fn_dynamic(
+        padded_cfg, lr=lr, weight_decay=weight_decay, t0=t0,
+        exec_plan=plan_subnet_exec(padded_cfg, purpose="train",
+                                   route=subnet_route))
+    evalf = make_eval_fn_dynamic(padded_cfg)
+    take = steps_per_epoch * batch
+
+    def unit_train(params, state, opt, statics, key, xd, yd, xe, ye):
+        def epoch_body(carry, ep):
+            params, state, opt = carry
+            ekey = jax.random.fold_in(key, ep)
+            idx = jax.random.permutation(ekey, n)[:take].reshape(
+                steps_per_epoch, batch)
+
+            def body(c, ib):
+                p, s, o = c
+                p, s, o, loss = step(p, s, o, statics,
+                                     jnp.take(xd, ib, axis=0),
+                                     jnp.take(yd, ib, axis=0))
+                return (p, s, o), loss
+
+            (params, state, opt), losses = jax.lax.scan(
+                body, (params, state, opt), idx)
+            acc, acc_q = evalf(params, state, statics, xe, ye)
+            return (params, state, opt), (jnp.mean(losses), acc, acc_q)
+
+        (params, state, opt), hist = jax.lax.scan(
+            epoch_body, (params, state, opt),
+            jnp.arange(epochs, dtype=jnp.int32))
+        return params, state, {"loss": hist[0], "test_acc": hist[1],
+                               "test_acc_q": hist[2]}
+
+    vtrain = jax.vmap(unit_train,
+                      in_axes=(0, 0, 0, 0, 0, None, None, None, None))
+    if mesh is not None and mesh.devices.size > 1:
+        ax = mesh.axis_names[0]
+        # check_rep=False: per-unit training has no collectives; the
+        # replication checker has nothing to infer.
+        fn = shard_map(vtrain, mesh=mesh,
+                       in_specs=(P(ax), P(ax), P(ax), P(ax), P(ax),
+                                 P(), P(), P(), P()),
+                       out_specs=(P(ax), P(ax), P(ax)),
+                       check_rep=False)
+    else:
+        fn = vtrain
+    return jax.jit(fn, donate_argnums=_donate_carries())
+
+
+# ---------------------------------------------------------------------------
+# results
+
+
+@dataclass
+class PointResult:
+    point: SweepPoint
+    group_index: int
+    history: Dict[str, np.ndarray]          # each (epochs, S) float
+    best_seed: int
+    err: float                              # 1 - best final acc_q
+    err_mean: float
+    est: object                             # cost_model.Estimate
+    packed: Optional[Tuple[List[np.ndarray], List[np.ndarray]]] = None
+    params: Optional[Params] = None         # best member, unpadded
+    state: Optional[Params] = None
+
+    @property
+    def name(self) -> str:
+        return self.point.name
+
+
+@dataclass
+class GroupRun:
+    group: GeometryGroup
+    cold_s: float                           # trace + AOT compile
+    warm_s: float = 0.0                     # dispatch -> results fetched
+    convert_s: float = 0.0
+
+
+@dataclass
+class SweepResult:
+    points: List[PointResult]
+    groups: List[GroupRun]
+    devices: int
+    warm_s: float = 0.0                     # dispatch of first group ->
+                                            # last group fetched
+
+    @property
+    def cold_s(self) -> float:
+        return sum(g.cold_s for g in self.groups)
+
+    @property
+    def total_s(self) -> float:
+        return self.cold_s + self.warm_s
+
+    def frontier(self, tag: str) -> List[PointResult]:
+        return [p for p in self.points if p.point.tag == tag]
+
+
+def _slice_member(tree, spec_tree, unit: int):
+    """Unpad one unit back to its true config's shapes."""
+    return jax.tree.map(
+        lambda a, sd: np.asarray(a[unit])[tuple(slice(0, d)
+                                                for d in sd.shape)],
+        tree, spec_tree)
+
+
+def member_params_state(group: GeometryGroup, params, state, point_i: int,
+                        seed_i: int) -> Tuple[Params, Params]:
+    """Slice one trained (point, seed) member out of a group's stacked
+    (padded) params/state, restored to the point's true shapes."""
+    cfg = group.points[point_i].cfg
+    spec_p, spec_s = M.model_spec(cfg)
+    u = group.unit_index(point_i, seed_i)
+    return (_slice_member(params, spec_p, u),
+            _slice_member(state, spec_s, u))
+
+
+# ---------------------------------------------------------------------------
+# the engine
+
+
+def run_pareto_sweep(
+    points: Sequence[SweepPoint],
+    x_train, y_train, x_test, y_test,
+    *,
+    seeds: Sequence[int] = (0, 1, 2),
+    epochs: int = 10,
+    batch: int = 256,
+    lr: float = 3e-3,
+    weight_decay: float = 1e-4,
+    sgdr_t0: int = 0,
+    mesh: Optional[Mesh] = None,
+    tracker: Optional[Tracker] = None,
+    convert: bool = False,
+    subnet_route: Optional[str] = None,
+) -> SweepResult:
+    """Train the whole Pareto grid as mesh-parallel compiled groups.
+
+    Streams one tracker record per point (as its group finishes) with
+    the error/cost-model coordinates ``fig6_7_pareto`` plots, plus the
+    group's cold (compile) and warm (run) seconds.  ``convert=True``
+    additionally runs each point's best seed through the fused packed
+    truth-table conversion as its group completes.
+    """
+    tracker = tracker or NoopTracker()
+    if mesh is None:
+        from repro.launch.mesh import make_sweep_mesh
+        mesh = make_sweep_mesh()
+    devices = int(mesh.devices.size)
+    groups = plan_sweep(points, seeds=seeds, num_devices=devices)
+
+    xd, yd = jnp.asarray(x_train), jnp.asarray(y_train)
+    xe, ye = jnp.asarray(x_test), jnp.asarray(y_test)
+    n = int(xd.shape[0])
+    batch = min(batch, n)
+
+    # Stage 1+2: stack operands and AOT-compile one program per group.
+    runs: List[GroupRun] = []
+    execs, operands = [], []
+    for g in groups:
+        ops = stack_group_operands(g, xd)
+        t0 = time.perf_counter()
+        fn = make_group_train_fn(
+            g.padded_cfg, n=n, batch=batch, epochs=epochs, lr=lr,
+            weight_decay=weight_decay, sgdr_t0=sgdr_t0, mesh=mesh,
+            subnet_route=subnet_route)
+        exe = fn.lower(*ops, xd, yd, xe, ye).compile()
+        runs.append(GroupRun(group=g, cold_s=time.perf_counter() - t0))
+        execs.append(exe)
+        operands.append(ops)
+
+    # Stage 3: dispatch every group back to back (async), then fetch in
+    # order — streaming each finished group's points out immediately.
+    t_dispatch = time.perf_counter()
+    pending = [exe(*ops, xd, yd, xe, ye)
+               for exe, ops in zip(execs, operands)]
+
+    results: List[PointResult] = []
+    s_count = len(groups[0].seeds)
+    for run, (params_w, state_w, hist_w) in zip(runs, pending):
+        g = run.group
+        hist = jax.device_get(hist_w)       # blocks on this group only
+        run.warm_s = time.perf_counter() - t_dispatch
+        group_points: List[PointResult] = []
+        for pi, pt in enumerate(g.points):
+            u0 = g.unit_index(pi, 0)
+            history = {k: np.stack(
+                [np.asarray(v[u0 + si]) for si in range(s_count)],
+                axis=1).astype(np.float64)
+                for k, v in hist.items()}   # (epochs, S)
+            final_q = history["test_acc_q"][-1]
+            best = int(final_q.argmax())
+            res = PointResult(
+                point=pt, group_index=g.index, history=history,
+                best_seed=best, err=float(1.0 - final_q.max()),
+                err_mean=float(1.0 - final_q.mean()),
+                est=CM.estimate(pt.cfg))
+            if convert:
+                tc = time.perf_counter()
+                res.params, res.state = member_params_state(
+                    g, params_w, state_w, pi, best)
+                res.packed = TT.convert_packed(
+                    pt.cfg, res.params, res.state,
+                    M.model_static(pt.cfg))
+                run.convert_s += time.perf_counter() - tc
+            group_points.append(res)
+            results.append(res)
+        for res in group_points:
+            tracker.log_metrics(
+                {"point": res.name, "tag": res.point.tag,
+                 "group": g.index, "err": res.err,
+                 "err_mean": res.err_mean, "seeds": s_count,
+                 "latency_ns": res.est.latency_ns,
+                 "luts": res.est.luts,
+                 "area_delay": res.est.area_delay,
+                 "cold_s": run.cold_s, "warm_s": run.warm_s},
+                step=g.point_offset + g.points.index(res.point))
+    warm_total = time.perf_counter() - t_dispatch
+    return SweepResult(points=results, groups=runs, devices=devices,
+                       warm_s=warm_total)

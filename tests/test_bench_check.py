@@ -2,8 +2,9 @@
 must pass on an honest fresh run and fail on a doctored baseline for
 every gated section — cascade throughput, scanned-trainer steps/s, the
 fused fwd+bwd kernel-vs-jnp training step, fused-converter entries/s,
-and the multi-tenant serving consolidation ratio — and must refuse to
-"pass" when it compared nothing.
+the multi-tenant serving consolidation ratio, and the mesh Pareto sweep
+engine's engine-vs-loop speedup — and must refuse to "pass" when it
+compared nothing.
 """
 import copy
 import os
@@ -47,6 +48,15 @@ def _payload():
             "single_engine_sps": 4.0e4,
             "consolidation_ratio": 1.25,
         },
+        "sweep": {
+            "devices": 8,
+            "units": 16,
+            "loop": {"cold_s": 17.0, "warm_s": 0.5, "total_s": 17.5},
+            "mesh": {"cold_s": 4.9, "warm_s": 0.3, "total_s": 5.2},
+            "speedup": 3.3,
+            "units_per_s": 3.1,
+            "frontier_max_abs_err_delta": 0.01,
+        },
     }
 
 
@@ -65,6 +75,7 @@ def test_small_regression_within_threshold_passes():
     fresh["convert"]["geometries"]["neuralut-jsc-5l"][
         "entries_per_s"] *= 0.80
     fresh["serve_tenants"]["aggregate_sps"] *= 0.80
+    fresh["sweep"]["units_per_s"] *= 0.80
     assert check_regression(base, fresh, 0.25) == []
 
 
@@ -78,11 +89,12 @@ def test_doctored_baseline_fails_each_section():
         ("convert",
          lambda d: d["convert"]["geometries"]["neuralut-hdr-5l"]),
         ("serve_tenants", lambda d: d["serve_tenants"]),
+        ("sweep", lambda d: d["sweep"]),
     ]:
         base = _payload()
         row = path(base)
         for k in row:
-            if k != "batch":
+            if k != "batch" and isinstance(row[k], (int, float)):
                 row[k] = float(row[k]) * 2.0
         problems = check_regression(base, _payload(), 0.25)
         assert problems, f"doctored {section} baseline not caught"
@@ -138,6 +150,7 @@ def test_missing_metric_key_is_flagged():
     del fresh["train"]["scanned_steps_per_s"]
     del fresh["train_kernel"]["speedup"]
     del fresh["serve_tenants"]["consolidation_ratio"]
+    del fresh["sweep"]["units_per_s"]
     problems = check_regression(base, fresh, 0.25)
     assert any("train" in p and "missing" in p for p in problems)
     assert any(p.startswith("serve_tenants") and "missing" in p

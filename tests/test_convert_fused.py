@@ -117,6 +117,38 @@ def test_sweep_compile_count_shared_across_layers():
     assert TT.convert_cache_stats() == stats
 
 
+def test_jit_cache_size_version_safe():
+    """``convert_cache_stats`` reaches into jit internals; the accessor
+    is private and has moved across jax versions.  The wrapper must
+    survive every spelling — and report -1, not crash, when none
+    exists (a jax upgrade must degrade the *stat*, not the converter)."""
+    class Modern:
+        def _cache_size(self):
+            return 3
+
+    class Attr:
+        cache_size = 5
+
+    class Renamed:
+        def cache_size(self):
+            return 7
+
+    class Broken:
+        def _cache_size(self):
+            raise AttributeError("tracing internals moved")
+
+    assert TT._jit_cache_size(Modern()) == 3
+    assert TT._jit_cache_size(Attr()) == 5
+    assert TT._jit_cache_size(Renamed()) == 7
+    assert TT._jit_cache_size(Broken()) == -1
+    assert TT._jit_cache_size(object()) == -1
+    # and the real jit wrapper still reports a usable count today
+    import jax
+    fn = jax.jit(lambda x: x + 1)
+    fn(1)
+    assert TT._jit_cache_size(fn) >= 1
+
+
 # ---------------------------------------------------------------------------
 # kernel-routed subnet evaluation vs the jnp oracle
 

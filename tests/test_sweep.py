@@ -1,0 +1,281 @@
+"""The mesh Pareto sweep engine (repro.sweep) + streaming trackers.
+
+Coverage:
+
+  * planning: geometry grouping key, per-position width padding (last
+    layer must agree), mesh-divisibility unit padding, unit indexing;
+
+  * equivalence: the padded-and-stacked group program reproduces
+    ``train_neuralut_ensemble`` per point.  On the in-process device
+    view (same compilation) the histories match to f32 tolerance —
+    empirically bit-exact: padded lanes' gradients are exactly zero, so
+    real lanes never see the padding.  The forced-8-device subprocess
+    run asserts frontier-level agreement instead: a differently
+    partitioned XLA program rounds differently at the ULP level, and
+    quantized training chaotically amplifies that (biases feeding
+    BatchNorm have mathematically zero gradient, so their Adam updates
+    are normalized f32 summation noise) — same-compilation runs are
+    exact, cross-compilation runs agree only statistically;
+
+  * streaming: one tracker record per point, in group completion order,
+    with the frontier coordinates and the cold/warm timing split;
+
+  * trackers: callback/jsonl/composite behavior, finish() semantics.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import model as M
+from repro.core.nl_config import NeuraLUTConfig
+from repro.core.train import ensemble_member, train_neuralut_ensemble
+from repro.runtime.tracker import (CallbackTracker, CompositeTracker,
+                                   JsonlTracker, NoopTracker)
+from repro.sweep import (SweepPoint, geometry_group_key, padded_widths,
+                         paper_sweep_points, plan_sweep, run_pareto_sweep)
+from repro.sweep.runner import member_params_state
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _cfg(name, widths, *, kind="subnet", fan_in=3, in_features=16):
+    extra = (dict(depth=2, width=4, skip=2) if kind == "subnet"
+             else dict(depth=1, width=1, skip=0))
+    return NeuraLUTConfig(name=name, in_features=in_features,
+                          layer_widths=widths, num_classes=4, beta=2,
+                          fan_in=fan_in, kind=kind, **extra)
+
+
+def _data(n, d=16, classes=4, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (n, d)).astype(np.float32)
+    y = rng.integers(0, classes, n).astype(np.int32)
+    return x, y
+
+
+# ---------------------------------------------------------------------------
+# planning
+
+
+def test_group_key_splits_on_trace_relevant_statics():
+    a = _cfg("a", (8, 4))
+    assert geometry_group_key(a) == geometry_group_key(_cfg("b", (6, 4)))
+    # different depth / kind / fan_in / layer count / last width all split
+    for other in [_cfg("c", (8, 4), kind="linear"),
+                  _cfg("d", (8, 4), fan_in=2),
+                  _cfg("e", (8, 6, 4)),
+                  _cfg("f", (8, 5))]:
+        assert geometry_group_key(a) != geometry_group_key(other)
+
+
+def test_padded_widths_and_last_layer_guard():
+    assert padded_widths([_cfg("a", (8, 4)), _cfg("b", (6, 4))]) == (8, 4)
+    assert padded_widths([_cfg("a", (8, 12, 4)),
+                          _cfg("b", (10, 6, 4))]) == (10, 12, 4)
+    with pytest.raises(ValueError):
+        padded_widths([_cfg("a", (8, 4)), _cfg("b", (8, 5))])
+
+
+def test_plan_sweep_groups_and_pads():
+    pts = [SweepPoint(_cfg("a", (8, 4)), "t"),
+           SweepPoint(_cfg("b", (6, 4)), "t"),
+           SweepPoint(_cfg("c", (6, 4), kind="linear"), "u")]
+    groups = plan_sweep(pts, seeds=(0, 1, 2), num_devices=8)
+    assert [len(g.points) for g in groups] == [2, 1]
+    g0, g1 = groups
+    assert g0.padded_cfg.layer_widths == (8, 4)
+    assert g0.num_units == 6 and g0.pad_units == 2   # -> 8
+    assert g1.num_units == 3 and g1.pad_units == 5   # -> 8
+    assert g0.unit_index(1, 2) == 5
+    assert g0.point_offset == 0 and g1.point_offset == 2
+    # groups are stable first-seen order and describe() names members
+    assert "a" in g0.describe() and "c" in g1.describe()
+    with pytest.raises(ValueError):
+        plan_sweep([], seeds=(0,))
+    with pytest.raises(ValueError):
+        plan_sweep(pts, seeds=())
+
+
+def test_paper_grid_plans_into_fewer_programs():
+    pts = paper_sweep_points()
+    groups = plan_sweep(pts, seeds=(0,), num_devices=1)
+    assert sum(len(g.points) for g in groups) == len(pts) == 6
+    # same-depth families share programs: 6 points -> 4 programs
+    assert len(groups) == 4
+
+
+# ---------------------------------------------------------------------------
+# equivalence vs the sequential per-geometry loop (same compilation)
+
+
+def test_sweep_matches_ensemble_loop_and_streams():
+    xtr, ytr = _data(192, seed=0)
+    xte, yte = _data(96, seed=1)
+    pts = [SweepPoint(_cfg("eq-a", (8, 4)), "t"),
+           SweepPoint(_cfg("eq-b", (6, 4)), "t"),       # padded member
+           SweepPoint(_cfg("eq-c", (6, 4), kind="linear"), "u")]
+    records = []
+    tracker = CallbackTracker(
+        lambda m, step, summary: records.append((step, m)))
+    res = run_pareto_sweep(pts, xtr, ytr, xte, yte, seeds=(0, 1),
+                           epochs=2, batch=64, lr=2e-3, tracker=tracker,
+                           convert=True)
+
+    assert [r.name for r in res.points] == ["eq-a", "eq-b", "eq-c"]
+    for pt, r in zip(pts, res.points):
+        params, state, hist = train_neuralut_ensemble(
+            pt.cfg, xtr, ytr, xte, yte, seeds=(0, 1), epochs=2,
+            batch=64, lr=2e-3)
+        for k in ("loss", "test_acc", "test_acc_q"):
+            np.testing.assert_allclose(
+                r.history[k], np.asarray(hist[k]), atol=2e-3,
+                err_msg=f"{pt.name}/{k}")
+        assert r.history[k].shape == (2, 2)
+        # the trained member sliced out of the padded stack matches the
+        # loop's member (=> identical truth tables downstream)
+        ref_p, ref_s = ensemble_member(params, state, r.best_seed)
+        for a, b in zip(jax.tree.leaves(r.params),
+                        jax.tree.leaves(jax.device_get(ref_p))):
+            np.testing.assert_allclose(a, b, atol=2e-5)
+        for a, b in zip(jax.tree.leaves(r.state),
+                        jax.tree.leaves(jax.device_get(ref_s))):
+            np.testing.assert_allclose(a, b, atol=2e-5)
+        # convert=True produced packed tables for every layer
+        tables, packed = r.packed
+        assert len(tables) == len(packed) == pt.cfg.num_layers
+        assert all(t.dtype == np.uint16 for t in tables)
+
+    # streaming: one record per point, group order, frontier + timing
+    assert [m["point"] for _, m in records] == ["eq-a", "eq-b", "eq-c"]
+    assert [s for s, _ in records] == [0, 1, 2]
+    for _, m in records:
+        assert {"err", "err_mean", "luts", "latency_ns", "cold_s",
+                "warm_s", "tag", "group"} <= set(m)
+        assert 0.0 <= m["err"] <= 1.0 and m["cold_s"] > 0
+    assert res.total_s == pytest.approx(res.cold_s + res.warm_s)
+    assert res.frontier("t") == res.points[:2]
+
+
+def test_unpadded_member_slice_shapes():
+    xtr, _ = _data(64)
+    pts = [SweepPoint(_cfg("sl-a", (8, 4)), "t"),
+           SweepPoint(_cfg("sl-b", (5, 4)), "t")]
+    from repro.sweep.runner import stack_group_operands
+    g = plan_sweep(pts, seeds=(0, 1), num_devices=1)[0]
+    params, state, _, _, _ = stack_group_operands(g, xtr)
+    p1, s1 = member_params_state(g, params, state, 1, 0)
+    spec_p, spec_s = M.model_spec(pts[1].cfg)
+    assert jax.tree.map(lambda a: a.shape, p1) == \
+        jax.tree.map(lambda sd: sd.shape, spec_p)
+    assert jax.tree.map(lambda a: a.shape, s1) == \
+        jax.tree.map(lambda sd: sd.shape, spec_s)
+
+
+# ---------------------------------------------------------------------------
+# trackers
+
+
+def test_callback_and_composite_trackers():
+    seen = []
+    t = CallbackTracker(lambda m, step, summary: seen.append(
+        (m, step, summary)))
+    comp = CompositeTracker([t, NoopTracker()])
+    with comp:
+        comp.log_metrics({"a": 1}, step=3)
+        comp.log_summary({"done": True})
+    assert seen == [({"a": 1}, 3, False), ({"done": True}, None, True)]
+    with pytest.raises(RuntimeError):
+        comp.log_metrics({"late": 1})
+    comp.finish()  # idempotent
+
+
+def test_jsonl_tracker(tmp_path):
+    path = tmp_path / "run.jsonl"
+    with JsonlTracker(str(path)) as t:
+        t.log_metrics({"err": 0.5}, step=0)
+        t.log_summary({"total_s": 1.0})
+    rows = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert rows[0]["err"] == 0.5 and rows[0]["_step"] == 0
+    assert rows[1]["total_s"] == 1.0 and rows[1]["_summary"] is True
+
+
+# ---------------------------------------------------------------------------
+# forced 8-device mesh: shard_map path + frontier-level loop agreement
+# (subprocess so the main pytest process keeps its real device view —
+# same pattern as tests/test_serve_sharded.py)
+
+
+def test_sweep_mesh_8_devices_matches_loop_frontier():
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np, jax
+        from repro.core.nl_config import NeuraLUTConfig
+        from repro.core.train import train_neuralut_ensemble
+        from repro.launch.mesh import make_sweep_mesh
+        from repro.sweep import SweepPoint, run_pareto_sweep
+        assert jax.device_count() == 8
+
+        def cfg(name, widths, kind="subnet"):
+            extra = (dict(depth=2, width=4, skip=2) if kind == "subnet"
+                     else dict(depth=1, width=1, skip=0))
+            return NeuraLUTConfig(name=name, in_features=16,
+                                  layer_widths=widths, num_classes=4,
+                                  beta=2, fan_in=3, kind=kind, **extra)
+
+        rng = np.random.default_rng(0)
+        xtr = rng.normal(0, 1, (192, 16)).astype(np.float32)
+        ytr = rng.integers(0, 4, 192).astype(np.int32)
+        xte = rng.normal(0, 1, (96, 16)).astype(np.float32)
+        yte = rng.integers(0, 4, 96).astype(np.int32)
+
+        pts = [SweepPoint(cfg("m8-a", (8, 4)), "t"),
+               SweepPoint(cfg("m8-b", (6, 4)), "t"),
+               SweepPoint(cfg("m8-c", (6, 4), kind="linear"), "u")]
+        mesh = make_sweep_mesh()
+        assert mesh.devices.size == 8
+        res = run_pareto_sweep(pts, xtr, ytr, xte, yte, seeds=(0, 1),
+                               epochs=2, batch=64, lr=2e-3, mesh=mesh)
+        # units padded to the mesh: 2x2 -> 4(+4), 1x2 -> 2(+6)
+        assert [g.group.stacked_units for g in res.groups] == [8, 8]
+
+        # The sharded program is deterministic: a second engine run
+        # (fresh compile of the same program) reproduces it bit-exactly.
+        res2 = run_pareto_sweep(pts, xtr, ytr, xte, yte, seeds=(0, 1),
+                                epochs=2, batch=64, lr=2e-3, mesh=mesh)
+        for a, b in zip(res.points, res2.points):
+            for k in ("loss", "test_acc", "test_acc_q"):
+                assert (a.history[k] == b.history[k]).all(), (a.name, k)
+
+        for pt, r in zip(pts, res.points):
+            _, _, hist = train_neuralut_ensemble(
+                pt.cfg, xtr, ytr, xte, yte, seeds=(0, 1), epochs=2,
+                batch=64, lr=2e-3)
+            # Cross-compilation (shard_map-partitioned vs single-device
+            # programs): quantized training chaotically amplifies
+            # ULP-level rounding differences, so demand frontier-level
+            # agreement, not bitwise histories (see module docstring).
+            ref = np.asarray(hist["test_acc_q"])[-1]
+            got = r.history["test_acc_q"][-1]
+            assert np.abs(got - ref).max() <= 0.15, (pt.name, got, ref)
+            ref0 = np.asarray(hist["loss"])[0]
+            np.testing.assert_allclose(r.history["loss"][0], ref0,
+                                       rtol=0.15)
+            print("OK", pt.name, flush=True)
+        print("SWEEP-8DEV-OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=560, env=env)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "SWEEP-8DEV-OK" in out.stdout
