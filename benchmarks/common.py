@@ -18,9 +18,10 @@ RECORDS: List[Dict] = []
 # by ``benchmarks/run.py --check`` (suite name -> JSON section key).
 # Single source of truth: run.py's gate, write_bench_summary's section
 # mapping, and its record-prefix merge are all derived from this.
-GATED_SUITES = {"kernel": "cascade", "train": "train",
-                "train_kernel": "train_kernel", "convert": "convert",
-                "serve_tenants": "serve_tenants", "sweep": "sweep"}
+GATED_SUITES = {"kernel": "cascade", "kernel_dag": "cascade_dag",
+                "train": "train", "train_kernel": "train_kernel",
+                "convert": "convert", "serve_tenants": "serve_tenants",
+                "sweep": "sweep"}
 
 # XLA:CPU contractions are not bitwise run-invariant when the Eigen
 # thread pool's availability varies: a pre-quant value landing exactly

@@ -125,6 +125,119 @@ def _cascade_sweep(fast: bool) -> Dict:
     }
 
 
+def run_dag(fast: bool = False) -> Dict:
+    """DAG cascade: single-launch fused walk vs per-node dispatch.
+
+    The ``cascade`` section gates the *chain* fast path; this section
+    gates the LUT-graph generalization on the PolyLUT-Add JSC-5L
+    adder-tree (three arity-2 nodes + classifier).  The per-node path
+    dispatches one jitted concat+gather+lookup per node — the (B, O)
+    code buffers round-trip device memory between nodes — while the
+    fused path walks the whole topo-sorted schedule (per-source
+    shift-matmuls summed, branch codes added in registers) in ONE
+    jitted dispatch, same algorithm as the Pallas DAG kernel.  Summary
+    rows mirror the chain sweep so run.py's cascade checker gates both.
+    """
+    from repro.configs.polylut_add_jsc_5l import full
+    from repro.core.lut_infer import pack_index
+    from repro.kernels.lut_cascade import (build_graph_shift_mats,
+                                           graph_cascade_meta,
+                                           graph_cascade_tables,
+                                           lut_cascade)
+    from repro.kernels.ref import lut_cascade_packed_ref
+
+    cfg = full()
+    rng = np.random.default_rng(0)
+    statics, tables = [], []
+    for i, nd in enumerate(cfg.nodes):
+        pool_w = sum(cfg.buffer_width(s) for s in cfg.node_sources(i))
+        statics.append({"conns": [
+            rng.integers(0, pool_w, (nd.width, nd.fan_in))
+            for _ in range(nd.arity)]})
+        tables.append([
+            rng.integers(0, 2 ** cfg.beta,
+                         (nd.width, cfg.table_size(i))).astype(np.uint16)
+            for _ in range(nd.arity)])
+    lookups = sum(nd.width * nd.arity for nd in cfg.nodes)  # per sample
+
+    # per-node serving path: one jitted dispatch per DAG node; source
+    # buffers leave the device computation between every pair of nodes.
+    node_fns = []
+    for i, nd in enumerate(cfg.nodes):
+        in_bits = cfg.node_in_bits(i)
+        conns_i = [jnp.asarray(c) for c in statics[i]["conns"]]
+        tbls_i = [jnp.asarray(t.astype(np.int32)) for t in tables[i]]
+
+        def node_fn(*srcs, _ib=in_bits, _cs=conns_i, _ts=tbls_i):
+            pool = jnp.concatenate(srcs, axis=1)
+            code = None
+            for c_, t_ in zip(_cs, _ts):
+                d = lut_gather_ref(t_, pack_index(pool[:, c_], _ib))
+                code = d if code is None else code + d
+            return code
+
+        node_fns.append(jax.jit(node_fn))
+    node_srcs = [cfg.node_sources(i) for i in range(cfg.num_layers)]
+
+    def per_node(codes):
+        bufs = [codes]
+        for fn, srcs in zip(node_fns, node_srcs):
+            bufs.append(fn(*[bufs[s] for s in srcs]))
+        return bufs[-1]
+
+    # fused fast path: the whole DAG schedule in ONE jitted dispatch
+    schedule = graph_cascade_meta(cfg)
+    pts = [jnp.asarray(p) for p in graph_cascade_tables(cfg, tables)]
+    sms = [jnp.asarray(m) for m in build_graph_shift_mats(cfg, statics)]
+    fused = jax.jit(lambda c: lut_cascade_packed_ref(
+        c, sms, pts, cfg.beta, schedule=schedule))
+
+    sweep = []
+    batches = (256,) if fast else (256, 1024, 4096)
+    for b in batches:
+        codes = jnp.asarray(
+            rng.integers(0, 2 ** cfg.node_in_bits(0),
+                         (b, cfg.in_features)), jnp.int32)
+        ref_out = np.asarray(per_node(codes))
+        assert (np.asarray(fused(codes)) == ref_out).all()
+        us_pn = time_call(
+            lambda: jax.block_until_ready(per_node(codes)))
+        us_f = time_call(lambda: fused(codes).block_until_ready())
+        row = {
+            "batch": b,
+            "per_node_us": round(us_pn, 1),
+            "fused_us": round(us_f, 1),
+            "per_node_lookups_per_s": b * lookups / us_pn * 1e6,
+            "fused_lookups_per_s": b * lookups / us_f * 1e6,
+            "speedup": us_pn / us_f,
+        }
+        sweep.append(row)
+        emit(f"kernel_dag/cascade_dag_b{b}", us_f,
+             f"per_node_us={us_pn:.1f};speedup={row['speedup']:.2f}x;"
+             f"fused_lookups_per_s={row['fused_lookups_per_s']:.2e}")
+
+    # Pallas DAG kernel: interpret-mode bit-exactness on a small tile
+    bsm = 16
+    codes = jnp.asarray(
+        rng.integers(0, 2 ** cfg.node_in_bits(0), (bsm, cfg.in_features)),
+        jnp.int32)
+    got = np.asarray(lut_cascade(codes, sms, pts, schedule, block_b=8))
+    agree = bool((got == np.asarray(per_node(codes))).all())
+    emit("kernel_dag/cascade_dag_pallas_agreement", 0.0,
+         f"bit_exact={agree}")
+
+    return {
+        "config": cfg.name,
+        "fast_mode": fast,
+        "per_node_dispatches": cfg.num_layers,
+        "fused_dispatches": 1,
+        "branches": sum(nd.arity for nd in cfg.nodes),
+        "lookups_per_sample": lookups,
+        "pallas_dag_bit_exact": agree,
+        "sweep": sweep,
+    }
+
+
 def run(fast: bool = False) -> Optional[Dict]:
     rng = np.random.default_rng(0)
     B, NO, F, N, L, S = 1024, 256, 6, 16, 4, 2
@@ -189,4 +302,4 @@ def run(fast: bool = False) -> Optional[Dict]:
 
 if __name__ == "__main__":
     from benchmarks.common import write_bench_summary
-    write_bench_summary({"kernel": run()})
+    write_bench_summary({"kernel": run(), "kernel_dag": run_dag()})

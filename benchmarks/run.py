@@ -16,6 +16,9 @@ Gated sections (each compared only when present in both baseline and
 fresh run):
 
   * "cascade"      — fused LUT-cascade serving throughput per batch;
+  * "cascade_dag"  — LUT-graph single-launch DAG walk vs per-node
+                     dispatch on the PolyLUT-Add adder-tree (speedup
+                     metric gates the machine-relative ratio);
   * "train"        — scanned-trainer steps/s on the JSC-5L model;
   * "train_kernel" — fused fwd+bwd kernel-route step vs the jnp route
                      (speedup metric gates the machine-relative ratio);
@@ -57,14 +60,15 @@ def _gate(problems: List[str], section: str, key: str, base: float,
 
 
 def _check_cascade(baseline: Dict, fresh: Dict, threshold: float,
-                   metric: str) -> List[str]:
-    """Per-batch-size gate on the fused cascade sweep.  Smoke runs sweep
-    a subset of the full baseline's batches, so only the intersection is
+                   metric: str, section: str = "cascade") -> List[str]:
+    """Per-batch-size gate on a fused cascade sweep (chain "cascade" or
+    LUT-graph "cascade_dag" — same sweep schema).  Smoke runs sweep a
+    subset of the full baseline's batches, so only the intersection is
     comparable.  ``metric="throughput"`` gates absolute
     ``fused_lookups_per_s`` (meaningful when baseline and CI run on
     comparable machines); ``metric="speedup"`` gates the fused-vs-
-    per-layer ratio, which is machine-relative and robust to runner
-    hardware differences."""
+    per-layer (per-node for the DAG section) ratio, which is machine-
+    relative and robust to runner hardware differences."""
     key = {"throughput": "fused_lookups_per_s",
            "speedup": "speedup"}[metric]
     problems: List[str] = []
@@ -72,13 +76,21 @@ def _check_cascade(baseline: Dict, fresh: Dict, threshold: float,
     fresh_rows = {r["batch"]: r for r in fresh.get("sweep", [])}
     common = sorted(set(base_rows) & set(fresh_rows))
     if not common:
-        return [f"cascade: no common batch sizes between baseline "
+        return [f"{section}: no common batch sizes between baseline "
                 f"{sorted(base_rows)} and fresh run {sorted(fresh_rows)}"]
     for b in common:
-        _gate(problems, "cascade", f"batch {b} {metric}",
+        _gate(problems, section, f"batch {b} {metric}",
               float(base_rows[b][key]), float(fresh_rows[b][key]),
               threshold)
     return problems
+
+
+def _check_cascade_dag(baseline: Dict, fresh: Dict, threshold: float,
+                       metric: str) -> List[str]:
+    """Gate the single-launch DAG walk vs the per-node dispatch path on
+    the PolyLUT-Add adder-tree geometry (same schema as "cascade")."""
+    return _check_cascade(baseline, fresh, threshold, metric,
+                          section="cascade_dag")
 
 
 def _check_train(baseline: Dict, fresh: Dict, threshold: float,
@@ -188,7 +200,8 @@ def check_regression(baseline: Dict, fresh: Dict, threshold: float,
     hardware changes.  Returns human-readable problem strings (empty =
     pass).
     """
-    checkers = {"cascade": _check_cascade, "train": _check_train,
+    checkers = {"cascade": _check_cascade,
+                "cascade_dag": _check_cascade_dag, "train": _check_train,
                 "train_kernel": _check_train_kernel,
                 "convert": _check_convert,
                 "serve_tenants": _check_serve_tenants,
@@ -244,6 +257,7 @@ def main() -> None:
             seeds=2 if args.fast else 3),
         "table3": lambda: table3_eval.run(fast=args.fast),
         "kernel": lambda: kernel_bench.run(fast=args.fast),
+        "kernel_dag": lambda: kernel_bench.run_dag(fast=args.fast),
         "train": lambda: train_bench.run(fast=args.fast),
         "train_kernel": lambda: train_bench.run_kernel(fast=args.fast),
         "convert": lambda: convert_bench.run(fast=args.fast),

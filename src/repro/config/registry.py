@@ -30,6 +30,8 @@ _CONFIG_MODULES = (
     "neuralut_hdr_5l",
     "neuralut_jsc_2l",
     "neuralut_jsc_5l",
+    "polylut_add_jsc_2l",
+    "polylut_add_jsc_5l",
     "lm_100m",
 )
 

@@ -4,13 +4,17 @@ Pipeline (paper Fig. 4): QAT training -> sub-network -> L-LUT truth tables
 -> Verilog RTL + cost model.  ``lut_infer`` is the bit-exact software twin
 of the generated hardware.
 """
-from .nl_config import NeuraLUTConfig
+from .nl_config import (INPUT, LUTGraphConfig, LUTNodeSpec, NeuraLUTConfig,
+                        UnsupportedTopology, graph_from_chain,
+                        is_graph_config)
 from . import cost_model, lut_infer, model, quant, rtl, sparsity, subnet
 from . import truth_table
 from .train import ensemble_member, train_neuralut, train_neuralut_ensemble
 
 __all__ = [
-    "NeuraLUTConfig", "cost_model", "ensemble_member", "lut_infer", "model",
-    "quant", "rtl", "sparsity", "subnet", "truth_table", "train_neuralut",
+    "INPUT", "LUTGraphConfig", "LUTNodeSpec", "NeuraLUTConfig",
+    "UnsupportedTopology", "cost_model", "ensemble_member",
+    "graph_from_chain", "is_graph_config", "lut_infer", "model", "quant",
+    "rtl", "sparsity", "subnet", "truth_table", "train_neuralut",
     "train_neuralut_ensemble",
 ]

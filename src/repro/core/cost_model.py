@@ -24,7 +24,7 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
-from repro.core.nl_config import NeuraLUTConfig
+from repro.core.nl_config import NeuraLUTConfig, is_graph_config
 
 K_SIMPLIFY = {"subnet": 0.70, "poly": 0.80, "linear": 0.45}
 
@@ -51,16 +51,35 @@ class HwEstimate:
     layers: int
 
 
-def estimate(cfg: NeuraLUTConfig) -> HwEstimate:
-    luts = 0.0
+def estimate(cfg) -> HwEstimate:
+    """Model ``cfg`` — a chain (``NeuraLUTConfig``) or LUT DAG
+    (``LUTGraphConfig``).  For a DAG each node costs one ROM per branch
+    (PolyLUT-Add arXiv:2406.04910: A ROMs + an A-input adder replace one
+    2^{A*beta*F}-entry ROM), the adder tree costs its full output width
+    in carry LUTs per neuron (adders do not logic-simplify, so no
+    ``k``), and latency counts *pipeline levels on the critical path*
+    (longest input->output node chain) rather than node count — parallel
+    DAG branches cost area, not cycles."""
     k = K_SIMPLIFY.get(cfg.kind, 0.7)
-    for i, width in enumerate(cfg.layer_widths):
-        n_in = cfg.layer_in_bits(i) * cfg.layer_fan_in(i)
-        luts += width * cfg.beta * rom_cost(n_in) * k
+    luts = 0.0
+    if is_graph_config(cfg):
+        depth = {0: 0}  # buffer index -> pipeline level
+        for i, nd in enumerate(cfg.nodes):
+            n_in = cfg.node_in_bits(i) * nd.fan_in
+            luts += nd.width * cfg.beta * rom_cost(n_in) * k * nd.arity
+            if nd.arity > 1:
+                luts += nd.width * (nd.arity - 1) * cfg.node_out_bits(i)
+            depth[i + 1] = 1 + max(depth[s] for s in cfg.node_sources(i))
+        levels = depth[len(cfg.nodes)]
+    else:
+        for i, width in enumerate(cfg.layer_widths):
+            n_in = cfg.layer_in_bits(i) * cfg.layer_fan_in(i)
+            luts += width * cfg.beta * rom_cost(n_in) * k
+        levels = cfg.num_layers
     fmax = min(800.0, max(200.0, 1745.0 - 83.5 * math.log2(max(luts, 2.0))))
-    latency = cfg.num_layers / fmax * 1e3  # ns
+    latency = levels / fmax * 1e3  # ns
     return HwEstimate(luts=luts, fmax_mhz=fmax, latency_ns=latency,
-                      area_delay=luts * latency, layers=cfg.num_layers)
+                      area_delay=luts * latency, layers=levels)
 
 
 # Paper-reported reference points (Table III) for benchmark comparison.

@@ -54,16 +54,19 @@ pre-refactor behaviour of ``use_subnet_kernel`` on non-subnet models).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 
 from repro.core import subnet
-from repro.core.nl_config import NeuraLUTConfig
+from repro.core.nl_config import (NeuraLUTConfig, UnsupportedTopology,
+                                  is_graph_config)
 
 ROUTES = ("canonical", "neuron_leading", "kernel_infer", "kernel_train")
 PURPOSES = ("train", "eval", "convert")
 _KERNEL_ROUTES = ("kernel_infer", "kernel_train")
+
+CASCADE_ROUTES = ("fused_kernel", "fused_jnp", "layer_kernel", "layer_jnp")
 
 
 @dataclass(frozen=True)
@@ -150,3 +153,101 @@ def plan_subnet_exec(cfg: NeuraLUTConfig, *, purpose: str,
             route = "canonical"
     return SubnetExec(kind=cfg.kind, route=route, skip=cfg.skip,
                       interpret=interpret)
+
+
+@dataclass(frozen=True)
+class CascadeExec:
+    """Execution plan for the bit-exact LUT cascade (the serving path).
+
+    The serving stack used to thread ``fused=`` / ``use_kernel=`` /
+    ``block_b=`` / packed-operand keywords through
+    ``kernels/ops.cascade_apply`` and ``serve/engine.make_forward_fn``
+    as ad-hoc plumbing; this collapses them into one frozen, hashable
+    object (the ``SubnetExec`` of the inference side).  ``schedule`` is
+    the normalized DAG schedule (``lut_cascade.as_schedule``) — for a
+    chain it degenerates to one arity-1 node per layer, and
+    :attr:`is_chain` routes those through the exact legacy code paths.
+
+    Routes: ``fused_kernel`` (single Pallas launch over the whole DAG),
+    ``fused_jnp`` (its bit-packed jnp twin), ``layer_kernel`` /
+    ``layer_jnp`` (per-node dispatch; chains only — the per-layer
+    serving path predates the DAG and is kept for A/B benchmarking).
+    """
+    route: str
+    beta: int
+    schedule: Tuple[Tuple[Tuple[int, ...], int, int, int, int], ...]
+    block_b: int = 8
+    interpret: Optional[bool] = None  # kernel routes: None = auto
+
+    def __post_init__(self) -> None:
+        if self.route not in CASCADE_ROUTES:
+            raise ValueError(f"unknown cascade route {self.route!r}; "
+                             f"one of {CASCADE_ROUTES}")
+        if self.route.startswith("layer") and not self.is_chain:
+            raise UnsupportedTopology(
+                f"route {self.route!r} walks one buffer per layer and "
+                f"only supports chain topologies; use a fused route for "
+                f"LUT DAGs")
+
+    @property
+    def fused(self) -> bool:
+        return self.route.startswith("fused")
+
+    @property
+    def use_kernel(self) -> bool:
+        return self.route.endswith("kernel")
+
+    @property
+    def is_chain(self) -> bool:
+        return all(srcs == (i,) and arity == 1
+                   for i, (srcs, arity, _, _, _) in enumerate(self.schedule))
+
+    def apply(self, codes: jax.Array, shift_mats, packed_tables
+              ) -> jax.Array:
+        """Run the fused cascade: (B, in) codes -> (B, classes) codes.
+
+        Only the fused routes execute here — the per-layer routes keep
+        their unpacked operands and live in ``serve/engine.py``.
+        """
+        if not self.fused:
+            raise ValueError(f"CascadeExec.apply only runs fused routes; "
+                             f"route {self.route!r} is dispatched by the "
+                             f"serve engine's per-layer builder")
+        if self.use_kernel:
+            from repro.kernels.lut_cascade import lut_cascade
+            return lut_cascade(codes, list(shift_mats), list(packed_tables),
+                               self.schedule, block_b=self.block_b,
+                               interpret=self.interpret)
+        from repro.kernels.ref import lut_cascade_packed_ref
+        return lut_cascade_packed_ref(
+            codes, list(shift_mats), list(packed_tables), self.beta,
+            schedule=None if self.is_chain else self.schedule)
+
+
+def plan_cascade_exec(cfg, *, route: Optional[str] = None,
+                      fused: bool = True,
+                      use_kernel: Optional[bool] = None,
+                      backend: Optional[str] = None,
+                      block_b: int = 8,
+                      interpret: Optional[bool] = None) -> CascadeExec:
+    """Build the cascade plan for ``cfg`` (chain or LUT-graph).
+
+    ``route`` wins when given; otherwise it is assembled from the legacy
+    ``fused`` / ``use_kernel`` pair (``use_kernel`` defaults to kernel
+    on TPU, jnp twin elsewhere) so existing call sites translate 1:1.
+    Per-layer routes on a non-chain graph raise ``UnsupportedTopology``
+    at plan time, not deep inside a jit trace.
+    """
+    from repro.kernels.lut_cascade import (as_schedule, cascade_meta,
+                                           graph_cascade_meta)
+    if is_graph_config(cfg):
+        schedule = graph_cascade_meta(cfg)
+    else:
+        schedule = as_schedule(cascade_meta(cfg))
+    if route is None:
+        if use_kernel is None:
+            use_kernel = (backend or jax.default_backend()) == "tpu"
+        route = (("fused_" if fused else "layer_")
+                 + ("kernel" if use_kernel else "jnp"))
+    return CascadeExec(route=route, beta=cfg.beta, schedule=schedule,
+                       block_b=block_b, interpret=interpret)

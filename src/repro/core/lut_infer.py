@@ -15,7 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import quant
-from repro.core.nl_config import NeuraLUTConfig
+from repro.core.nl_config import (LUTGraphConfig, NeuraLUTConfig,
+                                  is_graph_config)
 
 Params = Dict
 
@@ -132,15 +133,52 @@ def lut_forward(cfg: NeuraLUTConfig, tables: List[np.ndarray],
     return c
 
 
-def class_values(cfg: NeuraLUTConfig, params: Params, out_codes: jax.Array
+def graph_lut_forward(cfg: LUTGraphConfig, tables: List, statics: List[Dict],
+                      codes: jax.Array) -> jax.Array:
+    """Per-node LUT-DAG oracle: codes (B, in_features) int32 -> (B,
+    classes) output codes.
+
+    ``tables[i]`` is the node's per-branch table list (a bare array is
+    accepted for arity-1 nodes); ``statics[i]`` carries ``"conns"`` (or
+    the legacy ``"conn"``).  Each branch looks its beta-bit code up in
+    its own table over the node's concatenated source pool; an
+    adder-tree node *sums* the branch codes — by the shared-quantizer
+    contract the sum IS the node's (beta + log2 A)-bit output code.
+    For degenerate chains this computes exactly :func:`lut_forward`.
+    """
+    bufs = [codes.astype(jnp.int32)]
+    for i, nd in enumerate(cfg.nodes):
+        srcs = cfg.node_sources(i)
+        pool = (bufs[srcs[0]] if len(srcs) == 1
+                else jnp.concatenate([bufs[s] for s in srcs], axis=1))
+        in_bits = cfg.node_in_bits(i)
+        conns = (statics[i]["conns"] if "conns" in statics[i]
+                 else [statics[i]["conn"]])
+        tbls = (tables[i] if isinstance(tables[i], (list, tuple))
+                else [tables[i]])
+        out = None
+        for a in range(nd.arity):
+            conn = jnp.asarray(np.asarray(conns[a]))
+            gathered = pool[:, conn]                   # (B, O, F)
+            addr = pack_index(gathered, in_bits)       # (B, O)
+            tbl = jnp.asarray(np.asarray(tbls[a]).astype(np.int32))
+            c = tbl[jnp.arange(tbl.shape[0])[None, :], addr
+                    ].astype(jnp.int32)
+            out = c if out is None else out + c
+        bufs.append(out)
+    return bufs[-1]
+
+
+def class_values(cfg, params: Params, out_codes: jax.Array
                  ) -> jax.Array:
     """Dequantize final-layer codes -> comparable class scores."""
     s = jnp.exp(params["layers"][-1]["quant"]["log_s"])
     return (out_codes.astype(jnp.float32) - 2 ** (cfg.beta - 1)) * s
 
 
-def predict(cfg: NeuraLUTConfig, params: Params, tables, statics,
+def predict(cfg, params: Params, tables, statics,
             x: jax.Array) -> jax.Array:
     codes = input_codes(cfg, params, x)
-    out = lut_forward(cfg, tables, statics, codes)
+    fwd = graph_lut_forward if is_graph_config(cfg) else lut_forward
+    out = fwd(cfg, tables, statics, codes)
     return jnp.argmax(class_values(cfg, params, out), axis=-1)

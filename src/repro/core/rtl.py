@@ -25,7 +25,8 @@ from typing import Dict, Iterator, List
 
 import numpy as np
 
-from repro.core.nl_config import NeuraLUTConfig
+from repro.core.nl_config import (NeuraLUTConfig, UnsupportedTopology,
+                                  is_graph_config)
 
 _HEX_CHARS = np.array(list("0123456789abcdef"))
 
@@ -109,9 +110,26 @@ def generate_layer(cfg: NeuraLUTConfig, idx: int, table: np.ndarray,
     return "".join(_iter_layer_chunks(cfg, idx, table, conn))
 
 
-def generate_top(cfg: NeuraLUTConfig, tables: List[np.ndarray],
+def generate_top(cfg, tables: List[np.ndarray],
                  statics: List[Dict], out_dir: str) -> List[str]:
-    """Write layer files + top module; returns file paths."""
+    """Write layer files + top module; returns file paths.
+
+    The top module chains layers through one linear pipeline bus, so a
+    ``LUTGraphConfig`` is accepted only when its topology is a
+    degenerate chain (its single-branch operands are unwrapped to the
+    legacy per-layer form); a real DAG raises ``UnsupportedTopology``
+    here rather than emitting wiring that silently drops fan-out edges.
+    """
+    if is_graph_config(cfg):
+        if not cfg.is_chain:
+            raise UnsupportedTopology(
+                f"generate_top emits a linear layer pipeline; config "
+                f"'{cfg.name}' is a LUT DAG (adder branches / fan-out) "
+                f"— per-node RTL emission is not implemented")
+        tables = [t[0] if isinstance(t, (list, tuple)) else t
+                  for t in tables]
+        statics = [{"conn": np.asarray(s["conns"][0] if "conns" in s
+                                       else s["conn"])} for s in statics]
     out = Path(out_dir)
     out.mkdir(parents=True, exist_ok=True)
     paths = []

@@ -41,7 +41,8 @@ import numpy as np
 from repro.core import quant, subnet
 from repro.core.exec_plan import SubnetExec, plan_subnet_exec
 from repro.core.lut_infer import pack_tables_jnp, packed_slots
-from repro.core.nl_config import NeuraLUTConfig
+from repro.core.nl_config import (LUTGraphConfig, NeuraLUTConfig,
+                                  is_graph_config)
 
 Params = Dict
 
@@ -225,23 +226,32 @@ def layer_truth_table(cfg: NeuraLUTConfig, params: Params, state: Params,
     return table.astype(np.uint16)
 
 
-def convert(cfg: NeuraLUTConfig, params: Params, state: Params,
+def convert(cfg, params: Params, state: Params,
             statics: List[Dict], *, batch: int = 4096,
             use_subnet_kernel: Optional[bool] = None) -> List[np.ndarray]:
-    """All layers' truth tables (unpacked uint16)."""
+    """All layers' truth tables (unpacked uint16).  For a
+    ``LUTGraphConfig`` this is :func:`convert_graph` (per-node lists)."""
+    if is_graph_config(cfg):
+        return convert_graph(cfg, params, state, statics, batch=batch,
+                             use_subnet_kernel=use_subnet_kernel)
     return [layer_truth_table(cfg, params, state, statics, i, batch=batch,
                               use_subnet_kernel=use_subnet_kernel)
             for i in range(cfg.num_layers)]
 
 
-def convert_packed(cfg: NeuraLUTConfig, params: Params, state: Params,
+def convert_packed(cfg, params: Params, state: Params,
                    statics: List[Dict], *, batch: int = 4096,
                    use_subnet_kernel: Optional[bool] = None
                    ) -> Tuple[List[np.ndarray], List[np.ndarray]]:
     """All layers' tables in both forms: ([unpacked uint16], [bit-packed
     int32]) with the packing fused into the device sweep.  Feed both to
     ``serve.bundle_from_training(..., packed_tables=...)`` and the
-    resulting bundle is serving-ready without a prepack step."""
+    resulting bundle is serving-ready without a prepack step.  Graph
+    configs return per-node *lists* of branch tables in both slots."""
+    if is_graph_config(cfg):
+        return convert_graph_packed(cfg, params, state, statics,
+                                    batch=batch,
+                                    use_subnet_kernel=use_subnet_kernel)
     exec_plan = _convert_plan(cfg, use_subnet_kernel)
     tables, packeds = [], []
     for i in range(cfg.num_layers):
@@ -257,3 +267,87 @@ def convert_packed(cfg: NeuraLUTConfig, params: Params, state: Params,
         tables.append(table)
         packeds.append(packed)
     return tables, packeds
+
+
+# ---------------------------------------------------------------------------
+# Per-node LUT-graph conversion (DAG topologies)
+
+
+def _graph_pool_scales(cfg: LUTGraphConfig, params: Params, idx: int
+                       ) -> jax.Array:
+    """Per-channel scale of node ``idx``'s concatenated source pool.
+
+    An adder-tree source node's output code is the *sum* of its branch
+    codes under one shared quantizer, so its dequantization scale is
+    that single quantizer scale — the same formula as a plain code, just
+    at ``beta + log2(A)`` bits (handled by the sweep's ``beta_in``)."""
+    parts = []
+    for b in cfg.node_sources(idx):
+        if b == 0:
+            parts.append(jnp.exp(params["in_quant"]["log_s"]))
+        else:
+            parts.append(jnp.exp(params["layers"][b - 1]["quant"]["log_s"]))
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+
+def _graph_node_sweep(cfg: LUTGraphConfig, params: Params, state: Params,
+                      statics: List[Dict], idx: int, *, batch: int,
+                      exec_plan: SubnetExec):
+    """One node's fused sweeps -> (per-branch [(O, T) uint16],
+    per-branch [packed int32 | None]).  Reuses the chain sweep cache:
+    the node's geometry key (beta_in, F, T) is all ``_get_sweep`` needs,
+    and every branch of a node shares one compiled executable."""
+    from repro.core.model import node_branch_params, node_static_conns
+    _guard_size(cfg, idx)
+    nd = cfg.nodes[idx]
+    t = cfg.table_size(idx)
+    chunk = _chunk_for(t, batch)
+    fn = _get_sweep(cfg, idx, chunk, exec_plan)
+    src_scales = jnp.asarray(_graph_pool_scales(cfg, params, idx))
+    conns = node_static_conns(statics[idx])
+    lp, ls = params["layers"][idx], state["layers"][idx]
+    tables, packeds = [], []
+    for a, (fnp, bnp, bns) in enumerate(node_branch_params(nd, lp, ls)):
+        slot_scale = src_scales[jnp.asarray(conns[a])]  # (O, F)
+        table, packed = fn(slot_scale, fnp, bnp, bns, lp["quant"])
+        tables.append(np.asarray(table))
+        packeds.append(None if packed is None else np.asarray(packed))
+    return tables, packeds
+
+
+def convert_graph(cfg: LUTGraphConfig, params: Params, state: Params,
+                  statics: List[Dict], *, batch: int = 4096,
+                  use_subnet_kernel: Optional[bool] = None
+                  ) -> List[List[np.ndarray]]:
+    """Per-node truth tables: ``out[i]`` is node i's per-branch list of
+    (O, T) uint16 tables."""
+    exec_plan = _convert_plan(cfg, use_subnet_kernel)
+    out = []
+    for i in range(cfg.num_layers):
+        tables, _ = _graph_node_sweep(cfg, params, state, statics, i,
+                                      batch=batch, exec_plan=exec_plan)
+        out.append([t.astype(np.uint16) for t in tables])
+    return out
+
+
+def convert_graph_packed(cfg: LUTGraphConfig, params: Params, state: Params,
+                         statics: List[Dict], *, batch: int = 4096,
+                         use_subnet_kernel: Optional[bool] = None
+                         ) -> Tuple[List[List[np.ndarray]],
+                                    List[List[np.ndarray]]]:
+    """Graph twin of :func:`convert_packed`: per-node lists of
+    ([unpacked uint16], [bit-packed int32]) branch tables."""
+    exec_plan = _convert_plan(cfg, use_subnet_kernel)
+    all_tables, all_packed = [], []
+    for i in range(cfg.num_layers):
+        tables, packeds = _graph_node_sweep(cfg, params, state, statics, i,
+                                            batch=batch,
+                                            exec_plan=exec_plan)
+        if any(p is None for p in packeds):
+            raise ValueError(
+                f"node {i}: table size {cfg.table_size(i)} smaller than "
+                f"the packed word capacity {packed_slots(cfg.beta)} "
+                f"(beta={cfg.beta}); geometry not servable bit-packed")
+        all_tables.append(tables)
+        all_packed.append(packeds)
+    return all_tables, all_packed

@@ -28,6 +28,15 @@ multi-layer network per batch tile without leaving VMEM**:
 Grid tiles the batch only; all per-layer shift matrices and packed
 tables are whole-array VMEM operands (constant across the batch loop).
 Non-divisible B is handled by internal padding.
+
+The kernel walks a topologically-sorted **DAG schedule**, of which the
+linear cascade is the degenerate chain: each node may read several
+earlier buffers (concat realized as a sum of per-source shift-matmuls —
+no on-chip concatenate) and may be an arity-A adder tree (A sub-LUT
+branches whose looked-up codes are summed in VMEM before the next
+node's shift-matmul — "one more VMEM-resident reduction").  For a chain
+schedule the emitted op sequence is identical to the original per-layer
+loop, so legacy callers are bit- and performance-identical.
 """
 from __future__ import annotations
 
@@ -40,11 +49,43 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.lut_infer import pack_tables, packed_slots, shift_weights
+from repro.core.nl_config import LUTGraphConfig
 
 # Static per-layer geometry: (word_bits, slot_bits, beta_out) where
 # word_bits = log2(T/P) drives the mux tree, slot_bits = log2(P) selects
 # inside the packed word, beta_out is the stored code width.
 LayerMeta = Tuple[int, int, int]
+
+# Static per-node DAG geometry: (srcs, arity, word_bits, slot_bits,
+# beta_out).  ``srcs`` are *buffer* indices — buffer 0 is the model
+# input, buffer j+1 is node j's output — and the flat operand order is
+# one shift matrix per (node, branch, src) and one packed table per
+# (node, branch), nodes in schedule order.  A chain layer i is the
+# degenerate node ((i,), 1, wb, sb, beta).
+NodeSched = Tuple[Tuple[int, ...], int, int, int, int]
+
+
+def as_schedule(meta) -> Tuple[NodeSched, ...]:
+    """Normalize kernel geometry: legacy per-layer ``LayerMeta`` 3-tuples
+    (``cascade_meta``) or a DAG schedule (``graph_cascade_meta``) ->
+    the canonical ``NodeSched`` tuple (hashable, jit-static)."""
+    out = []
+    for i, m in enumerate(meta):
+        if len(m) == 3:
+            wb, sb, beta = m
+            out.append(((i,), 1, int(wb), int(sb), int(beta)))
+        else:
+            srcs, arity, wb, sb, beta = m
+            out.append((tuple(int(s) for s in srcs), int(arity),
+                        int(wb), int(sb), int(beta)))
+    return tuple(out)
+
+
+def schedule_operand_counts(schedule) -> Tuple[int, int]:
+    """(num shift mats, num packed tables) the schedule consumes."""
+    sched = as_schedule(schedule)
+    return (sum(a * len(srcs) for srcs, a, *_ in sched),
+            sum(a for _, a, *_ in sched))
 
 
 def build_shift_mats(cfg, statics: Sequence[dict]) -> List[np.ndarray]:
@@ -87,6 +128,67 @@ def cascade_meta(cfg) -> Tuple[LayerMeta, ...]:
     return tuple(meta)
 
 
+def graph_cascade_meta(cfg: LUTGraphConfig) -> Tuple[NodeSched, ...]:
+    """Static DAG kernel geometry, derived from the graph config alone
+    (source indices and table sizes are config-level; only the shift
+    matrices depend on the sampled connectivity)."""
+    sched = []
+    p = packed_slots(cfg.beta)
+    for i, nd in enumerate(cfg.nodes):
+        t = cfg.table_size(i)
+        if t % p:
+            raise ValueError(f"node {i}: table size {t} not a multiple "
+                             f"of packed word capacity {p}")
+        sched.append((cfg.node_sources(i), nd.arity,
+                      (t // p).bit_length() - 1, p.bit_length() - 1,
+                      cfg.beta))
+    return tuple(sched)
+
+
+def build_graph_shift_mats(cfg: LUTGraphConfig, statics: Sequence[dict]
+                           ) -> List[np.ndarray]:
+    """Flat shift matrices in (node, branch, src) order.
+
+    Each branch's scatter is built over the node's concatenated source
+    pool and then split back per source buffer, so the kernel can sum
+    per-source dots instead of concatenating buffers on chip.  For a
+    degenerate chain this returns exactly :func:`build_shift_mats`.
+    """
+    from repro.core.model import node_static_conns
+    mats: List[np.ndarray] = []
+    for i, nd in enumerate(cfg.nodes):
+        srcs = cfg.node_sources(i)
+        widths = [cfg.buffer_width(b) for b in srcs]
+        offsets = np.concatenate([[0], np.cumsum(widths)]).astype(int)
+        pool_w = int(offsets[-1])
+        w = shift_weights(cfg.node_in_bits(i), nd.fan_in
+                          ).astype(np.float32)
+        for conn in node_static_conns(statics[i])[:nd.arity]:
+            conn = np.asarray(conn)
+            o = conn.shape[0]
+            sm = np.zeros((pool_w, o), np.float32)
+            np.add.at(sm, (conn, np.broadcast_to(
+                np.arange(o)[:, None], conn.shape)), w[None, :])
+            for s in range(len(srcs)):
+                mats.append(np.ascontiguousarray(
+                    sm[offsets[s]:offsets[s + 1]]))
+    return mats
+
+
+def graph_cascade_tables(cfg: LUTGraphConfig, tables: Sequence
+                         ) -> List[np.ndarray]:
+    """Bit-pack per-node branch tables into the flat (node, branch)
+    kernel operand order.  ``tables[i]`` may be a bare array (arity-1
+    node) or the per-branch list."""
+    out: List[np.ndarray] = []
+    for i in range(cfg.num_layers):
+        t = tables[i]
+        branches = t if isinstance(t, (list, tuple)) else [t]
+        for b in branches:
+            out.append(pack_tables(np.asarray(b), cfg.beta))
+    return out
+
+
 def _mux_word(packed: jax.Array, wsel: jax.Array, word_bits: int
               ) -> jax.Array:
     """Binary mux tree over packed words.
@@ -106,44 +208,73 @@ def _mux_word(packed: jax.Array, wsel: jax.Array, word_bits: int
     return jnp.broadcast_to(live[..., 0], (bt, o))
 
 
-def _cascade_kernel(meta: Tuple[LayerMeta, ...], *refs):
-    """refs: codes, (shift_mat_i, packed_tbl_i) per layer, out."""
-    codes_ref = refs[0]
+def _cascade_kernel(schedule: Tuple[NodeSched, ...], *refs):
+    """refs: codes, then per node / branch: shift mats (one per src)
+    followed by the branch's packed table; out last.
+
+    Buffers ride between nodes as exact small f32 integers (the next
+    shift-matmul feeds the MXU directly); a buffer is dropped as soon
+    as no later node reads it, so a chain keeps exactly one live buffer
+    — the original per-layer kernel's working set.
+    """
     out_ref = refs[-1]
-    # Codes ride between layers as exact small f32 integers: the next
-    # layer's shift-matmul feeds the MXU directly, no casts in the loop.
-    c = codes_ref[...].astype(jnp.float32)  # (Bt, W_0)
-    for i, (word_bits, slot_bits, beta) in enumerate(meta):
-        sm = refs[1 + 2 * i][...]           # (W_{i-1}, O_i) f32
-        packed = refs[2 + 2 * i][...]       # (O_i, Tw_i) int32
-        addr = jnp.dot(c, sm, preferred_element_type=jnp.float32)
-        addr = addr.astype(jnp.int32)       # exact: addr < 2^20 << 2^24
-        wsel = jax.lax.shift_right_logical(addr, slot_bits)
-        slot = addr & ((1 << slot_bits) - 1)
-        word = _mux_word(packed, wsel, word_bits)
-        code = jax.lax.shift_right_logical(word, beta * slot) \
-            & ((1 << beta) - 1)
-        c = code.astype(jnp.float32)
-    out_ref[...] = c.astype(out_ref.dtype)
+    bufs: List[Optional[jax.Array]] = [refs[0][...].astype(jnp.float32)]
+    last_use = {0: 0}
+    for n, (srcs, *_rest) in enumerate(schedule):
+        for s in srcs:
+            last_use[s] = n
+    r = 1
+    for n, (srcs, arity, word_bits, slot_bits, beta) in enumerate(schedule):
+        node_code = None
+        for _a in range(arity):
+            addr_f = None
+            for s in srcs:
+                sm = refs[r][...]           # (W_src, O) f32
+                r += 1
+                d = jnp.dot(bufs[s], sm,
+                            preferred_element_type=jnp.float32)
+                addr_f = d if addr_f is None else addr_f + d
+            packed = refs[r][...]           # (O, Tw) int32
+            r += 1
+            addr = addr_f.astype(jnp.int32)  # exact: addr < 2^20 << 2^24
+            wsel = jax.lax.shift_right_logical(addr, slot_bits)
+            slot = addr & ((1 << slot_bits) - 1)
+            word = _mux_word(packed, wsel, word_bits)
+            code = jax.lax.shift_right_logical(word, beta * slot) \
+                & ((1 << beta) - 1)
+            node_code = code if node_code is None else node_code + code
+        for s in set(srcs):
+            if last_use[s] == n:
+                bufs[s] = None
+        bufs.append(node_code.astype(jnp.float32))
+    out_ref[...] = bufs[-1].astype(out_ref.dtype)
 
 
 def lut_cascade(
     codes: jax.Array,                      # (B, W_0) int32 input codes
-    shift_mats: Sequence[jax.Array],       # [(W_{i-1}, O_i) f32]
-    packed_tables: Sequence[jax.Array],    # [(O_i, Tw_i) int32]
-    meta: Tuple[LayerMeta, ...],           # cascade_meta(cfg)
+    shift_mats: Sequence[jax.Array],       # flat (node, branch, src) order
+    packed_tables: Sequence[jax.Array],    # flat (node, branch) order
+    meta,                                  # cascade_meta / graph_cascade_meta
     *,
     block_b: int = 8,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Returns (B, O_last) int32 output codes of the whole LUT network.
+    """Returns (B, O_last) int32 output codes of the whole LUT network
+    — chain or DAG — in ONE launch.
 
-    Bit-exact vs ``repro.core.lut_infer.lut_forward`` (the oracle) for
-    any valid (tables, statics) pair.  ``interpret=None`` auto-selects:
-    compiled on TPU, interpreter elsewhere.
+    ``meta`` is either the legacy per-layer ``cascade_meta(cfg)`` or a
+    DAG ``graph_cascade_meta(cfg)`` schedule (``as_schedule`` normalizes
+    both).  Bit-exact vs ``lut_infer.lut_forward`` /
+    ``graph_lut_forward`` (the oracles) for any valid (tables, statics)
+    pair.  ``interpret=None`` auto-selects: compiled on TPU,
+    interpreter elsewhere.
     """
-    if len(shift_mats) != len(meta) or len(packed_tables) != len(meta):
-        raise ValueError("shift_mats / packed_tables / meta length mismatch")
+    meta = as_schedule(meta)
+    n_sm, n_pt = schedule_operand_counts(meta)
+    if len(shift_mats) != n_sm or len(packed_tables) != n_pt:
+        raise ValueError(
+            f"schedule consumes {n_sm} shift mats / {n_pt} packed tables, "
+            f"got {len(shift_mats)} / {len(packed_tables)}")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     b = codes.shape[0]
@@ -156,11 +287,20 @@ def lut_cascade(
 
     in_specs = [pl.BlockSpec((block_b, codes.shape[1]), lambda i: (i, 0))]
     operands = [codes.astype(jnp.int32)]
-    for sm, tw in zip(shift_mats, packed_tables):
-        in_specs.append(pl.BlockSpec(sm.shape, lambda i: (0, 0)))
-        in_specs.append(pl.BlockSpec(tw.shape, lambda i: (0, 0)))
-        operands.append(sm.astype(jnp.float32))
-        operands.append(tw.astype(jnp.int32))
+    sm_i = pt_i = 0
+    # Operands interleave exactly as the kernel consumes them: per node,
+    # per branch, the per-src shift mats then the branch's packed table.
+    for srcs, arity, *_rest in meta:
+        for _a in range(arity):
+            for _s in srcs:
+                sm = shift_mats[sm_i]
+                sm_i += 1
+                in_specs.append(pl.BlockSpec(sm.shape, lambda i: (0, 0)))
+                operands.append(sm.astype(jnp.float32))
+            tw = packed_tables[pt_i]
+            pt_i += 1
+            in_specs.append(pl.BlockSpec(tw.shape, lambda i: (0, 0)))
+            operands.append(tw.astype(jnp.int32))
 
     out = pl.pallas_call(
         functools.partial(_cascade_kernel, meta),

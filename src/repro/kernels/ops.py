@@ -55,11 +55,20 @@ def lut_cascade_op(codes, shift_mats, packed_tables, *, meta,
                        block_b=block_b, interpret=interp)
 
 
-def cascade_apply(codes, shift_mats, packed_tables, *, meta, beta: int,
-                  use_kernel: bool, block_b: int = 8):
+def cascade_apply(codes, shift_mats, packed_tables, *, plan=None,
+                  meta=None, beta: Optional[int] = None,
+                  use_kernel: Optional[bool] = None, block_b: int = 8):
     """Un-jitted fused-cascade dispatch: the Pallas ``lut_cascade`` kernel
     or its bit-packed jnp twin (``ref.lut_cascade_packed_ref``), both
-    bit-exact vs ``lut_infer.lut_forward``.
+    bit-exact vs ``lut_infer.lut_forward`` /
+    ``lut_infer.graph_lut_forward``.
+
+    ``plan`` (a ``core.exec_plan.CascadeExec``) is the one true dispatch
+    input; the ``meta=`` / ``beta=`` / ``use_kernel=`` keywords are the
+    pre-plan calling convention, kept as a deprecation shim — they are
+    folded into an equivalent ``CascadeExec`` and dispatch identically
+    (tests/test_lut_graph.py pins this).  Passing both forms is an
+    error rather than a silent precedence rule.
 
     The serve engine wraps this in its own jit, and the shard_map'd
     multi-device paths (serve/sharded.py) call it per device shard — in
@@ -69,12 +78,18 @@ def cascade_apply(codes, shift_mats, packed_tables, *, meta, beta: int,
     interpreter elsewhere) lives in ``lut_cascade`` itself, triggered by
     ``interpret=None``.
     """
-    if use_kernel:
-        return lut_cascade(codes, list(shift_mats), list(packed_tables),
-                           meta, block_b=block_b, interpret=None)
-    from .ref import lut_cascade_packed_ref
-    return lut_cascade_packed_ref(codes, list(shift_mats),
-                                  list(packed_tables), beta)
+    from repro.core.exec_plan import CascadeExec
+    from .lut_cascade import as_schedule
+    if plan is None:
+        if meta is None or beta is None or use_kernel is None:
+            raise TypeError("cascade_apply needs plan= or the legacy "
+                            "meta=/beta=/use_kernel= trio")
+        plan = CascadeExec(
+            route="fused_kernel" if use_kernel else "fused_jnp",
+            beta=beta, schedule=as_schedule(meta), block_b=block_b)
+    elif meta is not None or beta is not None or use_kernel is not None:
+        raise TypeError("pass plan= or the legacy keywords, not both")
+    return plan.apply(codes, shift_mats, packed_tables)
 
 
 def subnet_kernel_apply(fn_params: Dict, xg, skip: int, *,

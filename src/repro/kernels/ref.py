@@ -54,29 +54,49 @@ def lut_gather_ref(tables: jax.Array, addr: jax.Array) -> jax.Array:
 
 
 def lut_cascade_ref(codes: jax.Array,
-                    conns: List[jax.Array],
-                    tables: List[jax.Array],
-                    betas: Tuple[int, ...]) -> jax.Array:
-    """Reference for the fused LUT-cascade kernel: per layer, gather the
+                    conns: List,
+                    tables: List,
+                    betas: Tuple[int, ...],
+                    *,
+                    srcs: Optional[List[Tuple[int, ...]]] = None
+                    ) -> jax.Array:
+    """Reference for the fused LUT-cascade kernel: per node, gather the
     connected codes, pack the address with the vectorized
     ``lut_infer.pack_index`` dot, and look the output code up.
 
-    codes: (B, W_0) int32; conns[i]: (O_i, F_i); tables[i]: (O_i, T_i);
+    Chain form (default): conns[i]: (O_i, F_i); tables[i]: (O_i, T_i);
     betas[i] = bit-width of the inputs layer i consumes.  Bit-identical
     to ``lut_infer.lut_forward`` (and to ``lut_cascade``).
+
+    DAG form: ``srcs[i]`` names node i's source buffers (0 = input,
+    j+1 = node j), and ``conns[i]`` / ``tables[i]`` may be per-branch
+    *lists* for adder-tree nodes — branch codes are summed, matching
+    ``lut_infer.graph_lut_forward``.
     """
     from repro.core.lut_infer import pack_index
-    c = codes.astype(jnp.int32)
-    for conn, tbl, beta_in in zip(conns, tables, betas):
-        addr = pack_index(c[:, conn], beta_in)     # (B, O_i)
-        c = lut_gather_ref(tbl.astype(jnp.int32), addr)
-    return c
+    bufs = [codes.astype(jnp.int32)]
+    for i, (conn_i, tbl_i, beta_in) in enumerate(zip(conns, tables, betas)):
+        src = (i,) if srcs is None else tuple(srcs[i])
+        pool = (bufs[src[0]] if len(src) == 1
+                else jnp.concatenate([bufs[s] for s in src], axis=1))
+        b_conns = (conn_i if isinstance(conn_i, (list, tuple))
+                   else [conn_i])
+        b_tbls = (tbl_i if isinstance(tbl_i, (list, tuple))
+                  else [tbl_i])
+        out = None
+        for conn, tbl in zip(b_conns, b_tbls):
+            addr = pack_index(pool[:, conn], beta_in)     # (B, O_i)
+            c = lut_gather_ref(jnp.asarray(tbl).astype(jnp.int32), addr)
+            out = c if out is None else out + c
+        bufs.append(out)
+    return bufs[-1]
 
 
 def lut_cascade_packed_ref(codes: jax.Array,
                            shift_mats: List[jax.Array],
                            packed_tables: List[jax.Array],
-                           beta_out: int) -> jax.Array:
+                           beta_out: int,
+                           schedule=None) -> jax.Array:
     """jnp twin of the Pallas cascade kernel: the serving fast path on
     non-TPU backends, using the kernel's exact algorithm.
 
@@ -91,8 +111,17 @@ def lut_cascade_packed_ref(codes: jax.Array,
     cache-resident — this beats the unpacked per-layer gather path
     ~3x wall-clock even on XLA:CPU (see BENCH_kernels.json).
     Bit-identical to ``lut_cascade_ref``.
+
+    ``schedule`` (a ``lut_cascade`` DAG schedule; anything
+    ``as_schedule`` accepts) switches to the DAG walk over flat
+    (node, branch, src) shift mats and (node, branch) packed tables —
+    per-source dots are summed (concat) and per-branch codes are summed
+    (adder tree), mirroring the Pallas kernel op for op.  ``None``
+    keeps the legacy chain zip, which is the degenerate case.
     """
     from repro.core.lut_infer import packed_slots
+    if schedule is not None:
+        return _packed_dag_walk(codes, shift_mats, packed_tables, schedule)
     p = packed_slots(beta_out)
     slot_bits = p.bit_length() - 1
     mask = (1 << beta_out) - 1
@@ -106,3 +135,32 @@ def lut_cascade_packed_ref(codes: jax.Array,
         code = jax.lax.shift_right_logical(word, beta_out * slot) & mask
         c = code.astype(jnp.float32)
     return c.astype(jnp.int32)
+
+
+def _packed_dag_walk(codes: jax.Array, shift_mats: List[jax.Array],
+                     packed_tables: List[jax.Array], schedule) -> jax.Array:
+    """Schedule-driven bit-packed walk (see lut_cascade.NodeSched)."""
+    from repro.kernels.lut_cascade import as_schedule
+    bufs = [codes.astype(jnp.float32)]
+    sm_i = pt_i = 0
+    for srcs, arity, _word_bits, slot_bits, beta in as_schedule(schedule):
+        mask = (1 << beta) - 1
+        node_code = None
+        for _a in range(arity):
+            addr_f = None
+            for s in srcs:
+                sm = shift_mats[sm_i]
+                sm_i += 1
+                d = jnp.dot(bufs[s], jnp.asarray(sm).astype(jnp.float32))
+                addr_f = d if addr_f is None else addr_f + d
+            packed = packed_tables[pt_i]
+            pt_i += 1
+            addr = addr_f.astype(jnp.int32)
+            wsel = jax.lax.shift_right_logical(addr, slot_bits)
+            slot = addr & ((1 << slot_bits) - 1)
+            o = packed.shape[0]
+            word = packed[jnp.arange(o)[None, :], wsel]
+            code = jax.lax.shift_right_logical(word, beta * slot) & mask
+            node_code = code if node_code is None else node_code + code
+        bufs.append(node_code.astype(jnp.float32))
+    return bufs[-1].astype(jnp.int32)

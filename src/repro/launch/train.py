@@ -92,9 +92,13 @@ def train_neuralut_arch(args, cfg) -> None:
     statics = M.model_static(cfg)
     t0 = _time.time()
     tables, packed = TT.convert_packed(cfg, params, state, statics)
-    entries = sum(t.size for t in tables)
+    # Graph converters hand per-node lists of per-branch tables; chains
+    # hand a flat per-layer list.
+    flat_t = [t for n in tables for t in (n if isinstance(n, list) else [n])]
+    flat_p = [p for n in packed for p in (n if isinstance(n, list) else [n])]
+    entries = sum(t.size for t in flat_t)
     print(f"converted {entries} table entries in {_time.time()-t0:.2f}s "
-          f"(packed {sum(p.nbytes for p in packed)/1024:.1f} KiB)",
+          f"(packed {sum(p.nbytes for p in flat_p)/1024:.1f} KiB)",
           flush=True)
 
     if args.registry:
@@ -153,8 +157,8 @@ def main() -> None:
     from repro.config.base import ShapeConfig
 
     cfg = get_config(args.arch, reduced=args.reduced)
-    from repro.core.nl_config import NeuraLUTConfig
-    if isinstance(cfg, NeuraLUTConfig):
+    from repro.core.nl_config import NeuraLUTConfig, is_graph_config
+    if isinstance(cfg, NeuraLUTConfig) or is_graph_config(cfg):
         train_neuralut_arch(args, cfg)
         return
     if args.mesh == "host":

@@ -49,6 +49,7 @@ artifact — so serving never retrains (see registry.py).
 """
 from __future__ import annotations
 
+import dataclasses
 import queue
 import threading
 import time
@@ -60,6 +61,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import lut_infer as LI
+from repro.core.exec_plan import CascadeExec, plan_cascade_exec
 from repro.runtime.fault import ReplicaHealthTracker
 from repro.serve.metrics import ServeMetrics
 from repro.serve.registry import ServeBundle
@@ -89,9 +91,11 @@ def _divisor_block(n: int, cap: int) -> int:
     return min(n & -n, 1 << (cap.bit_length() - 1))
 
 
-def make_forward_fn(bundle: ServeBundle, *, use_kernel: bool,
+def make_forward_fn(bundle: ServeBundle, *, use_kernel: bool = False,
                     fused: bool = True, block_b: int = 8, block_o: int = 32,
-                    device=None) -> Callable[[jax.Array], jax.Array]:
+                    device=None,
+                    plan: Optional[CascadeExec] = None
+                    ) -> Callable[[jax.Array], jax.Array]:
     """Jitted (B, in_features) float32 -> (B,) int32 class predictions.
 
     Tables and connectivity are closed-over constants; retraces are per
@@ -100,15 +104,24 @@ def make_forward_fn(bundle: ServeBundle, *, use_kernel: bool,
     to that device — how each replica executor gets its own resident
     copy of the bundle; None keeps jax's default placement.
 
-    ``fused=True`` (the default) replaces the per-layer gather loop with
-    the whole-network cascade: the Pallas ``lut_cascade`` kernel when
-    ``use_kernel`` (one launch, bit-packed tables resident in VMEM,
-    zero inter-layer HBM traffic), else the single-jit bit-packed jnp
-    cascade (packed gather working set ~8x smaller, cache-resident).
-    All four paths are bit-exact vs ``lut_infer.lut_forward``
-    (tests/test_lut_cascade.py).
+    ``plan`` (a ``core.exec_plan.CascadeExec``) names the route
+    explicitly; the ``use_kernel``/``fused``/``block_b`` keywords are
+    the legacy spelling and are folded into an equivalent plan.  The
+    fused routes run the whole DAG schedule in one dispatch — the
+    Pallas ``lut_cascade`` kernel (``fused_kernel``: one launch,
+    bit-packed tables resident in VMEM, zero inter-node HBM traffic) or
+    the single-jit bit-packed jnp cascade (``fused_jnp``: packed gather
+    working set ~8x smaller, cache-resident).  The per-layer routes
+    walk one buffer per layer and therefore raise
+    ``UnsupportedTopology`` here — at build time, not inside a trace —
+    for non-chain LUT graphs.  All paths are bit-exact vs
+    ``lut_infer.lut_forward`` / ``graph_lut_forward``
+    (tests/test_lut_cascade.py, tests/test_lut_graph.py).
     """
     cfg = bundle.cfg
+    if plan is None:
+        plan = plan_cascade_exec(cfg, fused=fused, use_kernel=use_kernel,
+                                 block_b=block_b)
 
     def put(a):
         a = jnp.asarray(a)
@@ -116,38 +129,42 @@ def make_forward_fn(bundle: ServeBundle, *, use_kernel: bool,
 
     params = jax.tree.map(put, bundle.serve_params())
 
-    if fused:
+    if plan.fused:
         # Fused paths only touch the packed tables + shift matrices —
         # the unpacked int32 tables must NOT be uploaded (they are ~8x
         # the packed footprint).
         bundle.prepack()
         packed = [put(t) for t in bundle.packed_tables]
         shift_mats = [put(m) for m in bundle.shift_mats]
-        geom = bundle.cascade_geom
         from repro.kernels.ops import cascade_apply
     else:
-        tables = [put(np.asarray(t).astype(np.int32))
+        # Per-layer dispatch: plan construction already refused
+        # non-chain graphs, so a graph cfg here is a degenerate chain —
+        # unwrap its single-branch lists to the legacy operands.
+        from repro.core.model import node_static_conns
+        tables = [put(np.asarray(t[0] if isinstance(t, (list, tuple))
+                                 else t).astype(np.int32))
                   for t in bundle.tables]
-        conns = [put(s["conn"]) for s in bundle.statics]
+        conns = [put(node_static_conns(s)[0]) for s in bundle.statics]
         in_bits = tuple(cfg.layer_in_bits(i)
                         for i in range(cfg.num_layers))
-        if use_kernel:
+        if plan.use_kernel:
             from repro.kernels.ops import lut_lookup_op
 
     def forward(x: jax.Array) -> jax.Array:
         codes = LI.input_codes(cfg, params, x)
         c = codes.astype(jnp.int32)
-        if fused:
-            c = cascade_apply(c, shift_mats, packed, meta=geom,
-                              beta=cfg.beta, use_kernel=use_kernel,
-                              block_b=_divisor_block(c.shape[0], block_b))
+        if plan.fused:
+            bb = _divisor_block(c.shape[0], plan.block_b)
+            c = cascade_apply(c, shift_mats, packed,
+                              plan=dataclasses.replace(plan, block_b=bb))
         else:
             for i in range(cfg.num_layers):
                 gathered = c[:, conns[i]]                      # (B, O, F)
                 addr = LI.pack_index(gathered, in_bits[i])
                 tbl = tables[i]
-                if use_kernel:
-                    bb = _divisor_block(addr.shape[0], block_b)
+                if plan.use_kernel:
+                    bb = _divisor_block(addr.shape[0], plan.block_b)
                     # O needs no divisor: lut_lookup pads internally
                     c = lut_lookup_op(tbl, addr, block_b=bb,
                                       block_o=block_o)
@@ -349,7 +366,8 @@ class LUTServeEngine:
                  devices: Optional[Sequence] = None,
                  health: Optional[ReplicaHealthTracker] = None,
                  sharded: bool = False,
-                 shard_mode: str = "auto"):
+                 shard_mode: str = "auto",
+                 plan: Optional[CascadeExec] = None):
         if list(buckets) != sorted(set(buckets)):
             raise ValueError(f"buckets must be strictly increasing: {buckets}")
         if replicas < 1:
@@ -359,13 +377,21 @@ class LUTServeEngine:
                 "sharded=True serves through ONE shard_map'd executor "
                 "spanning the replica mesh; combine it with replicas=1 "
                 "(use plain replicas=N for independent-executor routing)")
+        if sharded and plan is not None:
+            raise ValueError("sharded=True plans its own shard_map'd "
+                             "dispatch; plan= applies to replica engines")
         self.bundle = bundle
         self.buckets = tuple(int(b) for b in buckets)
         self.max_wait_s = max_wait_ms / 1e3
-        kern = (jax.default_backend() == "tpu") if use_kernel is None \
-            else use_kernel
+        if plan is None and not sharded:
+            plan = plan_cascade_exec(bundle.cfg, fused=fused,
+                                     use_kernel=use_kernel)
+        self.plan = plan
+        kern = plan.use_kernel if plan is not None else (
+            (jax.default_backend() == "tpu") if use_kernel is None
+            else use_kernel)
         self.use_kernel = kern
-        self.fused = fused
+        self.fused = plan.fused if plan is not None else fused
         self.sharded = sharded
         self.metrics = metrics or ServeMetrics()
         self.health = health or ReplicaHealthTracker(replicas)
@@ -384,15 +410,13 @@ class LUTServeEngine:
         elif replicas == 1 and devices is None:
             # Single replica, unpinned: identical to the classic engine
             # (no cross-device transfers on single-device hosts).
-            forwards = [make_forward_fn(bundle, use_kernel=kern,
-                                        fused=fused)]
+            forwards = [make_forward_fn(bundle, plan=self.plan)]
             devs = [None]
         else:
             pool = list(devices) if devices is not None \
                 else jax.local_devices()
             devs = [pool[i % len(pool)] for i in range(replicas)]
-            forwards = [make_forward_fn(bundle, use_kernel=kern,
-                                        fused=fused, device=d)
+            forwards = [make_forward_fn(bundle, plan=self.plan, device=d)
                         for d in devs]
         self._executors = [
             _ReplicaExecutor(i, f, buckets=self.buckets, device=d,

@@ -30,26 +30,36 @@ import numpy as np
 
 from repro.checkpoint import CheckpointStore
 from repro.config import config_fingerprint
-from repro.core.nl_config import NeuraLUTConfig
+from repro.core.nl_config import (LUTGraphConfig, LUTNodeSpec,
+                                  NeuraLUTConfig, is_graph_config)
 
-BUNDLE_FORMAT = 1
+BUNDLE_FORMAT = 1          # chain bundles (the original schema)
+GRAPH_BUNDLE_FORMAT = 2    # LUT-DAG bundles: per-node branch lists + schedule
+SUPPORTED_FORMATS = (BUNDLE_FORMAT, GRAPH_BUNDLE_FORMAT)
 
 
 @dataclass
 class ServeBundle:
     """In-memory form of a registry entry (see module docstring)."""
 
-    cfg: NeuraLUTConfig
-    tables: List[np.ndarray]                 # [(O_i, T_i) uint16]
-    statics: List[Dict[str, np.ndarray]]     # [{"conn": (O_i, F_i), ...}]
+    cfg: NeuraLUTConfig                      # or LUTGraphConfig (schema v2)
+    # Chain bundles: tables[i] is layer i's (O_i, T_i) uint16 table and
+    # statics[i] = {"conn": (O_i, F_i)}.  Graph bundles: tables[i] is
+    # node i's per-branch *list* of tables and statics[i] carries
+    # "conns", a per-branch list — the DAG generalization of schema v1.
+    tables: List                             # [(O_i, T_i) u16] | [[...]]
+    statics: List[Dict[str, Any]]            # [{"conn(s)": ...}]
     in_log_s: np.ndarray                     # (in_features,) f32
     layer_log_s: List[np.ndarray]            # [(O_i,) f32]
     meta: Dict[str, Any] = field(default_factory=dict)
     # Fused-cascade operands, precomputed once by prepack() (registry
     # load does this eagerly so serving never packs on the hot path).
+    # ALWAYS flat lists — in the kernel's (node, branch[, src]) operand
+    # order — for both schemas, so the fused serving path is
+    # schema-agnostic.
     packed_tables: Optional[List[np.ndarray]] = None  # [(O_i, T_i/P) i32]
-    shift_mats: Optional[List[np.ndarray]] = None     # [(W_{i-1}, O_i) f32]
-    cascade_geom: Optional[tuple] = None              # lut_cascade meta
+    shift_mats: Optional[List[np.ndarray]] = None     # [(W_src, O_i) f32]
+    cascade_geom: Optional[tuple] = None              # lut_cascade schedule
     # Multi-device layout (serve/sharded.py), cached by plan_shards().
     shard_plan: Optional[Any] = None
 
@@ -78,6 +88,19 @@ class ServeBundle:
         (and the derived operands) already populated — the conversion
         sweep emits packed words directly — so this is a no-op for
         freshly converted models."""
+        if is_graph_config(self.cfg):
+            from repro.kernels.lut_cascade import (build_graph_shift_mats,
+                                                   graph_cascade_meta,
+                                                   graph_cascade_tables)
+            if self.packed_tables is None:
+                self.packed_tables = graph_cascade_tables(self.cfg,
+                                                          self.tables)
+            if self.shift_mats is None:
+                self.shift_mats = build_graph_shift_mats(self.cfg,
+                                                         self.statics)
+            if self.cascade_geom is None:
+                self.cascade_geom = graph_cascade_meta(self.cfg)
+            return self
         from repro.kernels.lut_cascade import (build_shift_mats,
                                                cascade_meta, cascade_tables)
         if self.packed_tables is None:
@@ -87,6 +110,26 @@ class ServeBundle:
         if self.cascade_geom is None:
             self.cascade_geom = cascade_meta(self.cfg)
         return self
+
+    @property
+    def schema_version(self) -> int:
+        """On-disk schema this bundle serializes to: 1 for chains, 2 for
+        LUT-DAG bundles (per-node branch lists + explicit schedule)."""
+        return (GRAPH_BUNDLE_FORMAT if is_graph_config(self.cfg)
+                else BUNDLE_FORMAT)
+
+    @property
+    def topology(self) -> tuple:
+        """Structural descriptor of the LUT network: ``("chain",
+        layer_widths)`` for v1 bundles, ``("dag", per-node specs)`` for
+        graphs.  Part of the graph ``geometry_key`` and recorded in the
+        saved manifest so ``TableRegistry.versions(detail=True)`` can
+        report it without loading tables."""
+        if not is_graph_config(self.cfg):
+            return ("chain", tuple(self.cfg.layer_widths))
+        return ("dag", tuple(
+            (n.name, n.width, n.fan_in, tuple(n.inputs), n.arity)
+            for n in self.cfg.nodes))
 
     @property
     def geometry_key(self) -> tuple:
@@ -100,6 +143,12 @@ class ServeBundle:
         connectivity are deliberately excluded — they are per-tenant
         operand values, not shapes."""
         cfg = self.cfg
+        if is_graph_config(cfg):
+            # The full node-spec topology IS the operand geometry for a
+            # DAG; chains keep their historical key so existing jit
+            # caches / tenant groupings are untouched.
+            return (cfg.in_features, cfg.num_classes, cfg.beta,
+                    cfg.beta_in, self.topology)
         return (cfg.in_features, tuple(cfg.layer_widths), cfg.num_classes,
                 cfg.beta, cfg.beta_in, cfg.fan_in, cfg.fan_in_0)
 
@@ -115,7 +164,7 @@ class ServeBundle:
 
     @property
     def num_table_bytes(self) -> int:
-        return sum(t.nbytes for t in self.tables)
+        return sum(t.nbytes for t in _flat_arrays(self.tables))
 
     @property
     def num_packed_table_bytes(self) -> int:
@@ -123,42 +172,91 @@ class ServeBundle:
         return sum(t.nbytes for t in self.packed_tables)
 
 
-def bundle_from_training(cfg: NeuraLUTConfig, params: Dict, tables: List,
+def _flat_arrays(nested) -> List[np.ndarray]:
+    """Flatten one level of per-node list nesting (graph bundles)."""
+    out: List[np.ndarray] = []
+    for item in nested:
+        if isinstance(item, (list, tuple)):
+            out.extend(np.asarray(a) for a in item)
+        else:
+            out.append(np.asarray(item))
+    return out
+
+
+def _static_value(s: Dict) -> Dict[str, Any]:
+    """Copy a static dict with arrays materialized (conns stay a list)."""
+    out: Dict[str, Any] = {}
+    for k, v in s.items():
+        if isinstance(v, (list, tuple)):
+            out[k] = [np.asarray(a) for a in v]
+        else:
+            out[k] = np.asarray(v)
+    return out
+
+
+def bundle_from_training(cfg, params: Dict, tables: List,
                          statics: List[Dict], *,
                          packed_tables: Optional[List] = None,
                          meta: Optional[Dict] = None) -> ServeBundle:
     """Extract the deployable subset from a training (params, tables,
-    statics) triple.
+    statics) triple — chain (``NeuraLUTConfig``) or LUT-DAG
+    (``LUTGraphConfig``; per-node table lists from
+    ``truth_table.convert_graph``).
 
-    Pass the packed tables from ``truth_table.convert_packed`` and the
-    bundle is completed serving-ready on the spot (shift matrices and
-    cascade geometry are derived here, so ``prepack`` finds nothing to
-    do on the load path)."""
+    Pass the packed tables from ``truth_table.convert_packed`` (or
+    ``convert_graph_packed``) and the bundle is completed serving-ready
+    on the spot (shift matrices and cascade geometry are derived here,
+    so ``prepack`` finds nothing to do on the load path)."""
+    if is_graph_config(cfg):
+        tbls: List = [[np.asarray(t) for t in node]
+                      if isinstance(node, (list, tuple))
+                      else [np.asarray(node)] for node in tables]
+    else:
+        tbls = [np.asarray(t) for t in tables]
     bundle = ServeBundle(
         cfg=cfg,
-        tables=[np.asarray(t) for t in tables],
-        statics=[{k: np.asarray(v) for k, v in s.items()} for s in statics],
+        tables=tbls,
+        statics=[_static_value(s) for s in statics],
         in_log_s=np.asarray(params["in_quant"]["log_s"], np.float32),
         layer_log_s=[np.asarray(lp["quant"]["log_s"], np.float32)
                      for lp in params["layers"]],
         meta=dict(meta or {}),
     )
     if packed_tables is not None:
-        bundle.packed_tables = [np.asarray(p) for p in packed_tables]
+        # Graph converters hand per-node lists; the cascade operand
+        # layout is always the flat (node, branch) order.
+        bundle.packed_tables = _flat_arrays(packed_tables)
         bundle.prepack()  # fills only shift_mats + cascade_geom
     return bundle
 
 
-def _cfg_to_meta(cfg: NeuraLUTConfig) -> Dict[str, Any]:
+def _cfg_to_meta(cfg) -> Dict[str, Any]:
     d = dataclasses.asdict(cfg)
-    d["layer_widths"] = list(d["layer_widths"])
+    if is_graph_config(cfg):
+        d["nodes"] = [{**nd, "inputs": list(nd["inputs"])}
+                      for nd in d["nodes"]]
+    else:
+        d["layer_widths"] = list(d["layer_widths"])
     return d
 
 
-def _cfg_from_meta(d: Dict[str, Any]) -> NeuraLUTConfig:
+def _cfg_from_meta(d: Dict[str, Any]):
     d = dict(d)
+    if "nodes" in d:
+        d["nodes"] = tuple(
+            LUTNodeSpec(name=nd["name"], width=nd["width"],
+                        fan_in=nd["fan_in"], inputs=tuple(nd["inputs"]),
+                        arity=nd["arity"]) for nd in d["nodes"])
+        return LUTGraphConfig(**d)
     d["layer_widths"] = tuple(d["layer_widths"])
     return NeuraLUTConfig(**d)
+
+
+def _topology_to_meta(topology: tuple):
+    """JSON-able form of ``ServeBundle.topology`` (tuples -> lists)."""
+    def conv(o):
+        return [conv(x) for x in o] if isinstance(o, tuple) else o
+    return conv(topology)
 
 
 class TableRegistry:
@@ -176,17 +274,31 @@ class TableRegistry:
 
     def save(self, name: str, bundle: ServeBundle, *,
              version: int = 0) -> Path:
-        tree = {
-            "tables": [np.ascontiguousarray(t) for t in bundle.tables],
-            "conn": [np.ascontiguousarray(s["conn"])
-                     for s in bundle.statics],
-            "in_log_s": bundle.in_log_s,
-            "layer_log_s": list(bundle.layer_log_s),
-        }
+        if bundle.schema_version == GRAPH_BUNDLE_FORMAT:
+            from repro.core.model import node_static_conns
+            tree = {
+                # Flat (node, branch) order; per-node grouping is
+                # re-derived from the config's arities at load.
+                "tables": [np.ascontiguousarray(t)
+                           for t in _flat_arrays(bundle.tables)],
+                "conn": [np.ascontiguousarray(c) for s in bundle.statics
+                         for c in node_static_conns(s)],
+                "in_log_s": bundle.in_log_s,
+                "layer_log_s": list(bundle.layer_log_s),
+            }
+        else:
+            tree = {
+                "tables": [np.ascontiguousarray(t) for t in bundle.tables],
+                "conn": [np.ascontiguousarray(s["conn"])
+                         for s in bundle.statics],
+                "in_log_s": bundle.in_log_s,
+                "layer_log_s": list(bundle.layer_log_s),
+            }
         meta = {
-            "format": BUNDLE_FORMAT,
+            "format": bundle.schema_version,
             "config": _cfg_to_meta(bundle.cfg),
             "fingerprint": config_fingerprint(bundle.cfg),
+            "topology": _topology_to_meta(bundle.topology),
             **bundle.meta,
         }
         return self._store(name).save(version, tree, meta=meta)
@@ -202,12 +314,33 @@ class TableRegistry:
         d = self.root / name
         return d.is_dir() and self._store(name).latest_step() is not None
 
-    def versions(self, name: str) -> List[int]:
+    def versions(self, name: str, *, detail: bool = False) -> List:
         """Committed versions of a model, ascending — the hot-swap
-        deployment path (serve/tenants.py) picks its candidate here."""
+        deployment path (serve/tenants.py) picks its candidate here.
+
+        ``detail=True`` returns one dict per version with its on-disk
+        ``schema_version`` (1 = chain, 2 = LUT-DAG) and ``topology``
+        descriptor read from the manifest, so deploy tooling can report
+        both without loading any tables.  Pre-PR v1 manifests carry no
+        topology record; it is reconstructed from the config."""
         if not (self.root / name).is_dir():
             return []
-        return self._store(name).list_steps()
+        steps = self._store(name).list_steps()
+        if not detail:
+            return steps
+        out = []
+        for step in steps:
+            meta = json.loads(
+                (self.root / name / f"step_{step:010d}" / "manifest.json")
+                .read_text())["meta"]
+            topo = meta.get("topology")
+            if topo is None:
+                cfg_d = meta.get("config", {})
+                topo = ["chain", list(cfg_d.get("layer_widths", []))]
+            out.append({"version": step,
+                        "schema_version": meta.get("format"),
+                        "topology": topo})
+        return out
 
     def load(self, name: str, *, version: Optional[int] = None,
              shard_replicas: Optional[int] = None,
@@ -222,31 +355,53 @@ class TableRegistry:
             (self.root / name / f"step_{step:010d}" / "manifest.json")
             .read_text())
         meta = manifest["meta"]
-        if meta.get("format") != BUNDLE_FORMAT:
-            raise ValueError(f"bundle '{name}' has format "
-                             f"{meta.get('format')}, expected "
-                             f"{BUNDLE_FORMAT}")
+        fmt = meta.get("format")
+        if fmt not in SUPPORTED_FORMATS:
+            raise ValueError(f"bundle '{name}' has format {fmt}, "
+                             f"supported: {SUPPORTED_FORMATS}")
         cfg = _cfg_from_meta(meta["config"])
         nl = cfg.num_layers
-        template = {
-            "tables": [0] * nl,
-            "conn": [0] * nl,
-            "in_log_s": 0,
-            "layer_log_s": [0] * nl,
-        }
-        _, tree = store.restore(template, step=step)
-        statics: List[Dict[str, np.ndarray]] = [
-            {"conn": np.asarray(c)} for c in tree["conn"]]
+        if fmt == GRAPH_BUNDLE_FORMAT:
+            # Flat (node, branch) arrays on disk; regroup by arity.
+            arities = [nd.arity for nd in cfg.nodes]
+            flat = sum(arities)
+            template = {
+                "tables": [0] * flat,
+                "conn": [0] * flat,
+                "in_log_s": 0,
+                "layer_log_s": [0] * nl,
+            }
+            _, tree = store.restore(template, step=step)
+            tables: List = []
+            statics: List[Dict[str, Any]] = []
+            pos = 0
+            for a in arities:
+                tables.append([np.asarray(t)
+                               for t in tree["tables"][pos:pos + a]])
+                statics.append({"conns": [np.asarray(c) for c in
+                                          tree["conn"][pos:pos + a]]})
+                pos += a
+        else:
+            template = {
+                "tables": [0] * nl,
+                "conn": [0] * nl,
+                "in_log_s": 0,
+                "layer_log_s": [0] * nl,
+            }
+            _, tree = store.restore(template, step=step)
+            tables = [np.asarray(t) for t in tree["tables"]]
+            statics = [{"conn": np.asarray(c)} for c in tree["conn"]]
         if cfg.kind == "poly":
             from repro.core.subnet import monomial_exponents
             for i, s in enumerate(statics):
                 s["exps"] = monomial_exponents(cfg.layer_fan_in(i),
                                                cfg.degree)
         extra = {k: v for k, v in meta.items()
-                 if k not in ("format", "config", "fingerprint")}
+                 if k not in ("format", "config", "fingerprint",
+                              "topology")}
         bundle = ServeBundle(
             cfg=cfg,
-            tables=[np.asarray(t) for t in tree["tables"]],
+            tables=tables,
             statics=statics,
             in_log_s=np.asarray(tree["in_log_s"], np.float32),
             layer_log_s=[np.asarray(s, np.float32)

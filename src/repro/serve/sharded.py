@@ -48,6 +48,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import lut_infer as LI
+from repro.core.nl_config import UnsupportedTopology, is_graph_config
 from repro.kernels.ops import cascade_apply
 from repro.sharding.ctx import replica_mesh
 
@@ -150,6 +151,18 @@ def plan_shards(bundle, num_replicas: int, *, mode: str = "auto",
     total = sum(int(t.nbytes) for t in bundle.packed_tables) + \
         sum(int(m.nbytes) for m in bundle.shift_mats)
     mode, per_device = choose_layout(total, budget, num_replicas, mode)
+    if mode == "o_sharded" and is_graph_config(bundle.cfg) \
+            and not bundle.cfg.is_chain:
+        # The o_sharded walk is one padded buffer per layer with an
+        # all_gather at each chain boundary; a DAG's fan-out/adder
+        # branches have no such single boundary.  Refuse at plan time —
+        # replicated serving covers DAG bundles.
+        raise UnsupportedTopology(
+            f"o_sharded layout only supports chain topologies; bundle "
+            f"'{bundle.cfg.name}' is a LUT DAG "
+            f"(operands {total / 2 ** 10:.1f} KiB > budget "
+            f"{budget / 2 ** 10:.0f} KiB) — force mode='replicated' or "
+            f"raise vmem_budget_bytes")
     plan = ShardPlan(
         num_replicas=num_replicas,
         mode=mode,

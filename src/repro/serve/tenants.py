@@ -64,7 +64,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import lut_infer as LI
 from repro.runtime.fault import ReplicaHealthTracker
 from repro.serve.engine import (DEFAULT_BUCKETS, _complete, _ReplicaExecutor,
                                 _Request, make_forward_fn, pick_bucket,
@@ -167,7 +166,13 @@ def make_tenant_forward_fn(cfg) -> Callable:
     the geometry share one compiled executable per batch shape, and a
     hot-swap rebinds tables with zero retraces.
 
-    Bit-exactness vs the per-tenant serial path: each layer's address is
+    The walk follows the group's DAG schedule
+    (``kernels.lut_cascade.as_schedule``) over the flat (node, branch,
+    src) operand order — per-source address terms are summed (concat
+    pools) and per-branch codes are summed (adder-tree nodes); a chain
+    degenerates to exactly the historical one-buffer-per-layer loop.
+
+    Bit-exactness vs the per-tenant serial path: each node's address is
     the block shift-matmul ``addr[b] = c[b] @ sms[tid[b]]``, computed as
     an einsum against the per-row tenant one-hot.  All values involved
     are non-negative integers below 2^20 carried in f32 (guarded at
@@ -177,11 +182,13 @@ def make_tenant_forward_fn(cfg) -> Callable:
     tenant alone.  ``forward.traces`` counts retraces (one per batch
     shape, asserted in tests/test_serve_tenants.py).
     """
+    from repro.core.nl_config import is_graph_config
+    from repro.kernels.lut_cascade import (as_schedule, cascade_meta,
+                                           graph_cascade_meta)
+    schedule = (graph_cascade_meta(cfg) if is_graph_config(cfg)
+                else as_schedule(cascade_meta(cfg)))
     beta = cfg.beta
     beta_in = cfg.beta_in or cfg.beta
-    p = LI.packed_slots(beta)
-    slot_bits = p.bit_length() - 1
-    mask = (1 << beta) - 1
     lo, hi = -(2 ** (beta_in - 1)), 2 ** (beta_in - 1) - 1
     traces = [0]
 
@@ -193,24 +200,37 @@ def make_tenant_forward_fn(cfg) -> Callable:
         # codes match quant.quant_codes bit for bit.
         s_in = jnp.exp(in_log_s)[tid]                       # (B, F)
         q = jnp.clip(jnp.round(x / s_in), lo, hi).astype(jnp.int32)
-        c = (q + 2 ** (beta_in - 1)).astype(jnp.float32)
+        bufs = [(q + 2 ** (beta_in - 1)).astype(jnp.float32)]
         onehot = (tid[:, None] == jnp.arange(t)[None, :]
                   ).astype(jnp.float32)                     # (B, T)
-        for sm, pt in zip(sms, pts):
-            # Exact in f32: every operand is a non-negative integer, all
-            # partial sums stay < 2^20 (addresses), and the one-hot only
-            # contributes exact zeros — so any contraction order yields
-            # the identical address ``c[b] @ sm[tid[b]]``.  "highest"
-            # precision keeps accelerator backends in real f32.
-            addr = jnp.einsum("bw,bt,two->bo", c, onehot, sm,
-                              precision="highest"
-                              ).astype(jnp.int32)           # (B, O)
-            wsel = jax.lax.shift_right_logical(addr, slot_bits)
-            slot = addr & (p - 1)
-            o = pt.shape[1]
-            word = pt[tid[:, None], jnp.arange(o)[None, :], wsel]
-            code = jax.lax.shift_right_logical(word, beta * slot) & mask
-            c = code.astype(jnp.float32)
+        sm_i = pt_i = 0
+        for srcs, arity, _word_bits, slot_bits, nb in schedule:
+            mask = (1 << nb) - 1
+            node_code = None
+            for _a in range(arity):
+                addr_f = None
+                for s in srcs:
+                    # Exact in f32: every operand is a non-negative
+                    # integer, all partial sums stay < 2^20 (addresses),
+                    # and the one-hot only contributes exact zeros — so
+                    # any contraction order yields the identical address
+                    # ``c[b] @ sm[tid[b]]``.  "highest" precision keeps
+                    # accelerator backends in real f32.
+                    d = jnp.einsum("bw,bt,two->bo", bufs[s], onehot,
+                                   sms[sm_i], precision="highest")
+                    sm_i += 1
+                    addr_f = d if addr_f is None else addr_f + d
+                addr = addr_f.astype(jnp.int32)             # (B, O)
+                wsel = jax.lax.shift_right_logical(addr, slot_bits)
+                slot = addr & ((1 << slot_bits) - 1)
+                pt = pts[pt_i]
+                pt_i += 1
+                o = pt.shape[1]
+                word = pt[tid[:, None], jnp.arange(o)[None, :], wsel]
+                code = jax.lax.shift_right_logical(word, nb * slot) & mask
+                node_code = code if node_code is None else node_code + code
+            bufs.append(node_code.astype(jnp.float32))
+        c = bufs[-1]
         s_out = jnp.exp(out_log_s)[tid]                     # (B, O_last)
         vals = (c - 2 ** (beta - 1)) * s_out
         return jnp.argmax(vals, axis=-1).astype(jnp.int32)
@@ -308,12 +328,16 @@ class _GeometryGroup:
             b.prepack()
         in_log_s = jnp.asarray(np.stack(
             [np.asarray(b.in_log_s, np.float32) for b in bundles]))
+        # Stack per flat cascade operand, not per layer: a DAG bundle
+        # has one shift mat per (node, branch, src) and one packed
+        # table per (node, branch).  Equal geometry keys guarantee
+        # equal operand counts across the group's bundles.
         sms = [jnp.asarray(np.stack(
             [np.asarray(b.shift_mats[i], np.float32) for b in bundles]))
-            for i in range(self.cfg.num_layers)]
+            for i in range(len(bundles[0].shift_mats))]
         pts = [jnp.asarray(np.stack(
             [np.asarray(b.packed_tables[i], np.int32) for b in bundles]))
-            for i in range(self.cfg.num_layers)]
+            for i in range(len(bundles[0].packed_tables))]
         out_log_s = jnp.asarray(np.stack(
             [np.asarray(b.layer_log_s[-1], np.float32) for b in bundles]))
         ops = (in_log_s, sms, pts, out_log_s)

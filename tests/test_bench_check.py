@@ -1,8 +1,9 @@
 """The CI perf-regression gate (benchmarks/run.py --check): the checker
 must pass on an honest fresh run and fail on a doctored baseline for
-every gated section — cascade throughput, scanned-trainer steps/s, the
-fused fwd+bwd kernel-vs-jnp training step, fused-converter entries/s,
-the multi-tenant serving consolidation ratio, and the mesh Pareto sweep
+every gated section — cascade throughput, the LUT-graph DAG cascade's
+single-launch-vs-per-node ratio, scanned-trainer steps/s, the fused
+fwd+bwd kernel-vs-jnp training step, fused-converter entries/s, the
+multi-tenant serving consolidation ratio, and the mesh Pareto sweep
 engine's engine-vs-loop speedup — and must refuse to "pass" when it
 compared nothing.
 """
@@ -23,6 +24,14 @@ def _payload():
                  "speedup": 4.0},
                 {"batch": 4096, "fused_lookups_per_s": 9.0e8,
                  "speedup": 3.2},
+            ],
+        },
+        "cascade_dag": {
+            "sweep": [
+                {"batch": 256, "fused_lookups_per_s": 2.0e8,
+                 "speedup": 5.0},
+                {"batch": 4096, "fused_lookups_per_s": 6.0e8,
+                 "speedup": 4.1},
             ],
         },
         "train": {
@@ -72,6 +81,7 @@ def test_small_regression_within_threshold_passes():
     fresh["train"]["scanned_steps_per_s"] *= 0.80  # -20% < 25% allowed
     fresh["train_kernel"]["kernel_steps_per_s"] *= 0.80
     fresh["cascade"]["sweep"][0]["fused_lookups_per_s"] *= 0.80
+    fresh["cascade_dag"]["sweep"][0]["fused_lookups_per_s"] *= 0.80
     fresh["convert"]["geometries"]["neuralut-jsc-5l"][
         "entries_per_s"] *= 0.80
     fresh["serve_tenants"]["aggregate_sps"] *= 0.80
@@ -84,6 +94,7 @@ def test_doctored_baseline_fails_each_section():
     that section (the negative test CI relies on)."""
     for section, path in [
         ("cascade", lambda d: d["cascade"]["sweep"][1]),
+        ("cascade_dag", lambda d: d["cascade_dag"]["sweep"][0]),
         ("train", lambda d: d["train"]),
         ("train_kernel", lambda d: d["train_kernel"]),
         ("convert",
