@@ -21,6 +21,7 @@ RECORDS: List[Dict] = []
 GATED_SUITES = {"kernel": "cascade", "kernel_dag": "cascade_dag",
                 "train": "train", "train_kernel": "train_kernel",
                 "convert": "convert", "serve_tenants": "serve_tenants",
+                "serve_resilience": "serve_resilience",
                 "sweep": "sweep"}
 
 # XLA:CPU contractions are not bitwise run-invariant when the Eigen

@@ -168,6 +168,32 @@ def _check_serve_tenants(baseline: Dict, fresh: Dict, threshold: float,
     return problems
 
 
+def _check_serve_resilience(baseline: Dict, fresh: Dict, threshold: float,
+                            metric: str) -> List[str]:
+    """Gate the fault-tolerance happy path: absolute throughput with
+    every request carrying a deadline, or (``speedup`` mode) the
+    resilient-vs-plain ratio.  Independently of the baseline
+    comparison, the fresh ``overhead_ratio`` must clear an absolute
+    0.95 floor — the retry/deadline/integrity machinery may not cost
+    more than 5% of cascade serving throughput when no fault fires."""
+    key = {"throughput": "resilient_sps",
+           "speedup": "overhead_ratio"}[metric]
+    problems: List[str] = []
+    if "overhead_ratio" in fresh and float(fresh["overhead_ratio"]) < 0.95:
+        problems.append(
+            f"serve_resilience: overhead_ratio "
+            f"{float(fresh['overhead_ratio']):.3f} below the absolute "
+            f"0.95 floor (fault-tolerance machinery costs >5% on the "
+            f"happy path)")
+    if key not in baseline or key not in fresh:
+        return problems + [
+            f"serve_resilience: metric {key!r} missing from "
+            f"{'baseline' if key not in baseline else 'fresh run'}"]
+    _gate(problems, "serve_resilience", key, float(baseline[key]),
+          float(fresh[key]), threshold)
+    return problems
+
+
 def _check_sweep(baseline: Dict, fresh: Dict, threshold: float,
                  metric: str) -> List[str]:
     """Gate the Pareto sweep engine: trained (point, seed) units per
@@ -205,6 +231,7 @@ def check_regression(baseline: Dict, fresh: Dict, threshold: float,
                 "train_kernel": _check_train_kernel,
                 "convert": _check_convert,
                 "serve_tenants": _check_serve_tenants,
+                "serve_resilience": _check_serve_resilience,
                 "sweep": _check_sweep}
     problems: List[str] = []
     compared = 0
@@ -264,6 +291,8 @@ def main() -> None:
         "lm_step": lambda: lm_step_bench.run(),
         "serve": lambda: serve_bench.run(reduced=args.fast),
         "serve_tenants": lambda: serve_bench.run_tenants(reduced=args.fast),
+        "serve_resilience": lambda: serve_bench.run_resilience(
+            reduced=args.fast),
         "sweep": lambda: fig6_7_pareto.run_sweep_bench(fast=args.fast),
     }
     selected = list(suites) if args.only is None else [

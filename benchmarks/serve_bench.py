@@ -395,6 +395,121 @@ def run_tenants(*, reduced: bool = True, arch: str = "neuralut-jsc-2l",
     }
 
 
+def _deadline_closed_loop(engine: LUTServeEngine, x: np.ndarray, *,
+                          clients: int, requests_per_client: int,
+                          request_size: int, timeout_s: float) -> None:
+    """Closed loop where every request carries a (generous) deadline —
+    the happy-path cost of the deadline bookkeeping, not of expiry."""
+    def client(cid: int) -> None:
+        rng = np.random.default_rng(cid)
+        for _ in range(requests_per_client):
+            idx = rng.integers(0, len(x), request_size)
+            engine.predict(x[idx], timeout_s=timeout_s)
+
+    threads = [threading.Thread(target=client, args=(c,))
+               for c in range(clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+
+def run_resilience(*, reduced: bool = True, arch: str = "neuralut-jsc-2l",
+                   clients: int = 8, requests_per_client: int = 0,
+                   request_size: int = 32,
+                   max_wait_ms: float = 1.0) -> dict:
+    """Happy-path cost of the fault-tolerance machinery
+    (BENCH_kernels.json key ``serve_resilience``, gated by
+    ``benchmarks/run.py --check``).
+
+    Measures the identical offered load twice through the same engine
+    configuration in one process:
+
+      * ``plain_sps`` — requests without deadlines (the pre-robustness
+        client contract; redispatch/health plumbing idle);
+      * ``resilient_sps`` — every request carries a generous
+        ``timeout_s`` (deadline bookkeeping at each hand-off point) on
+        an engine with a revive probe and the default retry budget
+        armed; nothing fires on the happy path.
+
+    ``overhead_ratio = resilient_sps / plain_sps`` is the gate metric:
+    the checker holds an absolute floor of 0.95 (retry + deadline +
+    integrity machinery must cost < 5% cascade throughput when no
+    fault occurs).  The section also times the registry integrity
+    verification (checksum every array at load) as
+    ``verify_ms`` — the artifact-side overhead, off the request path.
+    Both sides run three times interleaved and keep their best window,
+    so a transient CI hiccup hits both measurements symmetrically.
+    """
+    requests_per_client = requests_per_client or (25 if reduced else 100)
+    cfg = get_config(arch, reduced=False)
+    bundle = _random_bundle(cfg, seed=0)
+
+    # Artifact integrity overhead: verified vs unverified load.
+    with tempfile.TemporaryDirectory() as td:
+        reg = TableRegistry(td)
+        reg.save(cfg.name, bundle)
+        t0 = time.perf_counter()
+        reg.load(cfg.name, verify=False)
+        load_plain_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        loaded = reg.load(cfg.name, verify=True)
+        load_verified_s = time.perf_counter() - t0
+        report = reg.verify(cfg.name)
+    verify_ms = max(0.0, (load_verified_s - load_plain_s)) * 1e3
+    emit("serve_resilience/integrity_verify", verify_ms * 1e3,
+         f"verify_ms={verify_ms:.2f};arrays={report['checked']};"
+         f"ok={report['ok']}")
+
+    x = np.random.default_rng(5).normal(
+        0, 1, (4096, cfg.in_features)).astype(np.float32)
+    total = clients * requests_per_client * request_size
+
+    def _measure(with_deadlines: bool) -> float:
+        metrics = ServeMetrics()
+        with LUTServeEngine(loaded, max_wait_ms=max_wait_ms,
+                            use_kernel=False, metrics=metrics,
+                            revive_probe=lambda rid: True) as eng:
+            eng.warmup()
+            t0 = time.perf_counter()
+            if with_deadlines:
+                _deadline_closed_loop(
+                    eng, x, clients=clients,
+                    requests_per_client=requests_per_client,
+                    request_size=request_size, timeout_s=120.0)
+            else:
+                _closed_loop(eng, x, clients=clients,
+                             requests_per_client=requests_per_client,
+                             request_size=request_size)
+            wall = time.perf_counter() - t0
+        rep = metrics.report()
+        assert rep["deadline_exceeded"] == 0 and rep["shed"] == 0, \
+            "happy-path bench must not shed or expire requests"
+        return total / wall
+
+    # Interleaved best-of-three: noise hits both sides symmetrically,
+    # and the extra rep tightens each side's best-window estimate — the
+    # gate holds an absolute 0.95 floor on the ratio, so a single slow
+    # window on the resilient side must not read as real overhead.
+    plain_sps = resilient_sps = 0.0
+    for _ in range(3):
+        plain_sps = max(plain_sps, _measure(False))
+        resilient_sps = max(resilient_sps, _measure(True))
+    ratio = resilient_sps / plain_sps
+    emit("serve_resilience/happy_path", 0.0,
+         f"plain_sps={plain_sps:.0f};resilient_sps={resilient_sps:.0f};"
+         f"overhead_ratio={ratio:.3f}")
+    return {
+        "arch": cfg.name,
+        "plain_sps": plain_sps,
+        "resilient_sps": resilient_sps,
+        "overhead_ratio": ratio,
+        "verify_ms": verify_ms,
+        "verify_arrays": int(report["checked"]),
+        "fast_mode": reduced,
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--reduced", action="store_true",
@@ -415,9 +530,20 @@ def main() -> None:
                     help="run the multi-tenant consolidation section "
                          "with this many tenants instead of the client "
                          "sweep (see run_tenants)")
+    ap.add_argument("--resilience", action="store_true",
+                    help="run the fault-tolerance happy-path overhead "
+                         "section instead of the client sweep "
+                         "(see run_resilience)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    if args.tenants:
+    if args.resilience:
+        summary = run_resilience(
+            reduced=args.reduced, arch=args.arch,
+            clients=max(args.clients),
+            requests_per_client=args.requests_per_client,
+            max_wait_ms=args.max_wait_ms)
+        print(f"# {summary}")
+    elif args.tenants:
         summary = run_tenants(
             reduced=args.reduced, arch=args.arch,
             num_tenants=args.tenants, clients=max(args.clients),

@@ -140,31 +140,61 @@ class CheckpointStore:
         steps = self.list_steps()
         return steps[-1] if steps else None
 
+    def meta(self, step: int) -> Dict:
+        """User metadata recorded at ``save(..., meta=)`` time."""
+        path = self.dir / f"step_{step:010d}" / "manifest.json"
+        return json.loads(path.read_text()).get("meta", {})
+
     def restore(self, template: Any, *, step: Optional[int] = None,
                 shardings: Any = None) -> Tuple[int, Any]:
         """Rebuild ``template``-shaped tree. ``shardings``: optional pytree
-        of NamedSharding to place leaves on a (possibly different) mesh."""
-        if step is None:
-            step = self.latest_step()
-        if step is None:
+        of NamedSharding to place leaves on a (possibly different) mesh.
+
+        With ``step=None`` a checkpoint whose shard is truncated or
+        corrupted (crash mid-write, disk fault) is skipped with a
+        ``RuntimeWarning`` and the next-newest committed step is tried —
+        a committed-but-unreadable artifact must not brick a resume.
+        An explicitly requested ``step`` still raises on corruption."""
+        if step is not None:
+            return self._restore_step(step, template, shardings)
+        steps = self.list_steps()
+        if not steps:
             raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        last_exc: Optional[Exception] = None
+        for s in reversed(steps):
+            try:
+                return self._restore_step(s, template, shardings)
+            except Exception as e:  # truncated npz, bad zip CRC, ...
+                import warnings
+                warnings.warn(
+                    f"checkpoint step {s} in {self.dir} is unreadable "
+                    f"({type(e).__name__}: {e}); falling back to the "
+                    f"previous committed step", RuntimeWarning,
+                    stacklevel=2)
+                last_exc = e
+        raise FileNotFoundError(
+            f"no readable checkpoint in {self.dir} "
+            f"({len(steps)} committed but all corrupt)") from last_exc
+
+    def _restore_step(self, step: int, template: Any, shardings: Any
+                      ) -> Tuple[int, Any]:
         path = self.dir / f"step_{step:010d}"
-        data = np.load(path / f"shard_{self.host}.npz")
         dtypes = json.loads(
             (path / "manifest.json").read_text()).get("dtypes", {})
         flat = jax.tree_util.tree_flatten_with_path(template)[0]
         shard_flat = (jax.tree.leaves(shardings)
                       if shardings is not None else [None] * len(flat))
         leaves = []
-        for (p, leaf), sh in zip(flat, shard_flat):
-            key = "/".join(_seg(seg) for seg in p)
-            arr = data[key]
-            if key in dtypes:
-                import ml_dtypes  # noqa: F401 — registers the dtypes
-                arr = arr.view(np.dtype(dtypes[key]))
-            if sh is not None:
-                leaves.append(jax.device_put(arr, sh))
-            else:
-                leaves.append(jax.numpy.asarray(arr))
+        with np.load(path / f"shard_{self.host}.npz") as data:
+            for (p, leaf), sh in zip(flat, shard_flat):
+                key = "/".join(_seg(seg) for seg in p)
+                arr = data[key]  # raises on missing key / bad CRC
+                if key in dtypes:
+                    import ml_dtypes  # noqa: F401 — registers the dtypes
+                    arr = arr.view(np.dtype(dtypes[key]))
+                if sh is not None:
+                    leaves.append(jax.device_put(arr, sh))
+                else:
+                    leaves.append(jax.numpy.asarray(arr))
         treedef = jax.tree_util.tree_structure(template)
         return step, jax.tree_util.tree_unflatten(treedef, leaves)

@@ -44,9 +44,14 @@ def build_lut_bundle(args):
 
     if reg is not None and reg.has(cfg.name) and not args.retrain:
         bundle = reg.load(cfg.name)
+        # The integrity block is per-array sha256 digests — load() just
+        # verified them; print only the human-facing meta.
+        meta = {k: v for k, v in bundle.meta.items() if k != "integrity"}
+        verified = "integrity verified, " if "integrity" in bundle.meta \
+            else ""
         print(f"loaded bundle '{cfg.name}' from {args.registry} "
-              f"(tables: {bundle.num_table_bytes/1024:.1f} KiB, "
-              f"meta: {bundle.meta}) — no retraining", flush=True)
+              f"({verified}tables: {bundle.num_table_bytes/1024:.1f} KiB, "
+              f"meta: {meta}) — no retraining", flush=True)
         return bundle
 
     xtr, ytr = jsc_synthetic(20000, seed=0)

@@ -33,11 +33,19 @@ def main() -> None:
     ap.add_argument("--registry", default=None,
                     help="convert each point's best seed and save "
                          "serving-ready bundles here")
+    ap.add_argument("--resume", default=None, metavar="DIR",
+                    help="journal finished groups here and, on rerun, "
+                         "replay them instead of retraining (resume a "
+                         "killed/preempted sweep)")
+    ap.add_argument("--max-group-retries", type=int, default=2,
+                    help="redispatches (with backoff) before a failing "
+                         "group aborts the sweep")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args()
 
     from repro.data import device_dataset, mnist_pooled
     from repro.launch.mesh import make_sweep_mesh
+    from repro.runtime.straggler import StepWatchdog
     from repro.runtime.tracker import (CompositeTracker, JsonlTracker,
                                        NoopTracker, PrintTracker)
     from repro.sweep import paper_sweep_points, run_pareto_sweep
@@ -60,13 +68,22 @@ def main() -> None:
             paper_sweep_points(), xtr, ytr, xte, yte,
             seeds=tuple(range(args.seeds)), epochs=args.epochs,
             batch=args.batch, lr=args.lr, mesh=mesh, tracker=tracker,
-            convert=bool(args.registry))
+            convert=bool(args.registry), resume=args.resume,
+            max_group_retries=args.max_group_retries,
+            watchdog=StepWatchdog())
 
+    replayed = sum(1 for g in result.groups if g.replayed)
     print(f"{len(result.points)} points / {len(result.groups)} compiled "
           f"group programs on {result.devices} device(s): "
           f"cold {result.cold_s:.1f}s + warm {result.warm_s:.1f}s "
-          f"= {result.total_s:.1f}s", flush=True)
+          f"= {result.total_s:.1f}s"
+          + (f" ({replayed} group(s) replayed from journal)"
+             if replayed else ""), flush=True)
     for res in result.points:
+        if res.status != "ok":
+            print(f"  [{res.point.tag:>9}] {res.name:<16} FAILED "
+                  f"({res.diverged_seeds} diverged seed(s))", flush=True)
+            continue
         print(f"  [{res.point.tag:>9}] {res.name:<16} "
               f"err={res.err:.4f} luts={res.est.luts:.0f} "
               f"latency={res.est.latency_ns:.1f}ns", flush=True)
@@ -76,6 +93,8 @@ def main() -> None:
         from repro.serve import TableRegistry, bundle_from_training
         reg = TableRegistry(args.registry)
         for res in result.points:
+            if res.packed is None:          # diverged -> nothing to ship
+                continue
             tables, packed = res.packed
             bundle = bundle_from_training(
                 res.point.cfg, res.params, tables,

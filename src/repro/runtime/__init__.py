@@ -1,9 +1,11 @@
+from .chaos import ChaosHarness, ChaosInjected, NodeFailure
 from .fault import FailureInjector, ReplicaHealthTracker, TrainSupervisor
 from .straggler import run_with_backup, StepWatchdog
 from .tracker import (CallbackTracker, CompositeTracker, JsonlTracker,
                       NoopTracker, PrintTracker, Tracker)
 
-__all__ = ["FailureInjector", "ReplicaHealthTracker", "TrainSupervisor",
+__all__ = ["ChaosHarness", "ChaosInjected", "NodeFailure",
+           "FailureInjector", "ReplicaHealthTracker", "TrainSupervisor",
            "run_with_backup", "StepWatchdog", "Tracker", "NoopTracker",
            "CallbackTracker", "PrintTracker", "JsonlTracker",
            "CompositeTracker"]

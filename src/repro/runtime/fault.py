@@ -24,11 +24,10 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.checkpoint import CheckpointStore
+# FailureInjector folded into the generalized chaos harness
+# (runtime/chaos.py); this import keeps its historical path alive.
+from .chaos import FailureInjector, NodeFailure  # noqa: F401
 from .straggler import StepWatchdog
-
-
-class NodeFailure(RuntimeError):
-    pass
 
 
 class ReplicaHealthTracker:
@@ -142,19 +141,6 @@ class ReplicaHealthTracker:
                      "failures": self._failures[i],
                      "consecutive": self._consecutive[i]}
                     for i in range(self.num_replicas)]
-
-
-@dataclass
-class FailureInjector:
-    """Deterministic failure schedule for tests: fail at given steps."""
-
-    fail_at: tuple = ()
-    fired: set = field(default_factory=set)
-
-    def check(self, step: int) -> None:
-        if step in self.fail_at and step not in self.fired:
-            self.fired.add(step)
-            raise NodeFailure(f"injected node failure at step {step}")
 
 
 @dataclass

@@ -20,10 +20,13 @@ geometry, hot-swapped with a shadow bit-exactness check:
         pred = eng.predict("a", x)
         report = eng.swap("b", new_bb)                # shadow -> cutover
 """
-from .engine import DEFAULT_BUCKETS, LUTServeEngine, make_forward_fn, \
-    pick_bucket
+from .engine import (DEFAULT_BUCKETS, DeadlineExceeded, DispatchFailed,
+                     LUTServeEngine, NoHealthyReplicas,
+                     make_degradable_forward_fn, make_forward_fn,
+                     pick_bucket)
 from .metrics import ServeMetrics, percentile
-from .registry import ServeBundle, TableRegistry, bundle_from_training
+from .registry import (BundleIntegrityError, IntegrityProbe, ServeBundle,
+                       TableRegistry, bundle_from_training)
 from .sharded import (DEFAULT_VMEM_BUDGET, ShardPlan, choose_layout,
                       make_sharded_forward_fn, o_sharded_cascade_fn,
                       plan_shards, replicated_cascade_fn)
@@ -31,10 +34,15 @@ from .tenants import (MultiTenantEngine, SwapReport, Tenant,
                       TenantOverloaded, make_tenant_forward_fn)
 
 __all__ = [
+    "BundleIntegrityError",
     "DEFAULT_BUCKETS",
     "DEFAULT_VMEM_BUDGET",
+    "DeadlineExceeded",
+    "DispatchFailed",
+    "IntegrityProbe",
     "LUTServeEngine",
     "MultiTenantEngine",
+    "NoHealthyReplicas",
     "ServeBundle",
     "ServeMetrics",
     "ShardPlan",
@@ -44,6 +52,7 @@ __all__ = [
     "TenantOverloaded",
     "bundle_from_training",
     "choose_layout",
+    "make_degradable_forward_fn",
     "make_forward_fn",
     "make_sharded_forward_fn",
     "make_tenant_forward_fn",

@@ -62,11 +62,37 @@ import numpy as np
 
 from repro.core import lut_infer as LI
 from repro.core.exec_plan import CascadeExec, plan_cascade_exec
+from repro.runtime.chaos import ChaosHarness
 from repro.runtime.fault import ReplicaHealthTracker
 from repro.serve.metrics import ServeMetrics
 from repro.serve.registry import ServeBundle
 
 DEFAULT_BUCKETS: Tuple[int, ...] = (1, 8, 64, 256)
+
+
+class DispatchFailed(RuntimeError):
+    """A batch failed on a replica and exhausted its redispatch budget;
+    every waiting future resolves with this (the original replica error
+    is chained as ``__cause__``)."""
+
+    def __init__(self, attempts: int, cause: BaseException):
+        self.attempts = attempts
+        self.cause = cause
+        super().__init__(
+            f"replica dispatch failed after {attempts} attempt(s): "
+            f"{cause!r}")
+        self.__cause__ = cause
+
+
+class DeadlineExceeded(RuntimeError):
+    """A request's ``submit(timeout_s=)`` deadline passed before it was
+    served; counted in ``ServeMetrics.deadline_exceeded``."""
+
+
+class NoHealthyReplicas(RuntimeError):
+    """Every replica is evicted and the auto-revive probe (if any)
+    could not bring one back; the batch is shed, not queued behind a
+    pool that can never serve it."""
 
 
 def pick_bucket(n: int, buckets: Sequence[int]) -> int:
@@ -177,14 +203,53 @@ def make_forward_fn(bundle: ServeBundle, *, use_kernel: bool = False,
     return jax.jit(forward)
 
 
-class _Request:
-    __slots__ = ("x", "n", "future", "t_submit")
+def make_degradable_forward_fn(bundle: ServeBundle, *, plan: CascadeExec,
+                               device=None,
+                               metrics: Optional[ServeMetrics] = None,
+                               chaos: Optional[ChaosHarness] = None
+                               ) -> Callable[[jax.Array], jax.Array]:
+    """Fused-kernel forward with one-shot graceful degradation: if the
+    ``fused_kernel`` route ever raises, the forward permanently flips to
+    the bit-exact ``fused_jnp`` reference path (same predictions — the
+    routes are interchangeable by the cascade bit-exactness contract),
+    records the downgrade in ``metrics``, and serves the failing batch
+    through the fallback in the same call, so the triggering client
+    never sees the kernel error.  The fallback jit is built lazily — a
+    healthy engine pays nothing for carrying it.  ``chaos`` checks the
+    ``serve.kernel`` site before each primary call (deterministic
+    downgrade tests)."""
+    primary = make_forward_fn(bundle, plan=plan, device=device)
+    state: dict = {"fallback": None}
 
-    def __init__(self, x: np.ndarray):
+    def forward(x: jax.Array) -> jax.Array:
+        fb = state["fallback"]
+        if fb is None:
+            try:
+                if chaos is not None:
+                    chaos.check("serve.kernel")
+                return primary(x)
+            except Exception:
+                fb = state["fallback"] = make_forward_fn(
+                    bundle,
+                    plan=dataclasses.replace(plan, route="fused_jnp"),
+                    device=device)
+                if metrics is not None:
+                    metrics.record_downgrade()
+        return fb(x)
+
+    return forward
+
+
+class _Request:
+    __slots__ = ("x", "n", "future", "t_submit", "deadline")
+
+    def __init__(self, x: np.ndarray, timeout_s: Optional[float] = None):
         self.x = x
         self.n = x.shape[0]
         self.future: "Future[np.ndarray]" = Future()
         self.t_submit = time.perf_counter()
+        self.deadline = (None if timeout_s is None
+                         else self.t_submit + timeout_s)
 
 
 _STOP = object()
@@ -192,7 +257,9 @@ _STOP = object()
 
 def route_least_loaded(executors: Sequence["_ReplicaExecutor"],
                        health: ReplicaHealthTracker,
-                       rr: int) -> Optional["_ReplicaExecutor"]:
+                       rr: int, *,
+                       exclude: Optional[int] = None
+                       ) -> Optional["_ReplicaExecutor"]:
     """Queue-depth-aware sticky round-robin over healthy replicas: the
     least-loaded healthy executor wins, with depth ties broken in
     round-robin order *from the last-used replica inclusive* — so light
@@ -200,13 +267,45 @@ def route_least_loaded(executors: Sequence["_ReplicaExecutor"],
     one device can absorb) and spills to the next replica exactly when
     the current one has queued work.  Under saturation every replica
     ends up busy and the policy degenerates to least-loaded.  Returns
-    None when no replica is healthy.  Shared by the single-bundle engine
-    and the multi-tenant geometry-group pools (serve/tenants.py)."""
+    None when no replica is healthy.  ``exclude`` (a replica id) is a
+    *preference*, not a bar: the redispatch path avoids the replica that
+    just failed when any other healthy replica exists, but a transient
+    failure on the only healthy replica may still retry there.  Shared
+    by the single-bundle engine and the multi-tenant geometry-group
+    pools (serve/tenants.py)."""
     healthy = [ex for ex in executors if health.is_healthy(ex.rid)]
     if not healthy:
         return None
+    if exclude is not None:
+        others = [ex for ex in healthy if ex.rid != exclude]
+        healthy = others or healthy
     n = len(executors)
     return min(healthy, key=lambda ex: (ex.depth(), (ex.rid - rr) % n))
+
+
+def _drop_expired(batch: List["_Request"],
+                  engine_metrics: ServeMetrics) -> List["_Request"]:
+    """Resolve every past-deadline request with ``DeadlineExceeded``
+    (counted in the engine metrics, and the tenant's where the request
+    carries one) and return the still-live remainder.  Called at every
+    hand-off point — dispatcher routing and executor serve — so an
+    expired request never pays for a forward it can no longer use."""
+    now = time.perf_counter()
+    live: List[_Request] = []
+    for r in batch:
+        if r.deadline is not None and now > r.deadline:
+            waited = now - r.t_submit
+            if _complete(r.future, exc=DeadlineExceeded(
+                    f"request expired after {waited * 1e3:.1f}ms in "
+                    f"queue (timeout "
+                    f"{(r.deadline - r.t_submit) * 1e3:.1f}ms)")):
+                engine_metrics.record_deadline_exceeded()
+                tenant = getattr(r, "tenant", None)
+                if tenant is not None:
+                    tenant.metrics.record_deadline_exceeded()
+        else:
+            live.append(r)
+    return live
 
 
 def _complete(future: Future, result=None, exc=None) -> bool:
@@ -238,7 +337,9 @@ class _ReplicaExecutor:
     def __init__(self, rid: int, forward: Callable, *,
                  buckets: Sequence[int], device=None,
                  engine_metrics: ServeMetrics,
-                 health: ReplicaHealthTracker):
+                 health: ReplicaHealthTracker,
+                 redispatch: Optional[Callable] = None,
+                 chaos: Optional[ChaosHarness] = None):
         self.rid = rid
         self.device = device
         self.metrics = ServeMetrics()
@@ -246,6 +347,11 @@ class _ReplicaExecutor:
         self._buckets = tuple(buckets)
         self._engine_metrics = engine_metrics
         self._health = health
+        # redispatch(batch, total, attempts, failed_rid) -> bool: the
+        # engine's self-healing hook — route the batch to another
+        # healthy replica, False once the retry budget is spent.
+        self._redispatch = redispatch
+        self._chaos = chaos
         self._queue: "queue.Queue" = queue.Queue()
         self._thread: Optional[threading.Thread] = None
 
@@ -259,11 +365,26 @@ class _ReplicaExecutor:
             self._thread.start()
 
     def stop(self) -> None:
-        """Request shutdown and join; queued batches are served first."""
+        """Request shutdown and join; queued batches are served first.
+        A batch redispatched here *after* the stop sentinel (a failure
+        elsewhere racing shutdown) has no worker left — resolve its
+        futures with DispatchFailed rather than stranding them."""
         if self._thread is not None:
             self._queue.put(_STOP)
             self._thread.join()
             self._thread = None
+        while True:
+            try:
+                item = self._queue.get_nowait()
+            except queue.Empty:
+                break
+            if item is _STOP:
+                continue
+            batch, _, _, attempts = item
+            err = DispatchFailed(attempts + 1, RuntimeError(
+                "replica stopped during redispatch"))
+            for r in batch:
+                _complete(r.future, exc=err)
 
     def warmup(self, in_features: int) -> None:
         for b in self._buckets:
@@ -288,8 +409,8 @@ class _ReplicaExecutor:
         return self._queue.unfinished_tasks
 
     def dispatch(self, batch: List[_Request], total: int,
-                 queue_depth: int) -> None:
-        self._queue.put((batch, total, queue_depth))
+                 queue_depth: int, attempts: int = 0) -> None:
+        self._queue.put((batch, total, queue_depth, attempts))
 
     # -- worker -----------------------------------------------------------
 
@@ -299,24 +420,42 @@ class _ReplicaExecutor:
             if item is _STOP:
                 self._queue.task_done()
                 break
-            batch, total, depth = item
+            batch, total, depth, attempts = item
             try:
-                self._serve(batch, total, depth)
+                self._serve(batch, total, depth, attempts)
             finally:
                 self._queue.task_done()
 
-    def _serve(self, batch: List[_Request], total: int, depth: int) -> None:
+    def _fail_or_redispatch(self, batch: List[_Request], total: int,
+                            attempts: int, exc: BaseException) -> None:
+        """Shared dispatch-failure tail: report health FIRST (so the
+        redispatch route sees the failure it is routing around — the
+        tracker guards the user on_evict hook, so nothing here can
+        strand a client), then hand the batch to the engine's
+        redispatch hook; only when the retry budget is spent do the
+        waiters see a typed DispatchFailed chaining the root cause."""
+        self._health.record_failure(self.rid, exc)
+        if (self._redispatch is not None
+                and self._redispatch(batch, total, attempts + 1, self.rid)):
+            return
+        err = DispatchFailed(attempts + 1, exc)
+        for r in batch:
+            _complete(r.future, exc=err)
+
+    def _serve(self, batch: List[_Request], total: int, depth: int,
+               attempts: int = 0) -> None:
+        batch = _drop_expired(batch, self._engine_metrics)
+        if not batch:
+            return
+        total = sum(r.n for r in batch)
         x = (batch[0].x if len(batch) == 1
              else np.concatenate([r.x for r in batch], axis=0))
         try:
+            if self._chaos is not None:
+                self._chaos.check("serve.replica")
             preds, padded = self._run(x)
-        except Exception as e:  # surface engine errors to every waiter
-            # Futures resolve BEFORE the health report: record_failure may
-            # invoke a user on_evict hook, and no hook outcome may ever
-            # strand a client (tracker also guards the hook itself).
-            for r in batch:
-                _complete(r.future, exc=e)
-            self._health.record_failure(self.rid, e)
+        except Exception as e:
+            self._fail_or_redispatch(batch, total, attempts, e)
             return
         self._health.record_success(self.rid)
         t_done = time.perf_counter()
@@ -367,7 +506,10 @@ class LUTServeEngine:
                  health: Optional[ReplicaHealthTracker] = None,
                  sharded: bool = False,
                  shard_mode: str = "auto",
-                 plan: Optional[CascadeExec] = None):
+                 plan: Optional[CascadeExec] = None,
+                 max_dispatch_retries: int = 2,
+                 revive_probe: Optional[Callable[[int], bool]] = None,
+                 chaos: Optional[ChaosHarness] = None):
         if list(buckets) != sorted(set(buckets)):
             raise ValueError(f"buckets must be strictly increasing: {buckets}")
         if replicas < 1:
@@ -393,6 +535,12 @@ class LUTServeEngine:
         self.use_kernel = kern
         self.fused = plan.fused if plan is not None else fused
         self.sharded = sharded
+        if max_dispatch_retries < 0:
+            raise ValueError(f"max_dispatch_retries={max_dispatch_retries} "
+                             f"must be >= 0")
+        self.max_dispatch_retries = max_dispatch_retries
+        self.revive_probe = revive_probe
+        self.chaos = chaos
         self.metrics = metrics or ServeMetrics()
         self.health = health or ReplicaHealthTracker(replicas)
         if self.health.num_replicas != replicas:
@@ -410,18 +558,18 @@ class LUTServeEngine:
         elif replicas == 1 and devices is None:
             # Single replica, unpinned: identical to the classic engine
             # (no cross-device transfers on single-device hosts).
-            forwards = [make_forward_fn(bundle, plan=self.plan)]
+            forwards = [self._replica_forward(None)]
             devs = [None]
         else:
             pool = list(devices) if devices is not None \
                 else jax.local_devices()
             devs = [pool[i % len(pool)] for i in range(replicas)]
-            forwards = [make_forward_fn(bundle, plan=self.plan, device=d)
-                        for d in devs]
+            forwards = [self._replica_forward(d) for d in devs]
         self._executors = [
             _ReplicaExecutor(i, f, buckets=self.buckets, device=d,
                              engine_metrics=self.metrics,
-                             health=self.health)
+                             health=self.health,
+                             redispatch=self._redispatch, chaos=chaos)
             for i, (f, d) in enumerate(zip(forwards, devs))]
         self._rr = 0  # round-robin cursor for routing tie-breaks
         self._queue: "queue.Queue" = queue.Queue()
@@ -430,6 +578,17 @@ class LUTServeEngine:
         # Serializes the closed-check + enqueue in submit() against close(),
         # so a request can never land behind the _STOP sentinel and hang.
         self._submit_lock = threading.Lock()
+
+    def _replica_forward(self, device) -> Callable:
+        """Kernel-routed plans get the one-shot degradable wrapper (a
+        failing fused kernel downgrades that replica to the bit-exact
+        jnp twin instead of failing its batches); jnp plans have no
+        faster route to degrade from and use the plain forward."""
+        if self.plan is not None and self.plan.route == "fused_kernel":
+            return make_degradable_forward_fn(
+                self.bundle, plan=self.plan, device=device,
+                metrics=self.metrics, chaos=self.chaos)
+        return make_forward_fn(self.bundle, plan=self.plan, device=device)
 
     @property
     def replicas(self) -> int:
@@ -480,10 +639,14 @@ class LUTServeEngine:
 
     # -- client API -------------------------------------------------------
 
-    def submit(self, x: np.ndarray) -> "Future[np.ndarray]":
+    def submit(self, x: np.ndarray, *,
+               timeout_s: Optional[float] = None) -> "Future[np.ndarray]":
         """Enqueue a request of shape (n, in_features) or (in_features,).
         The future resolves to the (n,) int32 class predictions ((1,) for a
-        single flat sample)."""
+        single flat sample).  ``timeout_s`` sets a per-request deadline:
+        a request still unserved when it passes resolves with a typed
+        :class:`DeadlineExceeded` (counted in ``metrics``) instead of
+        occupying a dispatch it can no longer use."""
         x = np.asarray(x, np.float32)
         if x.ndim == 1:
             x = x[None, :]
@@ -491,7 +654,9 @@ class LUTServeEngine:
             raise ValueError(
                 f"request shape {x.shape} != (n, "
                 f"{self.bundle.cfg.in_features})")
-        req = _Request(x)
+        if timeout_s is not None and timeout_s <= 0:
+            raise ValueError(f"timeout_s={timeout_s} must be positive")
+        req = _Request(x, timeout_s)
         with self._submit_lock:
             if self._closed:
                 raise RuntimeError("engine is closed")
@@ -500,9 +665,10 @@ class LUTServeEngine:
             self._queue.put(req)
         return req.future
 
-    def predict(self, x: np.ndarray) -> np.ndarray:
+    def predict(self, x: np.ndarray, *,
+                timeout_s: Optional[float] = None) -> np.ndarray:
         """Synchronous convenience wrapper over submit()."""
-        return self.submit(x).result()
+        return self.submit(x, timeout_s=timeout_s).result()
 
     # -- dispatcher -------------------------------------------------------
 
@@ -546,16 +712,67 @@ class LUTServeEngine:
 
     def _route(self, batch: List[_Request], total: int) -> None:
         """Route one coalesced batch via :func:`route_least_loaded`; with
-        no healthy replica left, fail the batch fast instead of queueing
-        it behind a pool that can never serve it."""
+        no healthy replica left (after one auto-revive probe round),
+        shed the batch with a typed :class:`NoHealthyReplicas` instead
+        of queueing it behind a pool that can never serve it."""
+        batch = _drop_expired(batch, self.metrics)
+        if not batch:
+            return
+        total = sum(r.n for r in batch)
         depth = self._queue.qsize()
         chosen = route_least_loaded(self._executors, self.health, self._rr)
         if chosen is None:
-            err = RuntimeError(
+            self._probe_evicted()
+            chosen = route_least_loaded(self._executors, self.health,
+                                        self._rr)
+        if chosen is None:
+            err = NoHealthyReplicas(
                 f"no healthy replicas (of {len(self._executors)}) — "
                 f"failure counts {self.health.failure_counts()}")
             for r in batch:
-                _complete(r.future, exc=err)
+                if _complete(r.future, exc=err):
+                    self.metrics.record_shed()
             return
         self._rr = chosen.rid
         chosen.dispatch(batch, total, depth)
+
+    def _probe_evicted(self) -> None:
+        """Auto-revive hook: ask ``revive_probe(rid)`` about every
+        evicted replica and re-admit the ones it vouches for.  A
+        raising probe counts as 'still down' — a health check must
+        never take the dispatcher thread with it."""
+        if self.revive_probe is None:
+            return
+        healthy = set(self.health.healthy_ids())
+        for ex in self._executors:
+            if ex.rid in healthy:
+                continue
+            try:
+                ok = bool(self.revive_probe(ex.rid))
+            except Exception:
+                ok = False
+            if ok:
+                self.health.revive(ex.rid)
+
+    def _redispatch(self, batch: List[_Request], total: int,
+                    attempts: int, failed_rid: int) -> bool:
+        """Self-healing hook handed to every executor: after a dispatch
+        failure, re-route the batch to a healthy replica — preferring
+        any replica other than the one that just failed — up to
+        ``max_dispatch_retries`` retries.  Operand arrays live on the
+        host (each dispatch uploads fresh device buffers), so replaying
+        the identical batch is always safe."""
+        if attempts > self.max_dispatch_retries:
+            return False
+        chosen = route_least_loaded(self._executors, self.health, self._rr,
+                                    exclude=failed_rid)
+        if chosen is None:
+            self._probe_evicted()
+            chosen = route_least_loaded(self._executors, self.health,
+                                        self._rr, exclude=failed_rid)
+        if chosen is None:
+            return False
+        self._rr = chosen.rid
+        self.metrics.record_redispatch()
+        chosen.dispatch(batch, total, self._queue.qsize(), attempts)
+        return True

@@ -44,6 +44,9 @@ class ServeMetrics:
         self._queue_depths: List[int] = []
         self._admitted = 0                  # requests accepted at the door
         self._shed = 0                      # requests refused (load shedding)
+        self._deadline_exceeded = 0         # futures resolved past deadline
+        self._redispatches = 0              # batches re-routed after failure
+        self._downgrades = 0                # kernel -> jnp fallback flips
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
 
@@ -79,6 +82,41 @@ class ServeMetrics:
         with self._lock:
             self._shed += n_requests
 
+    # -- resilience (self-healing serving, serve/engine.py) ----------------
+
+    def record_deadline_exceeded(self, n_requests: int = 1) -> None:
+        """A request whose ``submit(timeout_s=)`` deadline passed before
+        it was served; its future resolved with ``DeadlineExceeded``."""
+        with self._lock:
+            self._deadline_exceeded += n_requests
+
+    def record_redispatch(self) -> None:
+        """One coalesced batch re-routed to another replica after a
+        dispatch failure (the self-healing path)."""
+        with self._lock:
+            self._redispatches += 1
+
+    def record_downgrade(self) -> None:
+        """One replica forward permanently downgraded from the fused
+        kernel route to the jnp reference path."""
+        with self._lock:
+            self._downgrades += 1
+
+    @property
+    def deadline_exceeded(self) -> int:
+        with self._lock:
+            return self._deadline_exceeded
+
+    @property
+    def redispatches(self) -> int:
+        with self._lock:
+            return self._redispatches
+
+    @property
+    def downgrades(self) -> int:
+        with self._lock:
+            return self._downgrades
+
     @property
     def shed(self) -> int:
         with self._lock:
@@ -104,6 +142,8 @@ class ServeMetrics:
             real, padded = self._real, self._padded
             depths = list(self._queue_depths)
             admitted, shed = self._admitted, self._shed
+            deadline = self._deadline_exceeded
+            redispatches, downgrades = self._redispatches, self._downgrades
             elapsed = ((self._t_last - self._t_first)
                        if self._t_first is not None and self._t_last is not None
                        and self._t_last > self._t_first else 0.0)
@@ -120,6 +160,9 @@ class ServeMetrics:
             "admitted": float(admitted),
             "shed": float(shed),
             "shed_rate": shed / offered if offered else 0.0,
+            "deadline_exceeded": float(deadline),
+            "redispatches": float(redispatches),
+            "kernel_downgrades": float(downgrades),
         }
         for p in (50, 95, 99):
             rep[f"p{p}_ms"] = percentile(lat, p) * 1e3 if lat else float("nan")

@@ -16,14 +16,28 @@ The manifest ``meta`` records the full :class:`NeuraLUTConfig` (as a dict)
 plus its fingerprint, so ``load`` reconstructs the config and rebuilds the
 template pytree without any pickled code.  Poly-kind monomial exponents are
 deterministic given the config and are recomputed on load.
+
+**Integrity.**  The LUT *is* the model — a silent bit-flip in a stored
+table is a silent misclassification — so ``save`` checksums every packed
+array (SHA-256 over dtype + shape + bytes) and the manifest meta itself,
+recording both under ``meta["integrity"]``.  ``load`` verifies before
+serving and raises a typed :class:`BundleIntegrityError` on any
+mismatch; ``verify`` recomputes on demand (the
+:class:`IntegrityProbe` background prober rides on it, the serving-side
+analogue of ``runtime.fault.ReplicaHealthTracker``); ``quarantine``
+renames a corrupted version directory out of the committed namespace so
+``load`` falls back to the newest intact version.  Pre-integrity v1/v2
+bundles (no ``integrity`` record) load unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
+import threading
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -32,10 +46,45 @@ from repro.checkpoint import CheckpointStore
 from repro.config import config_fingerprint
 from repro.core.nl_config import (LUTGraphConfig, LUTNodeSpec,
                                   NeuraLUTConfig, is_graph_config)
+from repro.runtime.chaos import ChaosHarness
 
 BUNDLE_FORMAT = 1          # chain bundles (the original schema)
 GRAPH_BUNDLE_FORMAT = 2    # LUT-DAG bundles: per-node branch lists + schedule
 SUPPORTED_FORMATS = (BUNDLE_FORMAT, GRAPH_BUNDLE_FORMAT)
+
+INTEGRITY_ALGO = "sha256"
+
+
+class BundleIntegrityError(RuntimeError):
+    """Stored bundle bytes disagree with their recorded checksums (or
+    the shard is unreadable outright); the bundle is refused rather
+    than served."""
+
+    def __init__(self, name: str, version: int, detail: str):
+        self.name = name
+        self.version = version
+        super().__init__(f"bundle '{name}' v{version} failed integrity "
+                         f"check: {detail}")
+
+
+def _array_digest(a: np.ndarray) -> str:
+    """SHA-256 over dtype + shape + raw bytes (shape/dtype are part of
+    the contract: a resized-but-byte-equal array must not verify)."""
+    a = np.ascontiguousarray(a)
+    h = hashlib.sha256()
+    h.update(str(a.dtype).encode())
+    h.update(repr(a.shape).encode())
+    h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def _meta_digest(meta: Dict[str, Any]) -> str:
+    """Canonical digest of the manifest meta minus the integrity record
+    itself.  JSON round-trips normalize containers, so the save-time
+    and load-time digests agree on any json-serializable meta."""
+    body = {k: v for k, v in meta.items() if k != "integrity"}
+    return hashlib.sha256(
+        json.dumps(body, sort_keys=True, default=str).encode()).hexdigest()
 
 
 @dataclass
@@ -260,12 +309,17 @@ def _topology_to_meta(topology: tuple):
 
 
 class TableRegistry:
-    """Save/load named ServeBundles under a root directory."""
+    """Save/load named ServeBundles under a root directory (checksummed;
+    see the module docstring's Integrity paragraph).  ``chaos`` checks
+    the ``registry.load`` injection site on every load — the
+    deterministic way to test a failing artifact store."""
 
-    def __init__(self, root: str, *, keep: int = 3):
+    def __init__(self, root: str, *, keep: int = 3,
+                 chaos: Optional[ChaosHarness] = None):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.keep = keep
+        self._chaos = chaos
 
     def _store(self, name: str) -> CheckpointStore:
         return CheckpointStore(str(self.root / name), keep=self.keep)
@@ -300,6 +354,15 @@ class TableRegistry:
             "fingerprint": config_fingerprint(bundle.cfg),
             "topology": _topology_to_meta(bundle.topology),
             **bundle.meta,
+        }
+        # Checksum every stored array (keyed exactly as the npz shard
+        # lays them out) plus the manifest meta itself.
+        from repro.checkpoint.store import _flatten
+        flat, _ = _flatten(tree)
+        meta["integrity"] = {
+            "algo": INTEGRITY_ALGO,
+            "arrays": {k: _array_digest(v) for k, v in flat.items()},
+            "manifest_digest": _meta_digest(meta),
         }
         return self._store(name).save(version, tree, meta=meta)
 
@@ -343,6 +406,7 @@ class TableRegistry:
         return out
 
     def load(self, name: str, *, version: Optional[int] = None,
+             verify: bool = True,
              shard_replicas: Optional[int] = None,
              shard_mode: str = "auto",
              vmem_budget_bytes: Optional[int] = None) -> ServeBundle:
@@ -351,6 +415,8 @@ class TableRegistry:
         if step is None:
             raise FileNotFoundError(f"no committed bundle '{name}' under "
                                     f"{self.root}")
+        if self._chaos is not None:
+            self._chaos.check("registry.load", detail=f"{name} v{step}")
         manifest = json.loads(
             (self.root / name / f"step_{step:010d}" / "manifest.json")
             .read_text())
@@ -359,8 +425,24 @@ class TableRegistry:
         if fmt not in SUPPORTED_FORMATS:
             raise ValueError(f"bundle '{name}' has format {fmt}, "
                              f"supported: {SUPPORTED_FORMATS}")
+        if verify and meta.get("integrity") is not None:
+            report = self._verify_dir(name, step)
+            if not report["ok"]:
+                raise BundleIntegrityError(
+                    name, step, f"mismatched: {report['bad']}")
         cfg = _cfg_from_meta(meta["config"])
         nl = cfg.num_layers
+
+        def _restore(template):
+            # A shard that fails to read (truncated zip, missing key) is
+            # a corrupt artifact, not a programming error — surface the
+            # same typed refusal as a checksum mismatch.
+            try:
+                return store.restore(template, step=step)[1]
+            except Exception as e:
+                raise BundleIntegrityError(
+                    name, step, f"shard unreadable: {e}") from e
+
         if fmt == GRAPH_BUNDLE_FORMAT:
             # Flat (node, branch) arrays on disk; regroup by arity.
             arities = [nd.arity for nd in cfg.nodes]
@@ -371,7 +453,7 @@ class TableRegistry:
                 "in_log_s": 0,
                 "layer_log_s": [0] * nl,
             }
-            _, tree = store.restore(template, step=step)
+            tree = _restore(template)
             tables: List = []
             statics: List[Dict[str, Any]] = []
             pos = 0
@@ -388,7 +470,7 @@ class TableRegistry:
                 "in_log_s": 0,
                 "layer_log_s": [0] * nl,
             }
-            _, tree = store.restore(template, step=step)
+            tree = _restore(template)
             tables = [np.asarray(t) for t in tree["tables"]]
             statics = [{"conn": np.asarray(c)} for c in tree["conn"]]
         if cfg.kind == "poly":
@@ -413,3 +495,156 @@ class TableRegistry:
             bundle.plan_shards(shard_replicas, mode=shard_mode,
                                vmem_budget_bytes=vmem_budget_bytes)
         return bundle
+
+    # -- integrity --------------------------------------------------------
+
+    def verify(self, name: str, *, version: Optional[int] = None
+               ) -> Dict[str, Any]:
+        """Recompute one version's checksums from disk (latest when
+        ``version`` is None).  Never raises — probes call this in a
+        loop — the report carries ``ok``, the per-array ``checked``
+        count, the offending ``bad`` keys, and ``legacy`` (True for
+        pre-integrity bundles, which vacuously verify)."""
+        if version is None:
+            version = self._store(name).latest_step()
+            if version is None:
+                return {"name": name, "version": -1, "ok": False,
+                        "checked": 0, "bad": ["no committed version"],
+                        "legacy": False}
+        return self._verify_dir(name, version)
+
+    def _verify_dir(self, name: str, step: int) -> Dict[str, Any]:
+        path = self.root / name / f"step_{step:010d}"
+        report: Dict[str, Any] = {"name": name, "version": step,
+                                  "ok": True, "checked": 0, "bad": [],
+                                  "legacy": False}
+        try:
+            meta = json.loads((path / "manifest.json").read_text())["meta"]
+        except Exception as e:
+            report["ok"] = False
+            report["bad"].append(f"manifest unreadable: {e}")
+            return report
+        integ = meta.get("integrity")
+        if integ is None:
+            report["legacy"] = True
+            return report
+        if _meta_digest(meta) != integ.get("manifest_digest"):
+            report["ok"] = False
+            report["bad"].append("manifest_digest")
+        try:
+            with np.load(path / "shard_0.npz") as data:
+                for key in sorted(integ.get("arrays", {})):
+                    try:
+                        got = _array_digest(data[key])
+                    except Exception:
+                        report["ok"] = False
+                        report["bad"].append(key)
+                        continue
+                    report["checked"] += 1
+                    if got != integ["arrays"][key]:
+                        report["ok"] = False
+                        report["bad"].append(key)
+        except Exception as e:
+            report["ok"] = False
+            report["bad"].append(f"shard unreadable: {e}")
+        return report
+
+    def quarantine(self, name: str, version: int) -> Path:
+        """Move one version out of the committed namespace (renamed to
+        ``quarantined_step_*``, which ``list_steps``/``latest_step``
+        never match) so ``load`` falls back to the newest intact
+        version.  The bytes are kept for post-mortem, not deleted."""
+        src = self.root / name / f"step_{version:010d}"
+        if not src.is_dir():
+            raise FileNotFoundError(f"no version {version} of '{name}' "
+                                    f"under {self.root}")
+        dst = self.root / name / f"quarantined_step_{version:010d}"
+        if dst.exists():
+            import shutil
+            shutil.rmtree(dst)
+        src.rename(dst)
+        return dst
+
+
+class IntegrityProbe:
+    """Background artifact prober: the serving-side analogue of
+    ``runtime.fault.ReplicaHealthTracker``, but for stored bundles.
+
+    Periodically re-verifies every committed version of the watched
+    models (all models when ``names`` is None); a version that fails is
+    quarantined (``auto_quarantine=True``) so the next ``load`` serves
+    the newest intact version, and ``on_corrupt(name, version, report)``
+    fires for operator alerting.  Both the quarantine and the hook are
+    exception-guarded — a probe must never die on the artifact it is
+    probing.  ``run_once()`` is the synchronous entry tests drive."""
+
+    def __init__(self, registry: TableRegistry,
+                 names: Optional[List[str]] = None, *,
+                 interval_s: float = 60.0,
+                 on_corrupt: Optional[Callable[[str, int, Dict], None]]
+                 = None,
+                 auto_quarantine: bool = True):
+        self.registry = registry
+        self.names = list(names) if names is not None else None
+        self.interval_s = interval_s
+        self.on_corrupt = on_corrupt
+        self.auto_quarantine = auto_quarantine
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+        self._corrupt: List[Dict[str, Any]] = []
+        self._sweeps = 0
+
+    def run_once(self) -> List[Dict[str, Any]]:
+        """One full sweep; returns the corrupt-version reports found."""
+        found: List[Dict[str, Any]] = []
+        names = (self.names if self.names is not None
+                 else self.registry.list_models())
+        for name in names:
+            for step in list(self.registry.versions(name)):
+                report = self.registry.verify(name, version=step)
+                if report["ok"]:
+                    continue
+                found.append(report)
+                if self.auto_quarantine:
+                    try:
+                        self.registry.quarantine(name, step)
+                    except Exception:
+                        pass
+                if self.on_corrupt is not None:
+                    try:
+                        self.on_corrupt(name, step, report)
+                    except Exception:
+                        pass
+        with self._lock:
+            self._corrupt.extend(found)
+            self._sweeps += 1
+        return found
+
+    def status(self) -> Dict[str, Any]:
+        with self._lock:
+            return {"sweeps": self._sweeps,
+                    "corrupt": list(self._corrupt),
+                    "running": self._thread is not None}
+
+    def start(self) -> "IntegrityProbe":
+        if self._thread is None:
+            self._stop.clear()
+            self._thread = threading.Thread(
+                target=self._loop, daemon=True, name="bundle-integrity")
+            self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        if self._thread is not None:
+            self._stop.set()
+            self._thread.join()
+            self._thread = None
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                self.run_once()
+            except Exception:
+                pass  # a probing error must not kill the prober
+            self._stop.wait(self.interval_s)

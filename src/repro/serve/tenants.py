@@ -64,8 +64,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.runtime.chaos import ChaosHarness
 from repro.runtime.fault import ReplicaHealthTracker
-from repro.serve.engine import (DEFAULT_BUCKETS, _complete, _ReplicaExecutor,
+from repro.serve.engine import (DEFAULT_BUCKETS, NoHealthyReplicas,
+                                _complete, _drop_expired, _ReplicaExecutor,
                                 _Request, make_forward_fn, pick_bucket,
                                 route_least_loaded)
 from repro.serve.metrics import ServeMetrics
@@ -136,8 +138,9 @@ class _TokenBucket:
 class _TenantRequest(_Request):
     __slots__ = ("lane", "tenant")
 
-    def __init__(self, x: np.ndarray, lane: int, tenant: "_TenantState"):
-        super().__init__(x)
+    def __init__(self, x: np.ndarray, lane: int, tenant: "_TenantState",
+                 timeout_s: Optional[float] = None):
+        super().__init__(x, timeout_s)
         self.lane = lane
         self.tenant = tenant
 
@@ -401,9 +404,12 @@ class _TenantExecutor(_ReplicaExecutor):
 
     def __init__(self, rid: int, group: _GeometryGroup, *,
                  buckets: Sequence[int], engine_metrics: ServeMetrics,
-                 health: ReplicaHealthTracker):
+                 health: ReplicaHealthTracker,
+                 redispatch: Optional[Callable] = None,
+                 chaos: Optional[ChaosHarness] = None):
         super().__init__(rid, group.forward, buckets=buckets, device=None,
-                         engine_metrics=engine_metrics, health=health)
+                         engine_metrics=engine_metrics, health=health,
+                         redispatch=redispatch, chaos=chaos)
         self._group = group
 
     def warmup(self, in_features: int) -> None:
@@ -415,18 +421,22 @@ class _TenantExecutor(_ReplicaExecutor):
                           *ops).block_until_ready()
 
     def _serve(self, batch: List[_TenantRequest], total: int,
-               depth: int) -> None:
+               depth: int, attempts: int = 0) -> None:
+        batch = _drop_expired(batch, self._engine_metrics)
+        if not batch:
+            return
+        total = sum(r.n for r in batch)
         x = (batch[0].x if len(batch) == 1
              else np.concatenate([r.x for r in batch], axis=0))
         tid = np.concatenate(
             [np.full(r.n, r.lane, np.int32) for r in batch])
         ops = self._group.operands()  # ONE snapshot for the whole dispatch
         try:
+            if self._chaos is not None:
+                self._chaos.check("serve.replica")
             preds, padded = self._run(x, tid, ops)
         except Exception as e:
-            for r in batch:
-                _complete(r.future, exc=e)
-            self._health.record_failure(self.rid, e)
+            self._fail_or_redispatch(batch, total, attempts, e)
             return
         self._health.record_success(self.rid)
         t_done = time.perf_counter()
@@ -479,15 +489,23 @@ class MultiTenantEngine:
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
                  max_wait_ms: float = 2.0,
                  replicas: int = 1,
-                 metrics: Optional[ServeMetrics] = None):
+                 metrics: Optional[ServeMetrics] = None,
+                 max_dispatch_retries: int = 2,
+                 revive_probe: Optional[Callable[[int], bool]] = None,
+                 chaos: Optional[ChaosHarness] = None):
         if not tenants:
             raise ValueError("MultiTenantEngine needs at least one tenant")
         if list(buckets) != sorted(set(buckets)):
             raise ValueError(f"buckets must be strictly increasing: {buckets}")
         if replicas < 1:
             raise ValueError(f"replicas={replicas} must be >= 1")
+        if max_dispatch_retries < 0:
+            raise ValueError(f"max_dispatch_retries={max_dispatch_retries} "
+                             f"must be >= 0")
         self.buckets = tuple(int(b) for b in buckets)
         self.max_wait_s = max_wait_ms / 1e3
+        self.max_dispatch_retries = max_dispatch_retries
+        self.revive_probe = revive_probe
         self.metrics = metrics or ServeMetrics()
         self._groups: Dict[tuple, _GeometryGroup] = {}
         self._tenants: Dict[str, _TenantState] = {}
@@ -513,8 +531,46 @@ class MultiTenantEngine:
             group.executors = [
                 _TenantExecutor(i, group, buckets=self.buckets,
                                 engine_metrics=self.metrics,
-                                health=group.health)
+                                health=group.health,
+                                redispatch=self._make_redispatch(group),
+                                chaos=chaos)
                 for i in range(replicas)]
+
+    def _make_redispatch(self, group: "_GeometryGroup") -> Callable:
+        """Per-group self-healing hook (see LUTServeEngine._redispatch):
+        re-route a failed batch inside the group's own replica pool."""
+        def redispatch(batch, total, attempts, failed_rid) -> bool:
+            if attempts > self.max_dispatch_retries:
+                return False
+            chosen = route_least_loaded(group.executors, group.health,
+                                        group.rr, exclude=failed_rid)
+            if chosen is None:
+                self._probe_evicted(group)
+                chosen = route_least_loaded(group.executors, group.health,
+                                            group.rr, exclude=failed_rid)
+            if chosen is None:
+                return False
+            group.rr = chosen.rid
+            self.metrics.record_redispatch()
+            chosen.dispatch(batch, total, 0, attempts)
+            return True
+        return redispatch
+
+    def _probe_evicted(self, group: "_GeometryGroup") -> None:
+        """Ask ``revive_probe(rid)`` about every evicted replica of one
+        group; a raising probe counts as 'still down'."""
+        if self.revive_probe is None:
+            return
+        healthy = set(group.health.healthy_ids())
+        for ex in group.executors:
+            if ex.rid in healthy:
+                continue
+            try:
+                ok = bool(self.revive_probe(ex.rid))
+            except Exception:
+                ok = False
+            if ok:
+                group.health.revive(ex.rid)
 
     # -- introspection -----------------------------------------------------
 
@@ -601,12 +657,16 @@ class MultiTenantEngine:
 
     # -- client API --------------------------------------------------------
 
-    def submit(self, tenant: str, x: np.ndarray):
+    def submit(self, tenant: str, x: np.ndarray, *,
+               timeout_s: Optional[float] = None):
         """Admission-controlled enqueue for one tenant.  Raises
         :class:`TenantOverloaded` (and bumps the shed counters) when the
         tenant's rate limit or queue bound would be exceeded — the
         backpressure signal — and RuntimeError once the engine is
         closed.  Returns a Future of the (n,) int32 predictions.
+        ``timeout_s`` sets a per-request deadline; an unserved request
+        past it resolves with ``serve.engine.DeadlineExceeded``
+        (counted in both the engine's and the tenant's metrics).
         Requests admitted before ``start()`` queue up (still subject to
         the tenant's bounds) and are served once the engine starts —
         the dispatcher drains strictly by priority, which the
@@ -618,7 +678,9 @@ class MultiTenantEngine:
         f = state.group.cfg.in_features
         if x.ndim != 2 or x.shape[1] != f:
             raise ValueError(f"request shape {x.shape} != (n, {f})")
-        req = _TenantRequest(x, state.lane, state)
+        if timeout_s is not None and timeout_s <= 0:
+            raise ValueError(f"timeout_s={timeout_s} must be positive")
+        req = _TenantRequest(x, state.lane, state, timeout_s)
         group = state.group
         with group.cond:
             if self._closed:
@@ -643,10 +705,11 @@ class MultiTenantEngine:
             group.cond.notify_all()
         return req.future
 
-    def predict(self, tenant: str, x: np.ndarray) -> np.ndarray:
+    def predict(self, tenant: str, x: np.ndarray, *,
+                timeout_s: Optional[float] = None) -> np.ndarray:
         if not self._started:
             self.start()
-        return self.submit(tenant, x).result()
+        return self.submit(tenant, x, timeout_s=timeout_s).result()
 
     # -- dispatcher (one thread per geometry group) ------------------------
 
@@ -678,16 +741,26 @@ class MultiTenantEngine:
 
     def _route(self, group: _GeometryGroup, batch: List[_TenantRequest],
                total: int) -> None:
+        batch = _drop_expired(batch, self.metrics)
+        if not batch:
+            return
+        total = sum(r.n for r in batch)
         with group.cond:
             depth = sum(len(t.pending) for t in group.tenants)
         chosen = route_least_loaded(group.executors, group.health, group.rr)
         if chosen is None:
-            err = RuntimeError(
+            self._probe_evicted(group)
+            chosen = route_least_loaded(group.executors, group.health,
+                                        group.rr)
+        if chosen is None:
+            err = NoHealthyReplicas(
                 f"no healthy replicas (of {len(group.executors)}) in "
                 f"geometry group — failure counts "
                 f"{group.health.failure_counts()}")
             for r in batch:
-                _complete(r.future, exc=err)
+                if _complete(r.future, exc=err):
+                    r.tenant.metrics.record_shed()
+                    self.metrics.record_shed()
             return
         group.rr = chosen.rid
         chosen.dispatch(batch, total, depth)

@@ -33,9 +33,11 @@ this on 1 and on 8 (forced host) devices.
 """
 from __future__ import annotations
 
+import hashlib
+import json
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +45,8 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.checkpoint.store import CheckpointStore
+from repro.config import config_fingerprint
 from repro.core import cost_model as CM
 from repro.core import model as M
 from repro.core import truth_table as TT
@@ -50,10 +54,25 @@ from repro.core.exec_plan import plan_subnet_exec
 from repro.core.nl_config import NeuraLUTConfig
 from repro.core.train import (_donate_carries, init_ensemble,
                               make_eval_fn_dynamic, make_step_fn_dynamic)
+from repro.runtime.chaos import ChaosHarness
+from repro.runtime.straggler import StepWatchdog
 from repro.runtime.tracker import NoopTracker, Tracker
 from repro.sweep.plan import GeometryGroup, SweepPoint, plan_sweep
 
 Params = Dict
+
+
+class SweepGroupFailed(RuntimeError):
+    """A geometry group kept failing after ``max_group_retries``
+    redispatches — the sweep aborts (its journal, if any, keeps every
+    group that did finish, so a rerun with ``resume=`` replays them)."""
+
+
+class _FailedAttempt:
+    """Placeholder in the pending list for a dispatch that raised."""
+
+    def __init__(self, exc: Exception):
+        self.exc = exc
 
 
 # ---------------------------------------------------------------------------
@@ -203,6 +222,75 @@ def make_group_train_fn(padded_cfg: NeuraLUTConfig, *, n: int, batch: int,
 
 
 # ---------------------------------------------------------------------------
+# resume journal: each finished group's results, content-addressed
+
+
+def group_fingerprint(group: GeometryGroup, *, epochs: int, batch: int,
+                      lr: float, weight_decay: float, sgdr_t0: int,
+                      subnet_route: Optional[str],
+                      data_digest: str) -> str:
+    """Content hash of everything that determines a group's results:
+    every point's true config, the padded canvas config, the seed set,
+    the training hyperparameters and the dataset bytes.  A journal
+    entry is replayed on resume only when its fingerprint matches —
+    changing any input invalidates the cache instead of serving stale
+    results."""
+    payload = {
+        "points": [config_fingerprint(p.cfg) for p in group.points],
+        "padded": config_fingerprint(group.padded_cfg),
+        "seeds": list(group.seeds),
+        "pad_units": group.pad_units,
+        "epochs": epochs, "batch": batch, "lr": lr,
+        "weight_decay": weight_decay, "sgdr_t0": sgdr_t0,
+        "route": subnet_route, "data": data_digest,
+    }
+    return hashlib.sha256(
+        json.dumps(payload, sort_keys=True).encode()).hexdigest()
+
+
+def _data_digest(*arrays) -> str:
+    h = hashlib.sha256()
+    for a in arrays:
+        a = np.asarray(a)
+        h.update(str(a.dtype).encode())
+        h.update(repr(a.shape).encode())
+        h.update(np.ascontiguousarray(a).tobytes())
+    return h.hexdigest()
+
+
+class SweepJournal:
+    """Per-group result journal over :class:`CheckpointStore` (atomic
+    tmp-rename commits, so a kill mid-write never leaves a half entry).
+    Step number == group index; the group's fingerprint rides in the
+    manifest meta and gates replay."""
+
+    def __init__(self, directory: Union[str, "object"]):
+        self.store = CheckpointStore(str(directory), keep=0)
+
+    def lookup(self, group_index: int, fingerprint: str) -> bool:
+        if group_index not in self.store.list_steps():
+            return False
+        try:
+            meta = self.store.meta(group_index)
+        except Exception:
+            return False
+        return meta.get("fingerprint") == fingerprint
+
+    def save(self, group_index: int, fingerprint: str, params, state,
+             hist: Dict[str, np.ndarray]) -> None:
+        tree = {"params": jax.device_get(params),
+                "state": jax.device_get(state),
+                "hist": {k: np.asarray(v) for k, v in hist.items()}}
+        self.store.save(group_index, tree,
+                        meta={"fingerprint": fingerprint,
+                              "group": group_index})
+
+    def load(self, group_index: int, template) -> Dict:
+        _, tree = self.store.restore(template, step=group_index)
+        return tree
+
+
+# ---------------------------------------------------------------------------
 # results
 
 
@@ -218,6 +306,8 @@ class PointResult:
     packed: Optional[Tuple[List[np.ndarray], List[np.ndarray]]] = None
     params: Optional[Params] = None         # best member, unpadded
     state: Optional[Params] = None
+    status: str = "ok"                      # "failed": all seeds diverged
+    diverged_seeds: int = 0                 # NaN/inf members quarantined
 
     @property
     def name(self) -> str:
@@ -230,6 +320,9 @@ class GroupRun:
     cold_s: float                           # trace + AOT compile
     warm_s: float = 0.0                     # dispatch -> results fetched
     convert_s: float = 0.0
+    retries: int = 0                        # redispatches before success
+    replayed: bool = False                  # served from the journal
+    straggler: bool = False                 # watchdog outlier fetch
 
 
 @dataclass
@@ -249,7 +342,9 @@ class SweepResult:
         return self.cold_s + self.warm_s
 
     def frontier(self, tag: str) -> List[PointResult]:
-        return [p for p in self.points if p.point.tag == tag]
+        # Diverged points never enter the frontier (NaN quarantine).
+        return [p for p in self.points
+                if p.point.tag == tag and p.status == "ok"]
 
 
 def _slice_member(tree, spec_tree, unit: int):
@@ -289,6 +384,11 @@ def run_pareto_sweep(
     tracker: Optional[Tracker] = None,
     convert: bool = False,
     subnet_route: Optional[str] = None,
+    resume: Optional[str] = None,
+    max_group_retries: int = 2,
+    retry_backoff_s: float = 0.25,
+    chaos: Optional[ChaosHarness] = None,
+    watchdog: Optional[StepWatchdog] = None,
 ) -> SweepResult:
     """Train the whole Pareto grid as mesh-parallel compiled groups.
 
@@ -297,8 +397,27 @@ def run_pareto_sweep(
     group's cold (compile) and warm (run) seconds.  ``convert=True``
     additionally runs each point's best seed through the fused packed
     truth-table conversion as its group completes.
+
+    Fault tolerance:
+      * ``resume=dir`` journals every finished group through
+        :class:`SweepJournal`; a rerun replays journaled groups whose
+        :func:`group_fingerprint` still matches (skipping their compile
+        AND training) and trains only the rest — a killed sweep picks
+        up where it stopped, bit-identical to an uninterrupted run.
+      * a group whose dispatch or fetch raises is redispatched with
+        exponential backoff (``retry_backoff_s * 2**attempt``) up to
+        ``max_group_retries`` times, then :class:`SweepGroupFailed`.
+      * seeds that diverged (NaN/inf loss or accuracy) are quarantined
+        per point: best/err statistics use only finite members; a point
+        with NO finite member streams ``status="failed"`` instead of
+        poisoning the frontier.
+      * ``chaos`` injects failures at the ``"sweep.group"`` dispatch
+        site; ``watchdog`` (a :class:`StepWatchdog`) flags straggler
+        group fetches into the tracker records.
     """
     tracker = tracker or NoopTracker()
+    if max_group_retries < 0:
+        raise ValueError("max_group_retries must be >= 0")
     if mesh is None:
         from repro.launch.mesh import make_sweep_mesh
         mesh = make_sweep_mesh()
@@ -310,11 +429,42 @@ def run_pareto_sweep(
     n = int(xd.shape[0])
     batch = min(batch, n)
 
+    journal = SweepJournal(resume) if resume is not None else None
+    ddig = (_data_digest(x_train, y_train, x_test, y_test)
+            if journal is not None else "")
+
+    def _template(ops):
+        units = jax.tree.leaves(ops[0])[0].shape[0]
+        return {"params": ops[0], "state": ops[1],
+                "hist": {k: np.zeros((units, epochs), np.float32)
+                         for k in ("loss", "test_acc", "test_acc_q")}}
+
     # Stage 1+2: stack operands and AOT-compile one program per group.
+    # Journaled groups with a matching fingerprint replay from disk and
+    # skip both the compile and the training dispatch.
     runs: List[GroupRun] = []
-    execs, operands = [], []
+    execs, operands, fingerprints, replays = [], [], [], []
     for g in groups:
         ops = stack_group_operands(g, xd)
+        fp = ""
+        replay = None
+        if journal is not None:
+            fp = group_fingerprint(
+                g, epochs=epochs, batch=batch, lr=lr,
+                weight_decay=weight_decay, sgdr_t0=sgdr_t0,
+                subnet_route=subnet_route, data_digest=ddig)
+            if journal.lookup(g.index, fp):
+                try:
+                    replay = journal.load(g.index, _template(ops))
+                except Exception:
+                    replay = None       # corrupt entry -> train live
+        fingerprints.append(fp)
+        replays.append(replay)
+        if replay is not None:
+            runs.append(GroupRun(group=g, cold_s=0.0, replayed=True))
+            execs.append(None)
+            operands.append(None)
+            continue
         t0 = time.perf_counter()
         fn = make_group_train_fn(
             g.padded_cfg, n=n, batch=batch, epochs=epochs, lr=lr,
@@ -325,18 +475,57 @@ def run_pareto_sweep(
         execs.append(exe)
         operands.append(ops)
 
-    # Stage 3: dispatch every group back to back (async), then fetch in
-    # order — streaming each finished group's points out immediately.
+    def _dispatch(i: int):
+        """One training dispatch for group i (chaos site sweep.group);
+        returns the async result triple or a _FailedAttempt."""
+        try:
+            if chaos is not None:
+                chaos.check("sweep.group",
+                            detail=f"group {groups[i].index} dispatch")
+            return execs[i](*operands[i], xd, yd, xe, ye)
+        except Exception as e:
+            return _FailedAttempt(e)
+
+    # Stage 3: dispatch every live group back to back (async), then
+    # fetch in order — streaming each finished group's points out
+    # immediately; a failed group is redispatched with backoff.
     t_dispatch = time.perf_counter()
-    pending = [exe(*ops, xd, yd, xe, ye)
-               for exe, ops in zip(execs, operands)]
+    pending = [None if execs[i] is None else _dispatch(i)
+               for i in range(len(groups))]
 
     results: List[PointResult] = []
     s_count = len(groups[0].seeds)
-    for run, (params_w, state_w, hist_w) in zip(runs, pending):
+    for i, run in enumerate(runs):
         g = run.group
-        hist = jax.device_get(hist_w)       # blocks on this group only
-        run.warm_s = time.perf_counter() - t_dispatch
+        t_fetch = time.perf_counter()
+        if run.replayed:
+            tree = replays[i]
+            params_w, state_w = tree["params"], tree["state"]
+            hist = {k: np.asarray(v) for k, v in tree["hist"].items()}
+        else:
+            result = pending[i]
+            while True:
+                try:
+                    if isinstance(result, _FailedAttempt):
+                        raise result.exc
+                    params_w, state_w, hist_w = result
+                    hist = jax.device_get(hist_w)   # blocks this group
+                    break
+                except Exception as e:
+                    run.retries += 1
+                    if run.retries > max_group_retries:
+                        raise SweepGroupFailed(
+                            f"group {g.index} failed after "
+                            f"{run.retries} attempts: {e}") from e
+                    time.sleep(retry_backoff_s * 2 ** (run.retries - 1))
+                    result = _dispatch(i)
+            run.warm_s = time.perf_counter() - t_dispatch
+            if journal is not None:
+                journal.save(g.index, fingerprints[i], params_w,
+                             state_w, hist)
+        if watchdog is not None and not run.replayed:
+            run.straggler = watchdog.record(
+                time.perf_counter() - t_fetch)
         group_points: List[PointResult] = []
         for pi, pt in enumerate(g.points):
             u0 = g.unit_index(pi, 0)
@@ -345,20 +534,34 @@ def run_pareto_sweep(
                 axis=1).astype(np.float64)
                 for k, v in hist.items()}   # (epochs, S)
             final_q = history["test_acc_q"][-1]
-            best = int(final_q.argmax())
-            res = PointResult(
-                point=pt, group_index=g.index, history=history,
-                best_seed=best, err=float(1.0 - final_q.max()),
-                err_mean=float(1.0 - final_q.mean()),
-                est=CM.estimate(pt.cfg))
-            if convert:
-                tc = time.perf_counter()
-                res.params, res.state = member_params_state(
-                    g, params_w, state_w, pi, best)
-                res.packed = TT.convert_packed(
-                    pt.cfg, res.params, res.state,
-                    M.model_static(pt.cfg))
-                run.convert_s += time.perf_counter() - tc
+            # NaN quarantine: a diverged member (non-finite loss or
+            # accuracy anywhere) is excluded from best/err stats.
+            finite = (np.isfinite(final_q) &
+                      np.isfinite(history["loss"]).all(axis=0) &
+                      np.isfinite(history["test_acc"]).all(axis=0))
+            diverged = int(s_count - finite.sum())
+            if finite.any():
+                masked = np.where(finite, final_q, -np.inf)
+                best = int(masked.argmax())
+                res = PointResult(
+                    point=pt, group_index=g.index, history=history,
+                    best_seed=best, err=float(1.0 - masked.max()),
+                    err_mean=float(1.0 - final_q[finite].mean()),
+                    est=CM.estimate(pt.cfg), diverged_seeds=diverged)
+                if convert:
+                    tc = time.perf_counter()
+                    res.params, res.state = member_params_state(
+                        g, params_w, state_w, pi, best)
+                    res.packed = TT.convert_packed(
+                        pt.cfg, res.params, res.state,
+                        M.model_static(pt.cfg))
+                    run.convert_s += time.perf_counter() - tc
+            else:                           # every seed diverged
+                res = PointResult(
+                    point=pt, group_index=g.index, history=history,
+                    best_seed=0, err=float("nan"),
+                    err_mean=float("nan"), est=CM.estimate(pt.cfg),
+                    status="failed", diverged_seeds=diverged)
             group_points.append(res)
             results.append(res)
         for res in group_points:
@@ -369,7 +572,14 @@ def run_pareto_sweep(
                  "latency_ns": res.est.latency_ns,
                  "luts": res.est.luts,
                  "area_delay": res.est.area_delay,
-                 "cold_s": run.cold_s, "warm_s": run.warm_s},
+                 "cold_s": run.cold_s, "warm_s": run.warm_s,
+                 "status": res.status,
+                 "diverged_seeds": res.diverged_seeds,
+                 "retries": run.retries, "replayed": run.replayed,
+                 "straggler": run.straggler,
+                 "straggler_persistent": (watchdog.persistent
+                                          if watchdog is not None
+                                          else False)},
                 step=g.point_offset + g.points.index(res.point))
     warm_total = time.perf_counter() - t_dispatch
     return SweepResult(points=results, groups=runs, devices=devices,

@@ -70,3 +70,61 @@ def test_restore_different_values_not_shapes(tmp_path):
     _, t2 = store.restore(template)
     np.testing.assert_array_equal(np.asarray(t["params"]["w"]),
                                   np.asarray(t2["params"]["w"]))
+
+
+def test_restore_skips_truncated_checkpoint_with_warning(tmp_path):
+    """A committed-but-unreadable step (crash mid-write, disk fault)
+    must not brick a resume: restore(step=None) warns and falls back
+    to the previous intact step; an explicit step= still raises."""
+    import warnings
+
+    store = CheckpointStore(str(tmp_path), keep=0)
+    t = _tree()
+    store.save(1, t)
+    t2 = _tree(seed=2)
+    store.save(2, t2)
+    shard = tmp_path / "step_0000000002" / "shard_0.npz"
+    shard.write_bytes(shard.read_bytes()[: shard.stat().st_size // 2])
+    assert store.list_steps() == [1, 2]        # manifest still commits it
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        step, restored = store.restore(t)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(t["params"]["w"]))
+    assert any(issubclass(w.category, RuntimeWarning) for w in caught)
+    try:
+        store.restore(t, step=2)
+        raise AssertionError("explicit corrupt step must raise")
+    except AssertionError:
+        raise
+    except Exception:
+        pass
+
+
+def test_restore_corrupted_member_falls_back(tmp_path):
+    """Byte-flip corruption inside the npz (bad zip CRC on one member)
+    is detected at read time and skipped the same way truncation is."""
+    import warnings
+
+    store = CheckpointStore(str(tmp_path), keep=0)
+    t = _tree()
+    store.save(1, t)
+    store.save(2, _tree(seed=3))
+    shard = tmp_path / "step_0000000002" / "shard_0.npz"
+    raw = bytearray(shard.read_bytes())
+    mid = len(raw) // 2
+    for i in range(mid, min(mid + 32, len(raw))):
+        raw[i] ^= 0xFF
+    shard.write_bytes(bytes(raw))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        step, restored = store.restore(t)
+    assert step == 1
+    assert any(issubclass(w.category, RuntimeWarning) for w in caught)
+
+
+def test_meta_helper_roundtrip(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    store.save(3, _tree(), meta={"fingerprint": "abc", "note": 1})
+    assert store.meta(3) == {"fingerprint": "abc", "note": 1}

@@ -227,15 +227,16 @@ def test_evicted_replica_stops_receiving_batches():
 
 def test_failing_replica_auto_evicts_and_serving_recovers():
     """Break replica 0 — the one sticky routing sends sequential load
-    to.  It fails exactly max_consecutive_failures dispatches, the
-    tracker evicts it (firing on_evict), and every later request is
-    absorbed by replica 1."""
+    to.  The failed dispatch is recorded against the tracker (evicting
+    replica 0, firing on_evict) and the batch self-heals: it is
+    redispatched to replica 1, so no client ever sees the error, and
+    every later request routes straight to the survivor."""
     bundle = _bundle()
     x = np.random.default_rng(7).normal(
         0, 1, (4, bundle.cfg.in_features)).astype(np.float32)
     evicted = []
     health = ReplicaHealthTracker(
-        2, max_consecutive_failures=2,
+        2, max_consecutive_failures=1,
         on_evict=lambda rid, exc: evicted.append((rid, str(exc))))
     with LUTServeEngine(bundle, use_kernel=False, replicas=2,
                         health=health, buckets=(4,)) as eng:
@@ -245,25 +246,22 @@ def test_failing_replica_auto_evicts_and_serving_recovers():
             raise RuntimeError("injected replica failure")
 
         eng._executors[0]._forward = boom
-        failures = 0
         for _ in range(12):
-            try:
-                got = eng.predict(x)
-                assert (got == _oracle_preds(bundle, x)).all()
-            except RuntimeError:
-                failures += 1
-        assert failures == 2, failures
+            assert (eng.predict(x) == _oracle_preds(bundle, x)).all()
         assert not health.is_healthy(0)
         assert evicted and evicted[0][0] == 0
         assert "injected replica failure" in evicted[0][1]
-        for _ in range(4):
-            assert (eng.predict(x) == _oracle_preds(bundle, x)).all()
+        rep = eng.metrics.report()
+        assert rep["redispatches"] == 1.0, rep
+        assert rep["requests"] == 12.0
 
 
 def test_raising_on_evict_hook_never_strands_clients():
     """A user on_evict hook that throws must not kill the replica worker
-    or leave futures pending: the failed batch's clients still get the
-    original error and serving recovers on the surviving replica."""
+    or leave futures pending: with the redispatch budget disabled the
+    failed batch's clients get the original error (chained through the
+    typed DispatchFailed) and serving recovers on the surviving
+    replica."""
     bundle = _bundle()
     x = np.random.default_rng(9).normal(
         0, 1, (4, bundle.cfg.in_features)).astype(np.float32)
@@ -274,7 +272,8 @@ def test_raising_on_evict_hook_never_strands_clients():
     health = ReplicaHealthTracker(2, max_consecutive_failures=1,
                                   on_evict=bad_hook)
     with LUTServeEngine(bundle, use_kernel=False, replicas=2,
-                        health=health, buckets=(4,)) as eng:
+                        health=health, buckets=(4,),
+                        max_dispatch_retries=0) as eng:
         eng.warmup()
 
         def boom(_):
