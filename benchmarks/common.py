@@ -19,6 +19,7 @@ RECORDS: List[Dict] = []
 # Single source of truth: run.py's gate, write_bench_summary's section
 # mapping, and its record-prefix merge are all derived from this.
 GATED_SUITES = {"kernel": "cascade", "kernel_dag": "cascade_dag",
+                "kernel_cpu": "cascade_cpu",
                 "train": "train", "train_kernel": "train_kernel",
                 "convert": "convert", "serve_tenants": "serve_tenants",
                 "serve_resilience": "serve_resilience",

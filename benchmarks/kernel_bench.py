@@ -11,7 +11,9 @@ of the Pallas ``lut_cascade`` kernel) against the per-layer path (one
 jitted dispatch per layer, (B, O) codes round-tripping device memory
 between layers) on the JSC-5L geometry, plus the bit-packed vs unpacked
 table footprint.  ``run()`` returns the cascade summary dict that
-benchmarks/run.py writes to BENCH_kernels.json.
+benchmarks/run.py writes to BENCH_kernels.json; ``run_cpu()`` gates the
+cache-blocked ``fused_cpu_blocked`` route against a vendored copy of
+the packed shift-matmul path it replaced as the CPU serving default.
 """
 from __future__ import annotations
 
@@ -26,18 +28,20 @@ from repro.kernels.ref import grouped_subnet_ref, lut_gather_ref
 from repro.roofline.hlo import analyze_hlo
 
 
-def _cascade_sweep(fast: bool) -> Dict:
-    """Cascade-vs-per-layer on the JSC-5L shape with random tables
-    (lookup cost does not depend on table contents)."""
-    from repro.configs.neuralut_jsc_5l import full
-    from repro.core.lut_infer import pack_index
-    from repro.kernels.lut_cascade import (build_shift_mats, cascade_meta,
-                                           cascade_tables)
-    from repro.kernels.ops import lut_cascade_op
-    from repro.kernels.ref import lut_cascade_packed_ref
+def _agreement_route(backend: Optional[str]) -> str:
+    """Forced cascade route for the small-tile bit-exactness record.
+    ``None`` keeps the historical record (the Mosaic-TPU kernel body,
+    interpret-emulated off-TPU); ``--backend`` pins another column of
+    the backend matrix so any runner can exercise its lowering."""
+    return {None: "fused_kernel_tpu", "tpu": "fused_kernel_tpu",
+            "gpu": "fused_kernel_gpu", "cpu": "fused_cpu_blocked"}[backend]
 
+
+def _jsc5l_chain_net(rng):
+    """Random (cfg, tables, statics) on the full JSC-5L geometry —
+    lookup cost does not depend on table contents."""
+    from repro.configs.neuralut_jsc_5l import full
     cfg = full()
-    rng = np.random.default_rng(0)
     statics, tables = [], []
     w_prev = cfg.in_features
     for i, o in enumerate(cfg.layer_widths):
@@ -46,6 +50,20 @@ def _cascade_sweep(fast: bool) -> Dict:
         tables.append(rng.integers(0, 2 ** cfg.beta,
                                    (o, cfg.table_size(i))).astype(np.uint16))
         w_prev = o
+    return cfg, tables, statics
+
+
+def _cascade_sweep(fast: bool, backend: Optional[str] = None) -> Dict:
+    """Cascade-vs-per-layer on the JSC-5L shape with random tables
+    (lookup cost does not depend on table contents)."""
+    from repro.core.exec_plan import plan_cascade_exec
+    from repro.core.lut_infer import pack_index
+    from repro.kernels.lut_cascade import build_shift_mats, cascade_tables
+    from repro.kernels.ops import cascade_apply
+    from repro.kernels.ref import lut_cascade_packed_ref
+
+    rng = np.random.default_rng(0)
+    cfg, tables, statics = _jsc5l_chain_net(rng)
     conns = [jnp.asarray(s["conn"]) for s in statics]
     tbls = [jnp.asarray(t.astype(np.int32)) for t in tables]
     in_bits = tuple(cfg.layer_in_bits(i) for i in range(cfg.num_layers))
@@ -98,22 +116,26 @@ def _cascade_sweep(fast: bool) -> Dict:
              f"per_layer_us={us_pl:.1f};speedup={row['speedup']:.2f}x;"
              f"fused_lookups_per_s={row['fused_lookups_per_s']:.2e}")
 
-    # Pallas cascade kernel: interpret-mode bit-exactness on a small tile
+    # Forced-route bit-exactness on a small tile (kernel routes run in
+    # interpret emulation where their accelerator is absent)
+    route = _agreement_route(backend)
     bsm = 16
     codes = jnp.asarray(
         rng.integers(0, 2 ** cfg.layer_in_bits(0), (bsm, cfg.in_features)),
         jnp.int32)
-    got = np.asarray(lut_cascade_op(codes, sms, pts,
-                                    meta=cascade_meta(cfg), block_b=8))
+    plan = plan_cascade_exec(cfg, route=route, block_b=8)
+    got = np.asarray(cascade_apply(codes, sms, pts, plan=plan))
     agree = bool((got == np.asarray(per_layer(codes))).all())
     emit("kernel/cascade_pallas_agreement", 0.0,
-         f"bit_exact={agree};packed_bytes={packed_bytes};"
+         f"bit_exact={agree};route={route};"
+         f"packed_bytes={packed_bytes};"
          f"unpacked_int32_bytes={unpacked_bytes};"
          f"ratio={packed_bytes/unpacked_bytes:.4f}")
 
     return {
         "config": cfg.name,
         "fast_mode": fast,
+        "agreement_route": route,
         "per_layer_dispatches": 3 * cfg.num_layers,
         "fused_dispatches": 1,
         "lookups_per_sample": lookups,
@@ -125,7 +147,7 @@ def _cascade_sweep(fast: bool) -> Dict:
     }
 
 
-def run_dag(fast: bool = False) -> Dict:
+def run_dag(fast: bool = False, backend: Optional[str] = None) -> Dict:
     """DAG cascade: single-launch fused walk vs per-node dispatch.
 
     The ``cascade`` section gates the *chain* fast path; this section
@@ -139,11 +161,12 @@ def run_dag(fast: bool = False) -> Dict:
     rows mirror the chain sweep so run.py's cascade checker gates both.
     """
     from repro.configs.polylut_add_jsc_5l import full
+    from repro.core.exec_plan import plan_cascade_exec
     from repro.core.lut_infer import pack_index
     from repro.kernels.lut_cascade import (build_graph_shift_mats,
                                            graph_cascade_meta,
-                                           graph_cascade_tables,
-                                           lut_cascade)
+                                           graph_cascade_tables)
+    from repro.kernels.ops import cascade_apply
     from repro.kernels.ref import lut_cascade_packed_ref
 
     cfg = full()
@@ -216,19 +239,23 @@ def run_dag(fast: bool = False) -> Dict:
              f"per_node_us={us_pn:.1f};speedup={row['speedup']:.2f}x;"
              f"fused_lookups_per_s={row['fused_lookups_per_s']:.2e}")
 
-    # Pallas DAG kernel: interpret-mode bit-exactness on a small tile
+    # Forced-route bit-exactness on a small tile (interpret emulation
+    # where the route's accelerator is absent)
+    route = _agreement_route(backend)
     bsm = 16
     codes = jnp.asarray(
         rng.integers(0, 2 ** cfg.node_in_bits(0), (bsm, cfg.in_features)),
         jnp.int32)
-    got = np.asarray(lut_cascade(codes, sms, pts, schedule, block_b=8))
+    plan = plan_cascade_exec(cfg, route=route, block_b=8)
+    got = np.asarray(cascade_apply(codes, sms, pts, plan=plan))
     agree = bool((got == np.asarray(per_node(codes))).all())
     emit("kernel_dag/cascade_dag_pallas_agreement", 0.0,
-         f"bit_exact={agree}")
+         f"bit_exact={agree};route={route}")
 
     return {
         "config": cfg.name,
         "fast_mode": fast,
+        "agreement_route": route,
         "per_node_dispatches": cfg.num_layers,
         "fused_dispatches": 1,
         "branches": sum(nd.arity for nd in cfg.nodes),
@@ -238,7 +265,111 @@ def run_dag(fast: bool = False) -> Dict:
     }
 
 
-def run(fast: bool = False) -> Optional[Dict]:
+def run_cpu(fast: bool = False) -> Dict:
+    """Cache-blocked CPU cascade (``ref.lut_cascade_blocked``, the
+    ``fused_cpu_blocked`` route) vs the bit-packed shift-matmul path it
+    replaces as the off-accelerator serving default.
+
+    The baseline is a *vendored* copy of ``lut_cascade_packed_ref`` as
+    of the route's introduction, so the section keeps measuring the
+    blocked path against the same yardstick even if ``kernels/ref.py``
+    evolves.  The blocked path's tile size is micro-swept first and the
+    winner recorded (``chosen_block_b``); the acceptance bar is
+    blocked >= 1.5x packed-ref at batch 4096, so 4096 stays in the
+    sweep even in ``--fast`` CI mode.  Rows mirror the ``cascade``
+    schema (``batch`` / ``fused_lookups_per_s`` / ``speedup``) so
+    run.py's cascade checker gates this section unchanged.
+    """
+    from repro.core.lut_infer import packed_slots
+    from repro.kernels.lut_cascade import build_shift_mats, cascade_tables
+    from repro.kernels.ref import lut_cascade_blocked
+
+    rng = np.random.default_rng(0)
+    cfg, tables, statics = _jsc5l_chain_net(rng)
+    lookups = sum(cfg.layer_widths)  # per sample
+    pts = [jnp.asarray(p) for p in cascade_tables(cfg, tables)]
+    sms = [jnp.asarray(m) for m in build_shift_mats(cfg, statics)]
+
+    # Vendored baseline: kernels/ref.lut_cascade_packed_ref's chain
+    # walk, frozen at the blocked route's introduction.
+    p = packed_slots(cfg.beta)
+    slot_bits = p.bit_length() - 1
+    mask = (1 << cfg.beta) - 1
+
+    def _packed_ref_vendored(codes):
+        c = codes.astype(jnp.float32)
+        for sm, packed in zip(sms, pts):
+            addr = jnp.dot(c, sm.astype(jnp.float32)).astype(jnp.int32)
+            wsel = jax.lax.shift_right_logical(addr, slot_bits)
+            slot = addr & (p - 1)
+            o = packed.shape[0]
+            word = packed[jnp.arange(o)[None, :], wsel]
+            code = jax.lax.shift_right_logical(word, cfg.beta * slot) & mask
+            c = code.astype(jnp.float32)
+        return c.astype(jnp.int32)
+
+    baseline = jax.jit(_packed_ref_vendored)
+
+    def blocked_jit(bb):
+        return jax.jit(lambda c: lut_cascade_blocked(
+            c, sms, pts, cfg.beta, block_b=bb))
+
+    # Tile-size micro-sweep at the acceptance batch; the winner serves
+    # the whole batch sweep (and documents the cache-blocking choice).
+    b_tune = 4096
+    codes_t = jnp.asarray(
+        rng.integers(0, 2 ** cfg.layer_in_bits(0),
+                     (b_tune, cfg.in_features)), jnp.int32)
+    candidates = (128, 256, 512, 1024)
+    tile_sweep = []
+    for bb in candidates:
+        fn = blocked_jit(bb)
+        tile_sweep.append({
+            "block_b": bb,
+            "us": round(time_call(
+                lambda: fn(codes_t).block_until_ready()), 1)})
+    chosen = min(tile_sweep, key=lambda r: r["us"])["block_b"]
+    emit("kernel_cpu/blocked_tile_sweep", 0.0,
+         f"chosen_block_b={chosen};" + ";".join(
+             f"b{r['block_b']}_us={r['us']}" for r in tile_sweep))
+    blocked = blocked_jit(chosen)
+
+    sweep = []
+    batches = (1024, 4096) if fast else (256, 1024, 4096)
+    for b in batches:
+        codes = jnp.asarray(
+            rng.integers(0, 2 ** cfg.layer_in_bits(0),
+                         (b, cfg.in_features)), jnp.int32)
+        ref_out = np.asarray(baseline(codes))
+        assert (np.asarray(blocked(codes)) == ref_out).all()
+        us_ref = time_call(lambda: baseline(codes).block_until_ready())
+        us_blk = time_call(lambda: blocked(codes).block_until_ready())
+        row = {
+            "batch": b,
+            "packed_ref_us": round(us_ref, 1),
+            "blocked_us": round(us_blk, 1),
+            "packed_ref_lookups_per_s": b * lookups / us_ref * 1e6,
+            "fused_lookups_per_s": b * lookups / us_blk * 1e6,
+            "speedup": us_ref / us_blk,
+        }
+        sweep.append(row)
+        emit(f"kernel_cpu/cascade_cpu_b{b}", us_blk,
+             f"packed_ref_us={us_ref:.1f};speedup={row['speedup']:.2f}x;"
+             f"fused_lookups_per_s={row['fused_lookups_per_s']:.2e}")
+
+    return {
+        "config": cfg.name,
+        "fast_mode": fast,
+        "baseline": "lut_cascade_packed_ref (vendored at blocked-route "
+                    "introduction)",
+        "chosen_block_b": chosen,
+        "tile_sweep": tile_sweep,
+        "lookups_per_sample": lookups,
+        "sweep": sweep,
+    }
+
+
+def run(fast: bool = False, backend: Optional[str] = None) -> Optional[Dict]:
     rng = np.random.default_rng(0)
     B, NO, F, N, L, S = 1024, 256, 6, 16, 4, 2
     widths = [F] + [N] * (L - 1) + [1]
@@ -297,9 +428,10 @@ def run(fast: bool = False) -> Optional[Dict]:
 
     # Fused LUT-cascade serving fast path (the summary feeds
     # BENCH_kernels.json — the repo's kernel perf trajectory)
-    return _cascade_sweep(fast)
+    return _cascade_sweep(fast, backend=backend)
 
 
 if __name__ == "__main__":
     from benchmarks.common import write_bench_summary
-    write_bench_summary({"kernel": run(), "kernel_dag": run_dag()})
+    write_bench_summary({"kernel": run(), "kernel_dag": run_dag(),
+                         "kernel_cpu": run_cpu()})

@@ -19,6 +19,11 @@ fresh run):
   * "cascade_dag"  — LUT-graph single-launch DAG walk vs per-node
                      dispatch on the PolyLUT-Add adder-tree (speedup
                      metric gates the machine-relative ratio);
+  * "cascade_cpu"  — cache-blocked gather cascade (the
+                     ``fused_cpu_blocked`` route) vs a vendored copy of
+                     the packed shift-matmul path it replaced as the
+                     CPU serving default (speedup metric gates the
+                     machine-relative ratio per batch);
   * "train"        — scanned-trainer steps/s on the JSC-5L model;
   * "train_kernel" — fused fwd+bwd kernel-route step vs the jnp route
                      (speedup metric gates the machine-relative ratio);
@@ -91,6 +96,15 @@ def _check_cascade_dag(baseline: Dict, fresh: Dict, threshold: float,
     the PolyLUT-Add adder-tree geometry (same schema as "cascade")."""
     return _check_cascade(baseline, fresh, threshold, metric,
                           section="cascade_dag")
+
+
+def _check_cascade_cpu(baseline: Dict, fresh: Dict, threshold: float,
+                       metric: str) -> List[str]:
+    """Gate the cache-blocked CPU route vs its vendored packed-ref
+    baseline (same sweep schema as "cascade"; ``speedup`` mode gates
+    the blocked-vs-packed ratio, which is machine-relative)."""
+    return _check_cascade(baseline, fresh, threshold, metric,
+                          section="cascade_cpu")
 
 
 def _check_train(baseline: Dict, fresh: Dict, threshold: float,
@@ -227,7 +241,8 @@ def check_regression(baseline: Dict, fresh: Dict, threshold: float,
     pass).
     """
     checkers = {"cascade": _check_cascade,
-                "cascade_dag": _check_cascade_dag, "train": _check_train,
+                "cascade_dag": _check_cascade_dag,
+                "cascade_cpu": _check_cascade_cpu, "train": _check_train,
                 "train_kernel": _check_train_kernel,
                 "convert": _check_convert,
                 "serve_tenants": _check_serve_tenants,
@@ -265,6 +280,13 @@ def main() -> None:
                     choices=["throughput", "speedup"],
                     help="gate absolute throughputs, or the machine-"
                          "relative speedup ratios")
+    ap.add_argument("--backend", default=None,
+                    choices=["cpu", "gpu", "tpu"],
+                    help="force the cascade route the kernel suites use "
+                         "for their bit-exactness record (kernel routes "
+                         "run in interpret emulation where the "
+                         "accelerator is absent); default keeps the "
+                         "Mosaic-TPU kernel body")
     args = ap.parse_args()
 
     from benchmarks import (convert_bench, fig3_boundaries, fig5_ablation,
@@ -283,8 +305,11 @@ def main() -> None:
             n_train=3000 if args.fast else 6000,
             seeds=2 if args.fast else 3),
         "table3": lambda: table3_eval.run(fast=args.fast),
-        "kernel": lambda: kernel_bench.run(fast=args.fast),
-        "kernel_dag": lambda: kernel_bench.run_dag(fast=args.fast),
+        "kernel": lambda: kernel_bench.run(fast=args.fast,
+                                           backend=args.backend),
+        "kernel_dag": lambda: kernel_bench.run_dag(fast=args.fast,
+                                                   backend=args.backend),
+        "kernel_cpu": lambda: kernel_bench.run_cpu(fast=args.fast),
         "train": lambda: train_bench.run(fast=args.fast),
         "train_kernel": lambda: train_bench.run_kernel(fast=args.fast),
         "convert": lambda: convert_bench.run(fast=args.fast),

@@ -66,7 +66,47 @@ ROUTES = ("canonical", "neuron_leading", "kernel_infer", "kernel_train")
 PURPOSES = ("train", "eval", "convert")
 _KERNEL_ROUTES = ("kernel_infer", "kernel_train")
 
-CASCADE_ROUTES = ("fused_kernel", "fused_jnp", "layer_kernel", "layer_jnp")
+# Backends whose Pallas lowering compiles for real (TPU via Mosaic, GPU
+# via Triton/Mosaic-GPU); everywhere else kernels run in interpret mode.
+KERNEL_BACKENDS = ("tpu", "gpu")
+
+CASCADE_ROUTES = ("fused_kernel_tpu", "fused_kernel_gpu",
+                  "fused_cpu_blocked", "fused_jnp",
+                  "layer_kernel", "layer_jnp")
+_CASCADE_KERNEL_ROUTES = ("fused_kernel_tpu", "fused_kernel_gpu",
+                          "layer_kernel")
+
+# Per-route batch-tile defaults, applied when a plan is built with
+# block_b=None.  TPU: 8 sublanes per VMEM tile row (the historical
+# default).  GPU: warp-sized tiles (4 warps of 32 lanes) so one block's
+# codes fill a warpgroup.  CPU blocked: the measured L2 sweet spot on
+# the CI host for the gather cascade (see BENCH_kernels.json
+# cascade_cpu section; benchmarks/kernel_bench.run_cpu re-measures the
+# sweep).  fused_jnp is a single whole-batch dispatch — block_b only
+# feeds the engine's bucket divisor, keep the legacy value.
+DEFAULT_CASCADE_BLOCK_B = {
+    "fused_kernel_tpu": 8,
+    "fused_kernel_gpu": 128,
+    "fused_cpu_blocked": 512,
+    "fused_jnp": 8,
+    "layer_kernel": 8,
+    "layer_jnp": 8,
+}
+
+
+def detect_backend(backend: Optional[str] = None) -> str:
+    """THE backend probe: an explicit override wins, otherwise
+    ``jax.default_backend()``.  Every ``interpret=None`` auto-selection
+    and every planner default routes through here (kernels/ops.py used
+    to carry its own ``_on_tpu`` copy of this logic)."""
+    return backend or jax.default_backend()
+
+
+def kernel_compiled(backend: Optional[str] = None) -> bool:
+    """Whether Pallas kernels compile for real on ``backend`` (see
+    ``KERNEL_BACKENDS``) — the ``interpret=None`` auto-selection
+    predicate for the generic (non-TPU-specific) kernels."""
+    return detect_backend(backend) in KERNEL_BACKENDS
 
 
 @dataclass(frozen=True)
@@ -140,15 +180,16 @@ def plan_subnet_exec(cfg: NeuraLUTConfig, *, purpose: str,
         return SubnetExec(kind=cfg.kind, route="canonical",
                           degree=cfg.degree if cfg.kind == "poly" else 0)
     if route is None:
-        on_tpu = (backend or jax.default_backend()) == "tpu"
+        on_accel = kernel_compiled(backend)
         if purpose == "train":
-            # The fused fwd+bwd kernel wins where it compiles (TPU); in
-            # interpret mode the neuron-leading einsum stack is the
-            # faster differentiable route (see train_bench train_kernel
+            # The fused fwd+bwd kernel wins where it compiles (TPU via
+            # Mosaic, GPU via the generic Pallas lowering); in interpret
+            # mode the neuron-leading einsum stack is the faster
+            # differentiable route (see train_bench train_kernel
             # section for the measured gap on this host).
-            route = "kernel_train" if on_tpu else "neuron_leading"
+            route = "kernel_train" if on_accel else "neuron_leading"
         elif purpose == "convert":
-            route = "kernel_infer" if on_tpu else "canonical"
+            route = "kernel_infer" if on_accel else "canonical"
         else:  # eval: bit-exactness anchor, always the reference ops
             route = "canonical"
     return SubnetExec(kind=cfg.kind, route=route, skip=cfg.skip,
@@ -168,18 +209,49 @@ class CascadeExec:
     chain it degenerates to one arity-1 node per layer, and
     :attr:`is_chain` routes those through the exact legacy code paths.
 
-    Routes: ``fused_kernel`` (single Pallas launch over the whole DAG),
-    ``fused_jnp`` (its bit-packed jnp twin), ``layer_kernel`` /
-    ``layer_jnp`` (per-node dispatch; chains only — the per-layer
-    serving path predates the DAG and is kept for A/B benchmarking).
+    Fused routes — one dispatch for the whole DAG, per backend:
+
+      * ``fused_kernel_tpu``  — the Mosaic-TPU Pallas kernel
+                                (``kernels/lut_cascade``); interpret
+                                emulation off-TPU.
+      * ``fused_kernel_gpu``  — the Mosaic-GPU lowering
+                                (``kernels/lut_cascade_gpu``: warp-sized
+                                batch tiles, packed tables staged in
+                                SMEM); interpret emulation off-GPU.
+      * ``fused_cpu_blocked`` — the cache-blocked gather cascade
+                                (``kernels/ref.lut_cascade_blocked``):
+                                batch tiles sized to L1/L2, each node's
+                                packed table hot across the tile.  Needs
+                                *concrete* shift matrices (they are
+                                decomposed back into gathers at trace
+                                time), so it only plans where the
+                                operands are closed-over constants.
+      * ``fused_jnp``         — the dense shift-matmul jnp twin
+                                (``ref.lut_cascade_packed_ref``); runs
+                                anywhere, including under shard_map.
+
+    Per-layer routes (``layer_kernel`` / ``layer_jnp``) dispatch one
+    lookup per node; chains only — the per-layer serving path predates
+    the DAG and is kept for A/B benchmarking.
+
+    The legacy route spelling ``"fused_kernel"`` is accepted and
+    normalized to the current backend's kernel flavor; ``block_b=None``
+    resolves to the route's default tile (``DEFAULT_CASCADE_BLOCK_B``).
+    All fused routes are bit-exact vs ``lut_infer.lut_forward`` /
+    ``graph_lut_forward`` (tests/test_backend_matrix.py).
     """
     route: str
     beta: int
     schedule: Tuple[Tuple[Tuple[int, ...], int, int, int, int], ...]
-    block_b: int = 8
+    block_b: Optional[int] = None  # None = route default
     interpret: Optional[bool] = None  # kernel routes: None = auto
 
     def __post_init__(self) -> None:
+        if self.route == "fused_kernel":  # legacy spelling, pre-matrix
+            object.__setattr__(
+                self, "route",
+                "fused_kernel_gpu" if detect_backend() == "gpu"
+                else "fused_kernel_tpu")
         if self.route not in CASCADE_ROUTES:
             raise ValueError(f"unknown cascade route {self.route!r}; "
                              f"one of {CASCADE_ROUTES}")
@@ -188,6 +260,9 @@ class CascadeExec:
                 f"route {self.route!r} walks one buffer per layer and "
                 f"only supports chain topologies; use a fused route for "
                 f"LUT DAGs")
+        if self.block_b is None:
+            object.__setattr__(self, "block_b",
+                               DEFAULT_CASCADE_BLOCK_B[self.route])
 
     @property
     def fused(self) -> bool:
@@ -195,7 +270,7 @@ class CascadeExec:
 
     @property
     def use_kernel(self) -> bool:
-        return self.route.endswith("kernel")
+        return self.route in _CASCADE_KERNEL_ROUTES
 
     @property
     def is_chain(self) -> bool:
@@ -213,11 +288,22 @@ class CascadeExec:
             raise ValueError(f"CascadeExec.apply only runs fused routes; "
                              f"route {self.route!r} is dispatched by the "
                              f"serve engine's per-layer builder")
-        if self.use_kernel:
+        if self.route == "fused_kernel_tpu":
             from repro.kernels.lut_cascade import lut_cascade
             return lut_cascade(codes, list(shift_mats), list(packed_tables),
                                self.schedule, block_b=self.block_b,
                                interpret=self.interpret)
+        if self.route == "fused_kernel_gpu":
+            from repro.kernels.lut_cascade_gpu import lut_cascade_gpu
+            return lut_cascade_gpu(
+                codes, list(shift_mats), list(packed_tables),
+                self.schedule, block_b=self.block_b,
+                interpret=self.interpret)
+        if self.route == "fused_cpu_blocked":
+            from repro.kernels.ref import lut_cascade_blocked
+            return lut_cascade_blocked(
+                codes, list(shift_mats), list(packed_tables), self.beta,
+                schedule=self.schedule, block_b=self.block_b)
         from repro.kernels.ref import lut_cascade_packed_ref
         return lut_cascade_packed_ref(
             codes, list(shift_mats), list(packed_tables), self.beta,
@@ -228,15 +314,23 @@ def plan_cascade_exec(cfg, *, route: Optional[str] = None,
                       fused: bool = True,
                       use_kernel: Optional[bool] = None,
                       backend: Optional[str] = None,
-                      block_b: int = 8,
+                      block_b: Optional[int] = None,
                       interpret: Optional[bool] = None) -> CascadeExec:
     """Build the cascade plan for ``cfg`` (chain or LUT-graph).
 
-    ``route`` wins when given; otherwise it is assembled from the legacy
-    ``fused`` / ``use_kernel`` pair (``use_kernel`` defaults to kernel
-    on TPU, jnp twin elsewhere) so existing call sites translate 1:1.
-    Per-layer routes on a non-chain graph raise ``UnsupportedTopology``
-    at plan time, not deep inside a jit trace.
+    ``route`` is the forced-route override and wins when given (tests
+    and benches use it to pin a backend); otherwise the route comes
+    from the backend matrix: fused on TPU -> ``fused_kernel_tpu``, on
+    GPU -> ``fused_kernel_gpu``, anywhere else -> ``fused_cpu_blocked``
+    (the cache-blocked gather cascade — the serving default off-
+    accelerator).  The legacy ``fused`` / ``use_kernel`` pair still
+    translates 1:1: an explicit ``use_kernel=False`` pins the dense
+    ``fused_jnp`` twin (the only fused route that runs on traced
+    operands, e.g. under shard_map), an explicit ``use_kernel=True``
+    picks the backend's kernel flavor.  ``block_b=None`` resolves to
+    the route's default tile.  Per-layer routes on a non-chain graph
+    raise ``UnsupportedTopology`` at plan time, not deep inside a jit
+    trace.
     """
     from repro.kernels.lut_cascade import (as_schedule, cascade_meta,
                                            graph_cascade_meta)
@@ -245,9 +339,18 @@ def plan_cascade_exec(cfg, *, route: Optional[str] = None,
     else:
         schedule = as_schedule(cascade_meta(cfg))
     if route is None:
-        if use_kernel is None:
-            use_kernel = (backend or jax.default_backend()) == "tpu"
-        route = (("fused_" if fused else "layer_")
-                 + ("kernel" if use_kernel else "jnp"))
+        be = detect_backend(backend)
+        if not fused:
+            kern = (be == "tpu") if use_kernel is None else use_kernel
+            route = "layer_kernel" if kern else "layer_jnp"
+        elif use_kernel is None:
+            route = {"tpu": "fused_kernel_tpu",
+                     "gpu": "fused_kernel_gpu"}.get(be,
+                                                    "fused_cpu_blocked")
+        elif use_kernel:
+            route = ("fused_kernel_gpu" if be == "gpu"
+                     else "fused_kernel_tpu")
+        else:
+            route = "fused_jnp"
     return CascadeExec(route=route, beta=cfg.beta, schedule=schedule,
                        block_b=block_b, interpret=interpret)

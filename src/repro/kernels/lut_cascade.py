@@ -276,7 +276,8 @@ def lut_cascade(
             f"schedule consumes {n_sm} shift mats / {n_pt} packed tables, "
             f"got {len(shift_mats)} / {len(packed_tables)}")
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        from repro.core.exec_plan import detect_backend
+        interpret = detect_backend() != "tpu"
     b = codes.shape[0]
     block_b = min(block_b, b)
     pad_b = (-b) % block_b

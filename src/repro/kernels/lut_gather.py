@@ -51,12 +51,13 @@ def lut_lookup(
 ) -> jax.Array:
     """Returns (B, O) int32 == tables[o, addr[b, o]].
 
-    ``interpret=None`` auto-selects the backend: compiled on TPU,
+    ``interpret=None`` auto-selects the backend: compiled on TPU/GPU,
     interpreter elsewhere.  Non-divisible B/O are padded internally and
     sliced back out (padded lanes read address 0 of a zero table row).
     """
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        from repro.core.exec_plan import kernel_compiled
+        interpret = not kernel_compiled()
     o, t = tables.shape
     b = addr.shape[0]
     nbits = int(t).bit_length() - 1

@@ -51,12 +51,13 @@ class GradMeta(NamedTuple):
     skip: int
     block_b: int
     block_o: int
-    interpret: Optional[bool]  # None -> compiled on TPU, interpreter off
+    interpret: Optional[bool]  # None -> compiled on TPU/GPU, else interp
 
 
 def _interp(meta: GradMeta) -> bool:
     if meta.interpret is None:
-        return jax.default_backend() != "tpu"
+        from repro.core.exec_plan import kernel_compiled
+        return not kernel_compiled()
     return meta.interpret
 
 

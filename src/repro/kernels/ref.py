@@ -1,10 +1,12 @@
-"""Pure-jnp oracles for the Pallas kernels (the correctness reference)."""
+"""Pure-jnp oracles for the Pallas kernels (the correctness reference),
+plus the cache-blocked CPU serving cascade (``lut_cascade_blocked``)."""
 from __future__ import annotations
 
 from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def grouped_subnet_ref(xg: jax.Array,
@@ -135,6 +137,173 @@ def lut_cascade_packed_ref(codes: jax.Array,
         code = jax.lax.shift_right_logical(word, beta_out * slot) & mask
         c = code.astype(jnp.float32)
     return c.astype(jnp.int32)
+
+
+def _gather_decompose(pool_mat: np.ndarray) -> List[Tuple[int, jax.Array]]:
+    """Invert one branch's shift-matrix scatter back into per-slot row
+    gathers: ``(shift, rows)`` pairs with ``pool_mat[rows[o], o]``
+    carrying the bit ``2^shift`` for every output column ``o``.
+
+    The scatter (``lut_cascade.build_shift_mats``) places
+    ``2^{beta*(F-1-j)}`` at ``(conn[o, j], o)`` — distinct powers of
+    two per fan-in slot, so column sums never carry (even when ``conn``
+    repeats a row: the duplicate's slots land on the same entry as
+    distinct bits).  That makes the inversion exact: the column sum's
+    set bits *are* the slot shifts, and per (column, shift) exactly one
+    row holds the bit.  Anything else is not a cascade shift matrix and
+    raises.
+    """
+    m = np.asarray(pool_mat)
+    mi = m.astype(np.int64)
+    if (mi < 0).any() or not (mi == m).all():
+        raise ValueError("shift matrix entries must be non-negative "
+                         "integers (powers-of-two sums)")
+    col = mi.sum(axis=0)
+    if not (col == col[0]).all():
+        raise ValueError("shift matrix column sums differ; not a "
+                         "fan-in scatter")
+    gathers: List[Tuple[int, jax.Array]] = []
+    recon = np.zeros_like(mi)
+    total = int(col[0])
+    for s in range(max(total.bit_length(), 1)):
+        if not (total >> s) & 1:
+            continue
+        bits = (mi >> s) & 1
+        if not (bits.sum(axis=0) == 1).all():
+            raise ValueError(f"shift 2^{s} set in != 1 row of some "
+                             f"column; not a fan-in scatter")
+        rows = bits.argmax(axis=0)
+        recon[rows, np.arange(mi.shape[1])] += 1 << s
+        gathers.append((s, jnp.asarray(rows.astype(np.int32))))
+    if not (recon == mi).all():
+        raise ValueError("shift matrix is not an exact sum of one "
+                         "power-of-two per (column, slot)")
+    return gathers
+
+
+def _blocked_plan(shift_mats: List, schedule) -> Tuple[List, object]:
+    """Trace-time plan for ``lut_cascade_blocked``: per node a list of
+    branches, each the decomposed per-slot gathers; plus the narrowest
+    safe carrier dtype (int16 when every address and every branch-sum
+    output fits 15 bits, else int32 — jsc-5l needs 14, polylut-add-5l
+    exactly 15)."""
+    plans: List = []
+    sm_i = 0
+    max_bits = 0
+    for srcs, arity, word_bits, slot_bits, beta in schedule:
+        max_bits = max(max_bits, word_bits + slot_bits,
+                       int(arity * ((1 << beta) - 1)).bit_length())
+        branches = []
+        for _a in range(arity):
+            mats = [np.asarray(shift_mats[sm_i + k])
+                    for k in range(len(srcs))]
+            sm_i += len(srcs)
+            # Per-src mats are the vertical split of the branch's pool
+            # scatter (build_graph_shift_mats); stack them back so row
+            # indices address the concatenated neuron-major pool.
+            pool_m = mats[0] if len(mats) == 1 \
+                else np.concatenate(mats, axis=0)
+            branches.append(_gather_decompose(pool_m))
+        plans.append(branches)
+    carrier = jnp.int16 if max_bits <= 15 else jnp.int32
+    return plans, carrier
+
+
+def lut_cascade_blocked(codes: jax.Array,
+                        shift_mats: List[jax.Array],
+                        packed_tables: List[jax.Array],
+                        beta_out: int,
+                        schedule=None,
+                        block_b: int = 512) -> jax.Array:
+    """Cache-blocked batched-gather cascade: the compiled CPU serving
+    path (route ``fused_cpu_blocked``), bit-exact vs
+    ``lut_cascade_packed_ref`` and the ``lut_forward`` /
+    ``graph_lut_forward`` oracles.
+
+    ``lut_cascade_packed_ref``'s dense shift-matmul is the XLA:CPU
+    bottleneck: at F=3 fan-in over W=128 neurons the scatter matrix is
+    ~98% zeros, so the GEMM does ~40x the useful work (measured ~3x the
+    per-layer wall time of the equivalent gathers on the CI host).
+    This path decomposes each shift matrix back into its F per-slot row
+    gathers at trace time (:func:`_gather_decompose` — exact, since the
+    scatter sums distinct powers of two) and runs the whole cascade
+    **neuron-major** in L2-sized batch tiles:
+
+      * codes ride as (W, Bt) tiles in the narrowest safe integer dtype
+        (int16 for every paper geometry), so a full tile of every
+        buffer stays cache-resident across the node walk;
+      * per fan-in slot, one contiguous row gather
+        (``take(h, conn[:, j], axis=0)``) shifted into the address
+        accumulator — no (B, O, F) gathered intermediate, no GEMM;
+      * the packed-word gather ``packed[o, wsel]`` is row-contiguous
+        (each output neuron reads its own table row), and each node's
+        packed table stays hot across the whole tile;
+      * DAG nodes concatenate source buffers as rows and sum branch
+        codes, mirroring the kernel walk.
+
+    Requires *concrete* shift matrices (the decomposition reads their
+    values): closed-over serving operands qualify, shard_map'd traced
+    operands do not — those keep the ``fused_jnp`` route.  ``schedule``
+    as in ``lut_cascade_packed_ref``; ``None`` derives the degenerate
+    chain schedule from the packed-table shapes.
+    """
+    from repro.core.lut_infer import packed_slots
+    if schedule is None:
+        p = packed_slots(beta_out)
+        sb = p.bit_length() - 1
+        sched = tuple(
+            ((i,), 1, int(pt.shape[1]).bit_length() - 1, sb, beta_out)
+            for i, pt in enumerate(packed_tables))
+    else:
+        from repro.kernels.lut_cascade import as_schedule
+        sched = as_schedule(schedule)
+    try:
+        plans, carrier = _blocked_plan(shift_mats, sched)
+    except jax.errors.TracerArrayConversionError as e:
+        raise ValueError(
+            "lut_cascade_blocked inverts shift matrices into gathers at "
+            "trace time and needs them concrete (closed-over "
+            "constants); got traced operands — route fused_jnp instead"
+        ) from e
+
+    pts = [jnp.asarray(pt).astype(jnp.int32) for pt in packed_tables]
+    b = codes.shape[0]
+    h_all = codes.T.astype(carrier)                      # (W_0, B)
+
+    def tile(h0: jax.Array) -> jax.Array:
+        bufs = [h0]
+        pt_i = 0
+        for (srcs, arity, _wb, slot_bits, beta), branches \
+                in zip(sched, plans):
+            mask = (1 << beta) - 1
+            pool = (bufs[srcs[0]] if len(srcs) == 1
+                    else jnp.concatenate([bufs[s] for s in srcs], axis=0))
+            node_code = None
+            for gathers in branches:
+                addr = None
+                for s, rows in gathers:
+                    g = jnp.take(pool, rows, axis=0)     # (O, Bt)
+                    g = (g << s) if s else g
+                    addr = g if addr is None else addr + g
+                packed = pts[pt_i]
+                pt_i += 1
+                wsel = addr >> slot_bits                 # non-negative
+                slot = (addr & ((1 << slot_bits) - 1)).astype(jnp.int32)
+                o = packed.shape[0]
+                word = packed[jnp.arange(o)[:, None], wsel]
+                code = (word >> (beta * slot)) & mask    # int32 (O, Bt)
+                node_code = code if node_code is None else node_code + code
+            bufs.append(node_code.astype(carrier))
+        return bufs[-1].astype(jnp.int32)
+
+    bb = max(1, min(int(block_b), b))
+    outs = []
+    start = 0
+    while start < b:                     # unrolled: B is jit-static
+        outs.append(tile(h_all[:, start:start + bb]))
+        start += bb
+    out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)
+    return out.T
 
 
 def _packed_dag_walk(codes: jax.Array, shift_mats: List[jax.Array],

@@ -61,7 +61,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import lut_infer as LI
-from repro.core.exec_plan import CascadeExec, plan_cascade_exec
+from repro.core.exec_plan import (CascadeExec, detect_backend,
+                                  plan_cascade_exec)
 from repro.runtime.chaos import ChaosHarness
 from repro.runtime.fault import ReplicaHealthTracker
 from repro.serve.metrics import ServeMetrics
@@ -117,8 +118,10 @@ def _divisor_block(n: int, cap: int) -> int:
     return min(n & -n, 1 << (cap.bit_length() - 1))
 
 
-def make_forward_fn(bundle: ServeBundle, *, use_kernel: bool = False,
-                    fused: bool = True, block_b: int = 8, block_o: int = 32,
+def make_forward_fn(bundle: ServeBundle, *,
+                    use_kernel: Optional[bool] = None,
+                    fused: bool = True,
+                    block_b: Optional[int] = None, block_o: int = 32,
                     device=None,
                     plan: Optional[CascadeExec] = None
                     ) -> Callable[[jax.Array], jax.Array]:
@@ -132,17 +135,19 @@ def make_forward_fn(bundle: ServeBundle, *, use_kernel: bool = False,
 
     ``plan`` (a ``core.exec_plan.CascadeExec``) names the route
     explicitly; the ``use_kernel``/``fused``/``block_b`` keywords are
-    the legacy spelling and are folded into an equivalent plan.  The
-    fused routes run the whole DAG schedule in one dispatch — the
-    Pallas ``lut_cascade`` kernel (``fused_kernel``: one launch,
-    bit-packed tables resident in VMEM, zero inter-node HBM traffic) or
-    the single-jit bit-packed jnp cascade (``fused_jnp``: packed gather
-    working set ~8x smaller, cache-resident).  The per-layer routes
-    walk one buffer per layer and therefore raise
+    the legacy spelling and are folded into an equivalent plan
+    (``use_kernel=None`` picks the backend default: the Pallas kernel
+    flavor on TPU/GPU, the cache-blocked gather cascade
+    ``fused_cpu_blocked`` elsewhere — the shift matrices are closed-over
+    constants here, so the blocked route's trace-time gather
+    decomposition applies; ``block_b=None`` takes the route's default
+    tile).  The fused routes run the whole DAG schedule in one dispatch;
+    the per-layer routes walk one buffer per layer and therefore raise
     ``UnsupportedTopology`` here — at build time, not inside a trace —
     for non-chain LUT graphs.  All paths are bit-exact vs
     ``lut_infer.lut_forward`` / ``graph_lut_forward``
-    (tests/test_lut_cascade.py, tests/test_lut_graph.py).
+    (tests/test_lut_cascade.py, tests/test_lut_graph.py,
+    tests/test_backend_matrix.py).
     """
     cfg = bundle.cfg
     if plan is None:
@@ -530,7 +535,7 @@ class LUTServeEngine:
                                      use_kernel=use_kernel)
         self.plan = plan
         kern = plan.use_kernel if plan is not None else (
-            (jax.default_backend() == "tpu") if use_kernel is None
+            (detect_backend() == "tpu") if use_kernel is None
             else use_kernel)
         self.use_kernel = kern
         self.fused = plan.fused if plan is not None else fused
@@ -580,11 +585,14 @@ class LUTServeEngine:
         self._submit_lock = threading.Lock()
 
     def _replica_forward(self, device) -> Callable:
-        """Kernel-routed plans get the one-shot degradable wrapper (a
-        failing fused kernel downgrades that replica to the bit-exact
-        jnp twin instead of failing its batches); jnp plans have no
-        faster route to degrade from and use the plain forward."""
-        if self.plan is not None and self.plan.route == "fused_kernel":
+        """Every fused plan with a faster-but-fallible route (the
+        Pallas kernel flavors and the blocked CPU cascade) gets the
+        one-shot degradable wrapper — a failing route downgrades that
+        replica to the bit-exact ``fused_jnp`` twin instead of failing
+        its batches.  ``fused_jnp`` itself has no faster route to
+        degrade from and uses the plain forward."""
+        if self.plan is not None and self.plan.fused \
+                and self.plan.route != "fused_jnp":
             return make_degradable_forward_fn(
                 self.bundle, plan=self.plan, device=device,
                 metrics=self.metrics, chaos=self.chaos)

@@ -190,12 +190,21 @@ def replicated_cascade_fn(mesh: Mesh, meta: tuple, beta: int, *,
     ``codes`` is (B, W_0) with B divisible by the mesh size; tables and
     shift matrices are replicated per device and each device runs the
     whole fused cascade on its batch shard — no collectives at all.
+
+    The plan is built OUTSIDE the shard_map body (the body sees traced
+    operands, and only the kernel / ``fused_jnp`` routes run on those —
+    the blocked CPU route needs concrete shift matrices and is never
+    planned here).
     """
     axis = mesh.axis_names[0]
+    from repro.core.exec_plan import CascadeExec
+    from repro.kernels.lut_cascade import as_schedule
+    plan = CascadeExec(
+        route="fused_kernel" if use_kernel else "fused_jnp",
+        beta=beta, schedule=as_schedule(meta), block_b=block_b)
 
     def body(codes, sms, pts):
-        return cascade_apply(codes, sms, pts, meta=meta, beta=beta,
-                             use_kernel=use_kernel, block_b=block_b)
+        return cascade_apply(codes, sms, pts, plan=plan)
 
     # check_rep=False: pallas_call has no shard_map replication rule
     # (harmless here — the body is purely per-shard, no collectives).
@@ -284,7 +293,8 @@ def make_sharded_forward_fn(bundle, *, mesh: Optional[Mesh] = None,
             "(per-layer all_gather; the fused Pallas kernel has no "
             "inter-layer boundary) — use mode='replicated' or let "
             "use_kernel default")
-    kern = (jax.default_backend() == "tpu") if use_kernel is None \
+    from repro.core.exec_plan import detect_backend
+    kern = (detect_backend() == "tpu") if use_kernel is None \
         else use_kernel
     cfg = bundle.cfg
     params = bundle.serve_params()

@@ -64,6 +64,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.exec_plan import plan_cascade_exec
 from repro.runtime.chaos import ChaosHarness
 from repro.runtime.fault import ReplicaHealthTracker
 from repro.serve.engine import (DEFAULT_BUCKETS, NoHealthyReplicas,
@@ -799,9 +800,16 @@ class MultiTenantEngine:
         error = ""
         if shadow_samples > 0:
             states.append("shadow")
+            # Shadow comparisons pin the dense fused_jnp route: the
+            # bit-exactness anchor every other backend route is gated
+            # against, so a shadow mismatch always means the candidate
+            # bundle differs, never the route.
             shadow = _Shadow(
                 state.lane,
-                make_forward_fn(candidate, use_kernel=False),
+                make_forward_fn(
+                    candidate,
+                    plan=plan_cascade_exec(candidate.cfg,
+                                           route="fused_jnp")),
                 shadow_samples, max_shadow_failures)
             group.install_shadow(shadow)
             try:

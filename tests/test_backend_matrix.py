@@ -1,0 +1,287 @@
+"""Cross-backend agreement for the fused LUT cascade.
+
+Every route in the backend matrix (``fused_kernel_tpu`` /
+``fused_kernel_gpu`` / ``fused_cpu_blocked`` / ``fused_jnp``) must
+produce bit-identical output codes — equal to the
+``lut_infer.lut_forward`` / ``graph_lut_forward`` oracles — on every
+paper chain geometry and on the PolyLUT-Add DAG schedules.  Kernel
+routes run compiled only where their accelerator is present; elsewhere
+the same body runs through the Pallas interpreter (the emulation this
+suite exercises on CPU CI), and compiled-only cases skip cleanly.
+"""
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lut_infer as LI
+from repro.core.exec_plan import (CASCADE_ROUTES, DEFAULT_CASCADE_BLOCK_B,
+                                  CascadeExec, detect_backend,
+                                  kernel_compiled, plan_cascade_exec)
+from repro.kernels.lut_cascade import (build_graph_shift_mats,
+                                       build_shift_mats, cascade_tables,
+                                       graph_cascade_tables)
+from repro.kernels.lut_cascade_gpu import gpu_kernel_available
+from repro.kernels.ops import cascade_apply
+
+FUSED_ROUTES = ("fused_jnp", "fused_cpu_blocked", "fused_kernel_tpu",
+                "fused_kernel_gpu")
+
+CHAIN_GEOMETRIES = [
+    ("neuralut_hdr_5l", "full"), ("neuralut_hdr_5l", "reduced"),
+    ("neuralut_jsc_2l", "full"), ("neuralut_jsc_2l", "reduced"),
+    ("neuralut_jsc_5l", "full"), ("neuralut_jsc_5l", "reduced"),
+]
+DAG_GEOMETRIES = [
+    ("polylut_add_jsc_2l", "full"), ("polylut_add_jsc_2l", "reduced"),
+    ("polylut_add_jsc_5l", "full"), ("polylut_add_jsc_5l", "reduced"),
+]
+
+
+def _cfg(config_mod, variant):
+    return getattr(importlib.import_module(f"repro.configs.{config_mod}"),
+                   variant)()
+
+
+def _chain_net(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    statics, tables = [], []
+    w_prev = cfg.in_features
+    for i, o in enumerate(cfg.layer_widths):
+        f = cfg.layer_fan_in(i)
+        statics.append({"conn": rng.integers(0, w_prev, (o, f))})
+        tables.append(rng.integers(0, 2 ** cfg.beta,
+                                   (o, cfg.table_size(i))).astype(np.uint16))
+        w_prev = o
+    return tables, statics
+
+
+def _graph_net(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    statics, tables = [], []
+    for i, nd in enumerate(cfg.nodes):
+        pool_w = cfg.node_in_width(i)
+        statics.append({"conns": [
+            rng.integers(0, pool_w, (nd.width, nd.fan_in))
+            for _ in range(nd.arity)]})
+        tables.append([
+            rng.integers(0, 2 ** cfg.beta,
+                         (nd.width, cfg.table_size(i))).astype(np.uint16)
+            for _ in range(nd.arity)])
+    return tables, statics
+
+
+def _codes(cfg, b, seed=5):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 2 ** cfg.layer_in_bits(0),
+                                    (b, cfg.in_features)), jnp.int32)
+
+
+def _route_out(cfg, route, codes, sms, pts):
+    """Forced-route cascade output; None when the route cannot run on
+    this host (compiled kernel without its accelerator is exercised in
+    interpret emulation instead, so nothing actually skips here —
+    helper kept for symmetry with the compiled-only test below)."""
+    plan = plan_cascade_exec(cfg, route=route)
+    return np.asarray(cascade_apply(codes, sms, pts, plan=plan))
+
+
+@pytest.mark.parametrize("config_mod,variant", CHAIN_GEOMETRIES)
+def test_chain_routes_bit_identical(config_mod, variant):
+    cfg = _cfg(config_mod, variant)
+    tables, statics = _chain_net(cfg, seed=len(cfg.name))
+    codes = _codes(cfg, 33)
+    oracle = np.asarray(LI.lut_forward(cfg, tables, statics, codes))
+    sms = [jnp.asarray(m) for m in build_shift_mats(cfg, statics)]
+    pts = [jnp.asarray(t) for t in cascade_tables(cfg, tables)]
+    for route in FUSED_ROUTES:
+        got = _route_out(cfg, route, codes, sms, pts)
+        assert (got == oracle).all(), route
+
+
+@pytest.mark.parametrize("config_mod,variant", DAG_GEOMETRIES)
+def test_dag_routes_bit_identical(config_mod, variant):
+    cfg = _cfg(config_mod, variant)
+    tables, statics = _graph_net(cfg, seed=len(cfg.name))
+    codes = _codes(cfg, 21)
+    oracle = np.asarray(LI.graph_lut_forward(cfg, tables, statics, codes))
+    sms = [jnp.asarray(m) for m in build_graph_shift_mats(cfg, statics)]
+    pts = [jnp.asarray(t) for t in graph_cascade_tables(cfg, tables)]
+    for route in FUSED_ROUTES:
+        got = _route_out(cfg, route, codes, sms, pts)
+        assert (got == oracle).all(), route
+
+
+def test_routes_agree_across_batch_tilings():
+    """Forced routes stay bit-identical when the batch does not divide
+    the tile (padding on the kernel routes, the ragged last tile on the
+    blocked route)."""
+    cfg = _cfg("neuralut_jsc_5l", "reduced")
+    tables, statics = _chain_net(cfg, seed=3)
+    sms = [jnp.asarray(m) for m in build_shift_mats(cfg, statics)]
+    pts = [jnp.asarray(t) for t in cascade_tables(cfg, tables)]
+    for b in (1, 7, 129):
+        codes = _codes(cfg, b, seed=b)
+        outs = {r: _route_out(cfg, r, codes, sms, pts)
+                for r in FUSED_ROUTES}
+        ref = outs["fused_jnp"]
+        for route, got in outs.items():
+            assert (got == ref).all(), (route, b)
+
+
+def test_blocked_route_block_size_invariant():
+    """The blocked route's tile size must never change the bits."""
+    cfg = _cfg("neuralut_jsc_5l", "reduced")
+    tables, statics = _chain_net(cfg, seed=4)
+    sms = [jnp.asarray(m) for m in build_shift_mats(cfg, statics)]
+    pts = [jnp.asarray(t) for t in cascade_tables(cfg, tables)]
+    codes = _codes(cfg, 100, seed=9)
+    outs = [np.asarray(cascade_apply(
+        codes, sms, pts,
+        plan=plan_cascade_exec(cfg, route="fused_cpu_blocked",
+                               block_b=bb))) for bb in (1, 32, 512)]
+    assert (outs[0] == outs[1]).all() and (outs[0] == outs[2]).all()
+
+
+def test_compiled_gpu_route_or_clean_skip():
+    """Runs the compiled (non-interpret) Mosaic-GPU lowering when a GPU
+    is present; skips cleanly on hosts without one."""
+    if not gpu_kernel_available():
+        pytest.skip("no GPU backend: compiled Mosaic-GPU path "
+                    "unavailable (interpret emulation is covered by the "
+                    "route-agreement tests above)")
+    cfg = _cfg("neuralut_jsc_5l", "reduced")
+    tables, statics = _chain_net(cfg, seed=5)
+    codes = _codes(cfg, 256)
+    oracle = np.asarray(LI.lut_forward(cfg, tables, statics, codes))
+    sms = [jnp.asarray(m) for m in build_shift_mats(cfg, statics)]
+    pts = [jnp.asarray(t) for t in cascade_tables(cfg, tables)]
+    plan = plan_cascade_exec(cfg, route="fused_kernel_gpu",
+                             interpret=False)
+    assert (np.asarray(cascade_apply(codes, sms, pts, plan=plan))
+            == oracle).all()
+
+
+def test_compiled_tpu_route_or_clean_skip():
+    if detect_backend() != "tpu":
+        pytest.skip("no TPU backend: compiled Mosaic-TPU path "
+                    "unavailable (interpret emulation is covered by the "
+                    "route-agreement tests above)")
+    cfg = _cfg("neuralut_jsc_5l", "reduced")
+    tables, statics = _chain_net(cfg, seed=6)
+    codes = _codes(cfg, 256)
+    oracle = np.asarray(LI.lut_forward(cfg, tables, statics, codes))
+    sms = [jnp.asarray(m) for m in build_shift_mats(cfg, statics)]
+    pts = [jnp.asarray(t) for t in cascade_tables(cfg, tables)]
+    plan = plan_cascade_exec(cfg, route="fused_kernel_tpu",
+                             interpret=False)
+    assert (np.asarray(cascade_apply(codes, sms, pts, plan=plan))
+            == oracle).all()
+
+
+# ---------------------------------------------------------------------------
+# planner defaults, forced-route override, per-route block sizes
+
+
+def test_backend_default_routes():
+    cfg = _cfg("neuralut_jsc_2l", "reduced")
+    assert plan_cascade_exec(cfg, backend="tpu").route == "fused_kernel_tpu"
+    assert plan_cascade_exec(cfg, backend="gpu").route == "fused_kernel_gpu"
+    assert plan_cascade_exec(cfg, backend="cpu").route == "fused_cpu_blocked"
+    # the legacy pair still translates 1:1
+    assert plan_cascade_exec(cfg, use_kernel=False).route == "fused_jnp"
+    assert plan_cascade_exec(
+        cfg, use_kernel=True, backend="gpu").route == "fused_kernel_gpu"
+    assert plan_cascade_exec(
+        cfg, use_kernel=True, backend="cpu").route == "fused_kernel_tpu"
+    assert plan_cascade_exec(
+        cfg, fused=False, backend="gpu").route == "layer_jnp"
+    assert plan_cascade_exec(
+        cfg, fused=False, backend="tpu").route == "layer_kernel"
+    # forced route wins over everything
+    assert plan_cascade_exec(
+        cfg, route="fused_jnp", backend="tpu").route == "fused_jnp"
+
+
+def test_per_route_block_b_defaults():
+    cfg = _cfg("neuralut_jsc_2l", "reduced")
+    for route in CASCADE_ROUTES:
+        plan = plan_cascade_exec(cfg, route=route)
+        assert plan.block_b == DEFAULT_CASCADE_BLOCK_B[route], route
+    # explicit block_b wins
+    assert plan_cascade_exec(cfg, route="fused_cpu_blocked",
+                             block_b=64).block_b == 64
+
+
+def test_legacy_fused_kernel_route_normalizes():
+    cfg = _cfg("neuralut_jsc_2l", "reduced")
+    plan = plan_cascade_exec(cfg, use_kernel=False)
+    legacy = CascadeExec(route="fused_kernel", beta=cfg.beta,
+                         schedule=plan.schedule)
+    want = ("fused_kernel_gpu" if detect_backend() == "gpu"
+            else "fused_kernel_tpu")
+    assert legacy.route == want and legacy.use_kernel
+    assert legacy.block_b == DEFAULT_CASCADE_BLOCK_B[want]
+
+
+def test_detect_backend_and_kernel_compiled():
+    assert detect_backend() == jax.default_backend()
+    assert detect_backend("tpu") == "tpu"  # explicit override wins
+    assert kernel_compiled("tpu") and kernel_compiled("gpu")
+    assert not kernel_compiled("cpu")
+
+
+def test_use_kernel_covers_all_kernel_flavors():
+    cfg = _cfg("neuralut_jsc_2l", "reduced")
+    flags = {r: plan_cascade_exec(cfg, route=r).use_kernel
+             for r in CASCADE_ROUTES if not r.startswith("layer")}
+    assert flags == {"fused_kernel_tpu": True, "fused_kernel_gpu": True,
+                     "fused_cpu_blocked": False, "fused_jnp": False}
+
+
+def test_blocked_route_refuses_traced_shift_mats():
+    """Under shard_map / donated-arg jits the shift matrices are traced
+    and the gather decomposition cannot read them; the route must fail
+    loudly at trace time, not silently mis-route."""
+    cfg = _cfg("neuralut_jsc_2l", "reduced")
+    tables, statics = _chain_net(cfg, seed=8)
+    sms = [jnp.asarray(m) for m in build_shift_mats(cfg, statics)]
+    pts = [jnp.asarray(t) for t in cascade_tables(cfg, tables)]
+    plan = plan_cascade_exec(cfg, route="fused_cpu_blocked")
+    codes = _codes(cfg, 8)
+    with pytest.raises(ValueError, match="concrete"):
+        jax.jit(lambda c, s: cascade_apply(c, s, pts, plan=plan))(
+            codes, sms)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the serve forward agrees across routes
+
+
+def test_serve_forward_identical_across_backend_routes():
+    from repro.core import model as M
+    from repro.core import truth_table as TT
+    from repro.serve import bundle_from_training, make_forward_fn
+
+    cfg = _cfg("neuralut_jsc_2l", "reduced")
+    statics = M.model_static(cfg)
+    params, state = M.model_init(cfg, jax.random.PRNGKey(0))
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (64, 16)),
+                    jnp.float32)
+    _, _, state = M.model_apply(cfg, params, state, statics, x, train=True)
+    tables = TT.convert(cfg, params, state, statics)
+    bundle = bundle_from_training(cfg, params, tables, statics)
+    xq = jnp.asarray(np.random.default_rng(1).normal(0, 1, (40, 16)),
+                     jnp.float32)
+    outs = {}
+    for route in FUSED_ROUTES:
+        fwd = make_forward_fn(
+            bundle, plan=plan_cascade_exec(cfg, route=route))
+        outs[route] = np.asarray(fwd(xq))
+    # the default (backend-auto) plan must agree too
+    outs["auto"] = np.asarray(make_forward_fn(bundle)(xq))
+    ref = outs["fused_jnp"]
+    for route, got in outs.items():
+        assert (got == ref).all(), route

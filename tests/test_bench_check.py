@@ -1,7 +1,8 @@
 """The CI perf-regression gate (benchmarks/run.py --check): the checker
 must pass on an honest fresh run and fail on a doctored baseline for
 every gated section — cascade throughput, the LUT-graph DAG cascade's
-single-launch-vs-per-node ratio, scanned-trainer steps/s, the fused
+single-launch-vs-per-node ratio, the cache-blocked CPU route's
+blocked-vs-packed ratio, scanned-trainer steps/s, the fused
 fwd+bwd kernel-vs-jnp training step, fused-converter entries/s, the
 multi-tenant serving consolidation ratio, and the mesh Pareto sweep
 engine's engine-vs-loop speedup — and must refuse to "pass" when it
@@ -32,6 +33,15 @@ def _payload():
                  "speedup": 5.0},
                 {"batch": 4096, "fused_lookups_per_s": 6.0e8,
                  "speedup": 4.1},
+            ],
+        },
+        "cascade_cpu": {
+            "chosen_block_b": 512,
+            "sweep": [
+                {"batch": 1024, "fused_lookups_per_s": 7.0e8,
+                 "speedup": 1.8},
+                {"batch": 4096, "fused_lookups_per_s": 8.0e8,
+                 "speedup": 2.0},
             ],
         },
         "train": {
@@ -95,6 +105,7 @@ def test_doctored_baseline_fails_each_section():
     for section, path in [
         ("cascade", lambda d: d["cascade"]["sweep"][1]),
         ("cascade_dag", lambda d: d["cascade_dag"]["sweep"][0]),
+        ("cascade_cpu", lambda d: d["cascade_cpu"]["sweep"][1]),
         ("train", lambda d: d["train"]),
         ("train_kernel", lambda d: d["train_kernel"]),
         ("convert",

@@ -325,9 +325,10 @@ def test_cascade_apply_legacy_shim_dispatches_identically():
     pts = [jnp.asarray(p) for p in cascade_tables(cfg, tables)]
     codes = _input_codes(cfg, 16)
     for use_kernel in (False, True):
-        legacy = np.asarray(cascade_apply(
-            codes, sms, pts, meta=cascade_meta(cfg), beta=cfg.beta,
-            use_kernel=use_kernel, block_b=8))
+        with pytest.deprecated_call():  # legacy trio warns since PR 10
+            legacy = np.asarray(cascade_apply(
+                codes, sms, pts, meta=cascade_meta(cfg), beta=cfg.beta,
+                use_kernel=use_kernel, block_b=8))
         plan = plan_cascade_exec(cfg, use_kernel=use_kernel, block_b=8)
         new = np.asarray(cascade_apply(codes, sms, pts, plan=plan))
         assert (legacy == new).all()
